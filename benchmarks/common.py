@@ -1,0 +1,46 @@
+"""Shared benchmark plumbing: measured per-stage client costs."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.progressive import ProgressiveModel, ReceiverState
+from repro.transmission.scheduler import StageCost
+
+
+def measure_stage_costs(prog: ProgressiveModel, infer_fn, n_warmup: int = 1,
+                        repeats: int = 3) -> list[StageCost]:
+    """Measure concat (eq. 4 OR), dequant (eq. 5), and inference wall
+    times per stage on this machine. infer_fn(params) -> array."""
+    costs = []
+    st = ReceiverState.init(prog)
+    for s in range(1, prog.n_stages + 1):
+        planes = prog.stage(s)
+
+        t0 = time.perf_counter()
+        st2 = st.receive(planes)
+        jax.block_until_ready([a for a in st2.acc])
+        t_concat = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        params = st2.materialize()
+        jax.block_until_ready(jax.tree.leaves(params))
+        t_dequant = time.perf_counter() - t0
+
+        ts = []
+        for r in range(n_warmup + repeats):
+            t0 = time.perf_counter()
+            out = infer_fn(params)
+            jax.block_until_ready(out)
+            if r >= n_warmup:
+                ts.append(time.perf_counter() - t0)
+        costs.append(StageCost(concat_s=t_concat, dequant_s=t_dequant,
+                               inference_s=sum(ts) / len(ts)))
+        st = st2
+    return costs
+
+
+def fmt_row(cols, widths):
+    return " | ".join(str(c).ljust(w) for c, w in zip(cols, widths))

@@ -1,0 +1,66 @@
+"""§Roofline table generator: reads artifacts/dryrun/*.json (written by
+repro.launch.dryrun) and renders the per-(arch x shape) roofline terms,
+dominant bottleneck, and useful-FLOPs ratio. Single-pod mesh only (the
+multi-pod runs are compile/sharding proofs)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirpath: str = "artifacts/dryrun") -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*__16x16.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                             if r["shape"] in SHAPE_ORDER else 99))
+    return rows
+
+
+def render(rows: list[dict]) -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | dominant | "
+           "useful ratio | fits/chip |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"skipped: {r['reason'][:40]}… | — | — |")
+            continue
+        if r["status"] != "ok" or "roofline" not in r:
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | |")
+            continue
+        rl = r["roofline"]
+        ma = r["memory_analysis"]
+        resident = (ma["argument_bytes"] + ma["temp_bytes"]
+                    + ma["output_bytes"] - ma["alias_bytes"]) / 2**30
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {max(rl['compute_s'], 0):.3e} | "
+            f"{max(rl['memory_s'], 0):.3e} | {max(rl['collective_s'], 0):.3e} | "
+            f"**{rl['dominant']}** | {rl['useful_ratio']:.3f} | "
+            f"{resident:.1f} GiB |"
+        )
+    return "\n".join(out)
+
+
+def main(quick: bool = False) -> None:
+    rows = load()
+    if not rows:
+        print("\n== Roofline: no dry-run artifacts yet "
+              "(run python -m repro.launch.dryrun --all) ==")
+        return
+    print("\n== Roofline (single-pod 16x16, v5e constants) ==")
+    print(render(rows))
+    ok = [r for r in rows if r.get("status") == "ok" and "roofline" in r]
+    if ok:
+        doms = {}
+        for r in ok:
+            doms[r["roofline"]["dominant"]] = doms.get(r["roofline"]["dominant"], 0) + 1
+        print(f"\n{len(ok)} combos analysed; dominant-term histogram: {doms}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Benchmark orchestrator: one module per paper table + the roofline
+report. ``python -m benchmarks.run [--quick]``."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced training steps / fewer archs")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: table1,table2,table3,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import table1_execution_time, table2_accuracy, table3_ttfi
+    from benchmarks import roofline
+
+    benches = {
+        "table1": table1_execution_time,
+        "table2": table2_accuracy,
+        "table3": table3_ttfi,
+        "roofline": roofline,
+    }
+    selected = (args.only.split(",") if args.only else list(benches))
+
+    os.makedirs("artifacts/bench", exist_ok=True)
+    failures = []
+    for name in selected:
+        mod = benches[name]
+        t0 = time.time()
+        print(f"\n########## {name} ##########")
+        try:
+            mod.main(quick=args.quick)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+        print(f"[{name}: {time.time() - t0:.1f}s]")
+    if failures:
+        raise SystemExit(f"benchmarks failed: {failures}")
+    print("\nall benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Beyond-paper policy demo: router-popularity-ordered expert planes.
+
+For MoE models, not all tensors are equally urgent: experts that the
+router uses most should reach the serving pod first. This example
+measures router popularity on a calibration batch, builds an
+ExpertPopularityPolicy, and shows that the *partial first stage* (cut
+mid-stage, e.g. the link died) of the popularity-ordered stream yields a
+better model than the default ordering at the same byte budget.
+
+    PYTHONPATH=src python examples/expert_priority_moe.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.policy import ExpertPopularityPolicy, UniformPolicy
+from repro.core.progressive import divide, ReceiverState
+from repro.models.model import build_model
+
+cfg = get_config("dbrx-132b").reduced()
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+# 0. skew the routers (a trained MoE has popular experts; random init
+# routes near-uniformly) so the demo shows the trained-model regime
+scale = jnp.asarray([1.5, 0.8, 0.1, 0.05])[: cfg.n_experts]
+def _skew(r):  # (R, d, E) stacked router weights: damp cold experts'
+    # router columns so the hot ones win top-k for most tokens
+    return r * scale[None, None, :]
+for slot, blk in params["decoder"]["cycles"].items():
+    if "moe" in blk:
+        blk["moe"]["router"] = _skew(blk["moe"]["router"])
+
+# 1. router popularity from a calibration batch
+batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0,
+                                      cfg.vocab).astype(jnp.int32)}
+x = model._embed(params, batch["tokens"])
+moe_p = params["decoder"]["cycles"][next(
+    s for s in params["decoder"]["cycles"] if "moe" in s)]["moe"]
+router_w = jax.tree.map(lambda a: a[0], moe_p)["router"]  # first cycle's router
+logits = x.astype(jnp.float32) @ router_w
+top = jax.lax.top_k(jax.nn.softmax(logits, -1), cfg.top_k)[1]
+counts = np.bincount(np.asarray(top).ravel(), minlength=cfg.n_experts)
+pop = {i: c / counts.sum() for i, c in enumerate(counts)}
+print("router popularity:", {k: round(v, 3) for k, v in pop.items()})
+
+# 2. two streams: default order (whole expert banks) vs popularity order
+#    (banks sliced per expert; hot experts' planes ship first, and each
+#    slice gets its own tighter (min, max) quantization range)
+#    both streams are expert-sliced and ship core tensors first; ONLY
+#    the within-expert order differs (uniform vs popularity)
+prog_default = divide(params, ExpertPopularityPolicy(popularity={},
+                                                     n_experts=cfg.n_experts))
+prog_pop = divide(params, ExpertPopularityPolicy(popularity=pop,
+                                                 n_experts=cfg.n_experts))
+print(f"tensors after expert slicing: {len(prog_pop.tensors)} "
+      f"(vs {len(divide(params, UniformPolicy()).tensors)} unsliced)")
+
+
+def eval_partial(prog, frac, upto_stage=3):
+    """Receive stages 1..upto-1 fully, then `frac` of stage `upto`
+    (the link cut mid-stage)."""
+    st = ReceiverState.init(prog)
+    for s in range(1, upto_stage):
+        st = st.receive(prog.stage(s))
+    planes = prog.stage(upto_stage)
+    st = st.receive(planes[: max(1, int(len(planes) * frac))])
+    approx = st.materialize()
+    mses = []
+    for seed in range(4):  # average over eval batches
+        eb = {"tokens": jax.random.randint(jax.random.PRNGKey(100 + seed),
+                                           (4, 64), 0, cfg.vocab).astype(jnp.int32)}
+        logits, _ = model.forward(approx, eb)
+        ref, _ = model.forward(params, eb)
+        mses.append(float(jnp.mean((logits - ref) ** 2)))
+    return sum(mses) / len(mses)
+
+
+print("\nMSE to fp32 logits; stages 1-2 landed, stage 3 cut mid-flight:")
+print(f"{'frac':>6s} {'default':>12s} {'popularity':>12s}")
+for frac in (0.3, 0.5, 0.7):
+    d = eval_partial(prog_default, frac)
+    p = eval_partial(prog_pop, frac)
+    print(f"{frac:6.1f} {d:12.4f} {p:12.4f}  "
+          f"{'<- popularity wins' if p < d else ''}")
+print("\n(the win shows where hot-expert slices displace cold ones at the "
+"cut; at cuts\nwhere either order delivers the same expert coverage — or at "
+"full stages —\nthe two streams are equivalent. Slicing also buys per-expert "
+"(min,max) ranges:\nsee tests/test_progressive.py::test_expert_sliced_roundtrip)")

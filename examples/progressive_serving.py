@@ -1,0 +1,75 @@
+"""Progressive cold-start serving: a pod begins decoding from the 2-bit
+planes and upgrades precision in place, mid-generation, as later planes
+"arrive" over a simulated link — KV cache and compiled step survive
+every upgrade (the paper's Fig. 4, pod-side).
+
+    PYTHONPATH=src python examples/progressive_serving.py \
+        [--arch mixtral-8x22b] [--bandwidth-mbps 2.5]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import wire
+from repro.core.progressive import divide
+from repro.models.model import build_model
+from repro.serving.engine import ProgressiveServer
+from repro.transmission.simulator import Link, simulate_transfer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x22b")
+    ap.add_argument("--bandwidth-mbps", type=float, default=2.5)
+    ap.add_argument("--decode-steps", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prog = divide(params)
+
+    stage_bytes = [len(wire.encode_stage(prog, s))
+                   for s in range(1, prog.n_stages + 1)]
+    hdr = len(wire.encode_header(prog))
+    link = Link(bandwidth_bytes_per_s=args.bandwidth_mbps * 1e6)
+    events = simulate_transfer(
+        [("hdr", hdr)] + [(f"s{i}", b) for i, b in enumerate(stage_bytes, 1)], link)
+    arrivals = [e.end_s for e in events[1:]]
+    print(f"{args.arch} (reduced): {(hdr + sum(stage_bytes)) / 1e6:.2f} MB; "
+          f"stage arrivals at {[round(a, 2) for a in arrivals]} s")
+
+    B, S = 2, 16
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                          cfg.vocab).astype(jnp.int32)}
+    if cfg.enc_layers:
+        batch["enc_input"] = jnp.zeros((B, S // cfg.enc_seq_divisor, cfg.d_model),
+                                       cfg.dtype)
+    if cfg.vision_tokens:
+        batch["vision_embeds"] = jnp.zeros((B, cfg.vision_tokens, cfg.d_vision),
+                                           cfg.dtype)
+
+    server = ProgressiveServer(model, prog, max_len=S + args.decode_steps)
+    server.receive_stage()
+    print(f"cold start at t={arrivals[0]:.2f}s with 2-bit weights; decoding...")
+    server.start(batch)
+
+    # model a decode budget: tokens at a fixed cadence from cold start
+    cadence = max((arrivals[-1] - arrivals[0]) / args.decode_steps, 1e-6)
+
+    def stage_arrival(i):
+        now = arrivals[0] + (i + 1) * cadence
+        return server.stage < prog.n_stages and now >= arrivals[server.stage]
+
+    res = server.decode(args.decode_steps, stage_arrival=stage_arrival)
+    print("decode-step : " + " ".join(f"{i:3d}" for i in range(args.decode_steps)))
+    print("bits/weight : " + " ".join(f"{2 * s:3d}" for s in res.stage_at_step))
+    print("tokens[0]   : " + " ".join(f"{int(t):3d}" for t in res.tokens[0]))
+    print(f"\n{len(res.upgrades)} in-place upgrades during generation; "
+          f"final precision {2 * server.stage} bits — no recompile, no KV loss")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Architecture registry. Every assigned architecture is a module with a
+CONFIG (exact published dims, source cited) and get_config()."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = (
+    "gemma3_27b",
+    "xlstm_125m",
+    "seamless_m4t_medium",
+    "llama32_vision_90b",
+    "starcoder2_15b",
+    "zamba2_7b",
+    "olmo_1b",
+    "minitron_4b",
+    "mixtral_8x22b",
+    "dbrx_132b",
+    "progressivenet_cnn",
+)
+
+_ALIASES = {
+    "gemma3-27b": "gemma3_27b",
+    "xlstm-125m": "xlstm_125m",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "llama-3.2-vision-90b": "llama32_vision_90b",
+    "starcoder2-15b": "starcoder2_15b",
+    "zamba2-7b": "zamba2_7b",
+    "olmo-1b": "olmo_1b",
+    "minitron-4b": "minitron_4b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "dbrx-132b": "dbrx_132b",
+    "progressivenet-cnn": "progressivenet_cnn",
+}
+
+
+def get_config(name: str):
+    mod_name = _ALIASES.get(name, name.replace("-", "_"))
+    if mod_name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ALIASES)}")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCHS if a != "progressivenet_cnn"}

@@ -1,0 +1,21 @@
+"""llama-3.2-vision-90b [vlm] — 100L d_model=8192 64H (GQA kv=8)
+d_ff=28672 vocab=128256; cross-attn image layers every 5th layer. Vision
+encoder (ViT) is a stub: input_specs provides patch embeddings.
+[hf:meta-llama/Llama-3.2-11B-Vision, scaled per assignment]"""
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv=8,
+    d_ff=28672,
+    vocab=128256,
+    cycle=("attn",) * 4 + ("cross",),
+    rope_theta=500_000.0,
+    vision_tokens=1601,   # 1 tile of 560x560 / 14px patches + cls
+    d_vision=1280,
+    tie_embeddings=False,
+)

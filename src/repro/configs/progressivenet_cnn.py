@@ -1,0 +1,75 @@
+"""The paper's own model family: a small convolutional classifier
+(MobileNetV2-lite stand-in) used to reproduce the Table-II
+accuracy-vs-bit-width curves end-to-end on CPU. Not one of the 10
+assigned architectures; it exists so the *paper's* experiments have a
+native subject.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+
+CONFIG = ArchConfig(
+    name="progressivenet-cnn",
+    family="cnn",
+    n_layers=4,
+    d_model=64,
+    n_heads=1,
+    n_kv=1,
+    d_ff=128,
+    vocab=10,  # n_classes
+    cycle=("attn",),  # unused; CNN has its own init/apply below
+)
+
+
+def cnn_init(key, *, channels=(16, 32, 64), n_classes=10, in_ch=3):
+    ks = jax.random.split(key, len(channels) + 1)
+    params = {}
+    prev = in_ch
+    for i, ch in enumerate(channels):
+        # depthwise-separable pair (MobileNet-style)
+        # depthwise kernel layout: (H, W, in/groups=1, out=prev)
+        params[f"conv{i}_dw"] = 0.3 * jax.random.normal(ks[i], (3, 3, 1, prev), jnp.float32)
+        params[f"conv{i}_pw"] = (2.0 / (prev + ch)) ** 0.5 * jax.random.normal(
+            jax.random.fold_in(ks[i], 1), (1, 1, prev, ch), jnp.float32
+        )
+        params[f"bn{i}_scale"] = jnp.ones((ch,), jnp.float32)
+        params[f"bn{i}_bias"] = jnp.zeros((ch,), jnp.float32)
+        prev = ch
+    params["head"] = (2.0 / (prev + n_classes)) ** 0.5 * jax.random.normal(
+        ks[-1], (prev, n_classes), jnp.float32
+    )
+    return params
+
+
+def cnn_apply(params, x):
+    """x: (B, H, W, C) -> logits (B, n_classes)."""
+    i = 0
+    while f"conv{i}_dw" in params:
+        dw = jax.lax.conv_general_dilated(
+            x,
+            params[f"conv{i}_dw"],
+            window_strides=(1, 1),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=x.shape[-1],
+        )
+        x = jax.lax.conv_general_dilated(
+            dw,
+            params[f"conv{i}_pw"],
+            window_strides=(2, 2),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        mu = x.mean(axis=(0, 1, 2), keepdims=True)
+        var = x.var(axis=(0, 1, 2), keepdims=True)
+        x = (x - mu) * jax.lax.rsqrt(var + 1e-5)
+        x = x * params[f"bn{i}_scale"] + params[f"bn{i}_bias"]
+        x = jax.nn.relu(x)
+        i += 1
+    x = x.mean(axis=(1, 2))  # global average pool
+    return x @ params["head"]

@@ -1,0 +1,46 @@
+"""Core of the paper's contribution: progressive quantization, bit
+division/concatenation, and the progressive model container."""
+from repro.core.quantize import (
+    QuantizedTensor,
+    quantize,
+    dequantize,
+    truncate,
+    quantization_error_bound,
+    container_dtype,
+)
+from repro.core.bitplanes import PlaneSchedule, PAPER_DEFAULT, split, concat
+from repro.core.policy import (
+    DivisionPolicy,
+    UniformPolicy,
+    LayerPriorityPolicy,
+    ExpertPopularityPolicy,
+    schedule_from_stages,
+)
+from repro.core.progressive import (
+    ProgressiveModel,
+    ReceiverState,
+    divide,
+    transmit_reconstruct,
+)
+
+__all__ = [
+    "QuantizedTensor",
+    "quantize",
+    "dequantize",
+    "truncate",
+    "quantization_error_bound",
+    "container_dtype",
+    "PlaneSchedule",
+    "PAPER_DEFAULT",
+    "split",
+    "concat",
+    "DivisionPolicy",
+    "UniformPolicy",
+    "LayerPriorityPolicy",
+    "ExpertPopularityPolicy",
+    "schedule_from_stages",
+    "ProgressiveModel",
+    "ReceiverState",
+    "divide",
+    "transmit_reconstruct",
+]

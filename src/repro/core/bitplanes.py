@@ -1,0 +1,144 @@
+"""Bit division and bit concatenation (paper eqs. 3 and 4).
+
+Eq. (3) fetches the m-th fraction ("plane") of widths ``b`` from a k-bit
+quantized integer:
+
+    p<k, m> = (q<k> << b_{m-1}) >> (k - b_m + b_{m-1}),   b_0 = 0
+
+where ``b_{m-1}`` here is the *cumulative* width of the planes before m
+(the paper indexes cumulative widths; we make that explicit). Eq. (4)
+reassembles whatever prefix of planes has been received:
+
+    q'<k> = OR_m ( p<k, m> << (k - c_m) ),   c_m = b_1 + ... + b_m
+
+Shifts are unsigned; everything is vectorized jnp and jit-safe, and the
+same arithmetic is mirrored by the Pallas kernel in
+``repro/kernels/bitplane.py`` (this module is its oracle's oracle).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QuantizedTensor, container_dtype
+
+
+def validate_widths(bits: int, widths: Sequence[int]) -> tuple[int, ...]:
+    widths = tuple(int(w) for w in widths)
+    if any(w < 1 for w in widths):
+        raise ValueError(f"plane widths must be >= 1, got {widths}")
+    if sum(widths) != bits:
+        raise ValueError(f"plane widths {widths} must sum to bits={bits}")
+    return widths
+
+
+def cumulative(widths: Sequence[int]) -> tuple[int, ...]:
+    out, acc = [], 0
+    for w in widths:
+        acc += w
+        out.append(acc)
+    return tuple(out)
+
+
+def split_plane(q: jax.Array, bits: int, widths: Sequence[int], m: int) -> jax.Array:
+    """Eq. (3): extract plane m (1-indexed, MSB planes first)."""
+    widths = validate_widths(bits, widths)
+    if not (1 <= m <= len(widths)):
+        raise ValueError(f"m={m} outside [1, {len(widths)}]")
+    cum = (0,) + cumulative(widths)
+    before = cum[m - 1]
+    w = widths[m - 1]
+    # Work in a container wide enough that `<< before` cannot overflow.
+    wide = q.astype(jnp.uint32)
+    mask = jnp.uint32(2**bits - 1)
+    shifted = (wide << before) & mask          # unsigned left shift within k bits
+    plane = shifted >> (bits - w)              # keep w top bits
+    return plane.astype(container_dtype(w))
+
+
+def split(qt: QuantizedTensor, widths: Sequence[int]) -> list[jax.Array]:
+    """All planes of a quantized tensor, MSB-first."""
+    widths = validate_widths(qt.bits, widths)
+    return [split_plane(qt.q, qt.bits, widths, m + 1) for m in range(len(widths))]
+
+
+def concat(planes: Sequence[jax.Array], bits: int, widths: Sequence[int]) -> jax.Array:
+    """Eq. (4): OR together the received prefix of planes.
+
+    ``planes`` may be any prefix (1..n planes); the result is the k-bit
+    integer with the unreceived low bits zero.
+    """
+    widths = validate_widths(bits, widths)
+    if not (1 <= len(planes) <= len(widths)):
+        raise ValueError(f"got {len(planes)} planes for {len(widths)} widths")
+    cum = cumulative(widths)
+    acc = jnp.zeros(planes[0].shape, dtype=jnp.uint32)
+    for m, p in enumerate(planes, start=1):
+        acc = acc | (p.astype(jnp.uint32) << (bits - cum[m - 1]))
+    return acc.astype(container_dtype(bits))
+
+
+@dataclasses.dataclass(frozen=True)
+class PlaneSchedule:
+    """Static description of a bit-division: k bits into widths b."""
+
+    bits: int
+    widths: tuple[int, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "widths", validate_widths(self.bits, self.widths))
+
+    @property
+    def n_planes(self) -> int:
+        return len(self.widths)
+
+    @property
+    def cumulative_bits(self) -> tuple[int, ...]:
+        return cumulative(self.widths)
+
+    def payload_bytes(self, n_elements: int, upto: int | None = None) -> int:
+        """Dense-packed payload size of planes [1..upto]."""
+        import math
+
+        upto = self.n_planes if upto is None else upto
+        return sum(math.ceil(n_elements * w / 8) for w in self.widths[:upto])
+
+
+# The paper's default: 16-bit model sent as eight 2-bit planes
+# (2 -> 4 -> 6 -> ... -> 16).
+PAPER_DEFAULT = PlaneSchedule(bits=16, widths=(2,) * 8)
+
+
+# ---------------------------------------------------------------------------
+# Dense bit-packing: planes are transmitted packed (w bits per element),
+# not one container-int per element — this is what keeps "no size
+# increase" true on the wire.
+# ---------------------------------------------------------------------------
+
+def pack_bits(plane: jax.Array, width: int) -> jax.Array:
+    """Pack a width-bit plane into a dense uint8 byte stream (big-endian
+    bit order). Pure-jnp; used by the wire format."""
+    flat = plane.astype(jnp.uint32).ravel()
+    n = flat.shape[0]
+    # Expand each value into `width` bits, MSB first.
+    shifts = jnp.arange(width - 1, -1, -1, dtype=jnp.uint32)
+    bits = (flat[:, None] >> shifts[None, :]) & jnp.uint32(1)  # (n, width)
+    bitstream = bits.ravel()
+    pad = (-bitstream.shape[0]) % 8
+    bitstream = jnp.pad(bitstream, (0, pad))
+    by = bitstream.reshape(-1, 8)
+    weights = jnp.uint32(1) << jnp.arange(7, -1, -1, dtype=jnp.uint32)
+    return (by * weights[None, :]).sum(axis=1).astype(jnp.uint8)
+
+
+def unpack_bits(packed: jax.Array, width: int, n_elements: int) -> jax.Array:
+    """Inverse of :func:`pack_bits`; returns uint32 values in [0, 2^w)."""
+    by = packed.astype(jnp.uint32)
+    shifts = jnp.arange(7, -1, -1, dtype=jnp.uint32)
+    bitstream = ((by[:, None] >> shifts[None, :]) & jnp.uint32(1)).ravel()
+    bitstream = bitstream[: n_elements * width].reshape(n_elements, width)
+    weights = jnp.uint32(1) << jnp.arange(width - 1, -1, -1, dtype=jnp.uint32)
+    return (bitstream * weights[None, :]).sum(axis=1)

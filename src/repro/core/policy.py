@@ -1,0 +1,150 @@
+"""Division policies: how a model's tensors are cut into transmission
+stages.
+
+The paper exposes ``b`` (plane widths) as the user-facing knob and ships
+every tensor's m-th plane in stage m. We keep that as the default
+(``UniformPolicy``) and add two beyond-paper policies that exploit
+structure a browser client doesn't have:
+
+* ``LayerPriorityPolicy`` — within a stage, order tensors by a priority
+  score (e.g. first/last layers first, embeddings first), so the earliest
+  *partial* stage is already maximally useful.
+* ``ExpertPopularityPolicy`` — for MoE models: planes of popular experts
+  (by router statistics) ship before unpopular ones; a serving pod
+  becomes useful for the majority of tokens earlier.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+from repro.core.bitplanes import PlaneSchedule, PAPER_DEFAULT
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorPlan:
+    """Per-tensor plan: the plane schedule plus a stage->order priority."""
+
+    schedule: PlaneSchedule
+    priority: float = 0.0  # lower ships earlier within a stage
+
+
+class DivisionPolicy:
+    """Maps a tensor path (tuple of pytree keys) to a TensorPlan."""
+
+    def plan(self, path: tuple, shape: tuple, dtype, slice_idx: int | None = None
+             ) -> TensorPlan:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def slice_spec(self, path: tuple, shape: tuple) -> int | None:
+        """Return an axis to slice this tensor along (one sub-tensor per
+        index, each with its own quantization range and priority), or
+        None to keep it whole. Used for expert banks: per-expert slices
+        give (a) priority ordering by router popularity and (b) tighter
+        per-expert (min, max) ranges."""
+        return None
+
+    @property
+    def n_stages(self) -> int:  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformPolicy(DivisionPolicy):
+    """The paper's policy: one PlaneSchedule shared by every tensor."""
+
+    schedule: PlaneSchedule = PAPER_DEFAULT
+
+    def plan(self, path, shape, dtype, slice_idx=None) -> TensorPlan:
+        return TensorPlan(schedule=self.schedule)
+
+    @property
+    def n_stages(self) -> int:
+        return self.schedule.n_planes
+
+
+def _path_str(path: tuple) -> str:
+    from repro.core.wire import path_str
+
+    return path_str(path)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPriorityPolicy(DivisionPolicy):
+    """Uniform widths, but tensors ordered within a stage by a scoring
+    function over their path (lower score first)."""
+
+    schedule: PlaneSchedule = PAPER_DEFAULT
+    score: Callable[[str], float] = staticmethod(lambda p: 0.0)
+
+    def plan(self, path, shape, dtype, slice_idx=None) -> TensorPlan:
+        return TensorPlan(schedule=self.schedule, priority=self.score(_path_str(path)))
+
+    @property
+    def n_stages(self) -> int:
+        return self.schedule.n_planes
+
+
+def embeddings_first_score(path: str) -> float:
+    """Heuristic: embeddings and final norm/head first, then shallow to
+    deep layers. A truncated first stage then covers the I/O surfaces."""
+    p = path.lower()
+    if "embed" in p or "head" in p or "final" in p:
+        return 0.0
+    import re
+
+    m = re.search(r"(\d+)", p)
+    return 1.0 + (int(m.group(1)) if m else 0)
+
+
+_EXPERT_BANK_RE = r"we_(gate|up|down)"
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpertPopularityPolicy(DivisionPolicy):
+    """MoE-aware (beyond-paper): expert banks are *sliced* along the
+    expert axis, each slice quantized with its own (min, max) and given
+    priority = -popularity, so the most-routed experts' planes ship
+    first and each expert-parallel chip can fetch only its slices.
+    ``popularity`` maps expert index -> routing fraction (router stats);
+    ``n_experts`` identifies the expert axis (the dim of that size)."""
+
+    schedule: PlaneSchedule = PAPER_DEFAULT
+    popularity: Mapping[int, float] = dataclasses.field(default_factory=dict)
+    n_experts: int = 0
+    # expert slices ship after core tensors (priority 0) by default;
+    # within experts, hot ones first
+    expert_base_priority: float = 1.0
+
+    def slice_spec(self, path, shape) -> int | None:
+        import re
+
+        if not re.search(_EXPERT_BANK_RE, _path_str(path)):
+            return None
+        if not self.n_experts:
+            return None
+        for ax, d in enumerate(shape):
+            if d == self.n_experts:
+                return ax
+        return None
+
+    def plan(self, path, shape, dtype, slice_idx=None) -> TensorPlan:
+        prio = 0.0
+        if slice_idx is not None:
+            prio = self.expert_base_priority - float(
+                self.popularity.get(slice_idx, 0.0))
+        return TensorPlan(schedule=self.schedule, priority=prio)
+
+    @property
+    def n_stages(self) -> int:
+        return self.schedule.n_planes
+
+
+def schedule_from_stages(bits: int, stage_bits: Sequence[int]) -> PlaneSchedule:
+    """Convenience: the paper's '2 -> 4 -> 6 -> ... -> 16' notation gives
+    cumulative bits; convert to widths."""
+    widths, prev = [], 0
+    for c in stage_bits:
+        widths.append(c - prev)
+        prev = c
+    return PlaneSchedule(bits=bits, widths=tuple(widths))

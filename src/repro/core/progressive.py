@@ -1,0 +1,251 @@
+"""ProgressiveModel: the paper's pipeline (Fig. 3) lifted to pytrees.
+
+Server side (once, before deployment):
+    ``divide(params, policy)`` -> ProgressiveModel
+        quantize every float leaf (eq. 2), bit-divide it (eq. 3), and
+        organize planes into transmission *stages*.
+
+Client side (per stage arrival):
+    ``ReceiverState.receive(stage)`` OR-accumulates planes (eq. 4);
+    ``ReceiverState.materialize()`` dequantizes (eq. 5) into a params
+    pytree of the original structure/dtypes, usable by the unmodified
+    model ``apply``.
+
+Non-float leaves (ints, bools — e.g. RoPE tables built on the fly don't
+exist in params, but masks might) ship verbatim in stage 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitplanes
+from repro.core.policy import DivisionPolicy, UniformPolicy, TensorPlan
+from repro.core.quantize import QuantizedTensor, quantize, dequantize
+
+
+def _is_float(x) -> bool:
+    return jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+
+
+@dataclasses.dataclass
+class TensorPlanes:
+    """Server-side per-tensor artifact: metadata + all planes.
+
+    A leaf may be sliced along ``slice_axis`` (expert banks): one
+    TensorPlanes per slice, each with its own (lo, hi) range and
+    priority; ``shape`` is then the slice's shape (axis removed) and the
+    receiver stacks slices back along ``slice_axis``."""
+
+    path: tuple
+    plan: TensorPlan
+    lo: jax.Array
+    hi: jax.Array
+    shape: tuple
+    orig_dtype: Any
+    planes: list[jax.Array]  # MSB-first, len == n_planes
+    slice_axis: int | None = None
+    slice_idx: int = 0
+    n_slices: int = 1
+
+    @property
+    def bits(self) -> int:
+        return self.plan.schedule.bits
+
+
+@dataclasses.dataclass
+class ProgressiveModel:
+    """The divided model, ready for staged transmission."""
+
+    tensors: list[TensorPlanes]
+    treedef: Any
+    n_stages: int
+    passthrough: list[tuple[tuple, Any]]  # (path, non-float leaf)
+
+    def stage(self, s: int) -> list[tuple[int, jax.Array]]:
+        """Planes shipped in stage s (1-indexed): [(tensor_idx, plane)],
+        ordered by the policy's priority."""
+        if not (1 <= s <= self.n_stages):
+            raise ValueError(f"stage {s} outside [1, {self.n_stages}]")
+        out = []
+        for i, t in enumerate(self.tensors):
+            if s <= t.plan.schedule.n_planes:
+                out.append((i, t.planes[s - 1]))
+        out.sort(key=lambda it: (self.tensors[it[0]].plan.priority, it[0]))
+        return out
+
+    def stage_payload_bytes(self, s: int) -> int:
+        total = 0
+        for i, plane in self.stage(s):
+            t = self.tensors[i]
+            w = t.plan.schedule.widths[s - 1]
+            total += -(-int(np.prod(t.shape)) * w // 8)  # ceil
+        return total
+
+    def total_payload_bytes(self) -> int:
+        return sum(self.stage_payload_bytes(s) for s in range(1, self.n_stages + 1))
+
+    def singleton_payload_bytes(self) -> int:
+        """Bytes of the non-progressive k-bit quantized model (the
+        paper's baseline). total_payload_bytes() equals this up to
+        per-plane byte-boundary padding (< 1 byte per plane per tensor)
+        — the paper's 'no size increase' property. See
+        ``padding_overhead_bound``."""
+        total = 0
+        for t in self.tensors:
+            total += -(-int(np.prod(t.shape)) * t.bits // 8)
+        return total
+
+    def padding_overhead_bound(self) -> int:
+        """Max extra wire bytes vs. singleton from rounding each plane up
+        to a byte boundary."""
+        return sum(t.plan.schedule.n_planes for t in self.tensors)
+
+
+def divide(params, policy: DivisionPolicy | None = None) -> ProgressiveModel:
+    """Quantize + bit-divide a params pytree (paper steps 1-2)."""
+    policy = policy or UniformPolicy()
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(params)
+    tensors: list[TensorPlanes] = []
+    passthrough: list[tuple[tuple, Any]] = []
+    for path, leaf in leaves_with_paths:
+        if not _is_float(leaf):
+            passthrough.append((path, leaf))
+            continue
+        arr = jnp.asarray(leaf)
+        axis = policy.slice_spec(path, arr.shape)
+        if axis is None:
+            slices = [(None, 0, 1, arr)]
+        else:
+            n = arr.shape[axis]
+            slices = [(axis, e, n, jnp.take(arr, e, axis=axis))
+                      for e in range(n)]
+        for slice_axis, idx, n_slices, sub in slices:
+            plan = policy.plan(path, sub.shape, arr.dtype,
+                               slice_idx=None if slice_axis is None else idx)
+            qt = quantize(sub, plan.schedule.bits)
+            planes = bitplanes.split(qt, plan.schedule.widths)
+            tensors.append(
+                TensorPlanes(
+                    path=path,
+                    plan=plan,
+                    lo=qt.lo,
+                    hi=qt.hi,
+                    shape=tuple(sub.shape),
+                    orig_dtype=arr.dtype,
+                    planes=planes,
+                    slice_axis=slice_axis,
+                    slice_idx=idx,
+                    n_slices=n_slices,
+                )
+            )
+    return ProgressiveModel(
+        tensors=tensors,
+        treedef=treedef,
+        n_stages=policy.n_stages,
+        passthrough=passthrough,
+    )
+
+
+@dataclasses.dataclass
+class ReceiverState:
+    """Client-side accumulator (paper steps 3-4).
+
+    Holds one uint accumulator per tensor; ``receive`` is the eq. (4) OR
+    — cheap integer ops, no float work — and ``materialize`` is eq. (5).
+    In the serving engine the accumulators live device-resident and the
+    OR runs as a jitted update, so a precision upgrade never stalls
+    decoding.
+    """
+
+    model_meta: ProgressiveModel  # planes unused client-side; meta only
+    acc: list[jax.Array]
+    received_stages: int = 0
+
+    @classmethod
+    def init(cls, model: ProgressiveModel) -> "ReceiverState":
+        acc = [
+            jnp.zeros(t.shape, dtype=bitplanes.container_dtype(t.bits))
+            for t in model.tensors
+        ]
+        return cls(model_meta=model, acc=acc, received_stages=0)
+
+    def receive(self, stage_planes: Sequence[tuple[int, jax.Array]]) -> "ReceiverState":
+        s = self.received_stages + 1
+        acc = list(self.acc)
+        for idx, plane in stage_planes:
+            t = self.model_meta.tensors[idx]
+            sched = t.plan.schedule
+            cum = sched.cumulative_bits[s - 1]
+            shift = sched.bits - cum
+            acc[idx] = (
+                acc[idx].astype(jnp.uint32) | (plane.astype(jnp.uint32) << shift)
+            ).astype(acc[idx].dtype)
+        return dataclasses.replace(self, acc=acc, received_stages=s)
+
+    def effective_bits(self, tensor_idx: int) -> int:
+        sched = self.model_meta.tensors[tensor_idx].plan.schedule
+        s = min(self.received_stages, sched.n_planes)
+        return sched.cumulative_bits[s - 1] if s > 0 else 0
+
+    def materialize(self):
+        """Dequantize the current accumulators into the original pytree
+        (stacking sliced tensors back along their slice axis)."""
+        pieces: dict[tuple, list] = {}
+        for i, t in enumerate(self.model_meta.tensors):
+            qt = QuantizedTensor(
+                q=self.acc[i], lo=t.lo, hi=t.hi, bits=t.bits, orig_dtype=t.orig_dtype
+            )
+            val = dequantize(qt, received_bits=self.effective_bits(i))
+            pieces.setdefault(t.path, []).append((t.slice_idx, t.slice_axis, val))
+        leaves = {}
+        for path, parts in pieces.items():
+            if len(parts) == 1 and parts[0][1] is None:
+                leaves[path] = parts[0][2]
+            else:
+                axis = parts[0][1]
+                parts.sort(key=lambda x: x[0])
+                leaves[path] = jnp.stack([v for _, _, v in parts], axis=axis)
+        for path, leaf in self.model_meta.passthrough:
+            leaves[path] = leaf
+        # Rebuild in treedef order.
+        ordered = [leaves[p] for p, _ in _all_paths(self.model_meta)]
+        return jax.tree_util.tree_unflatten(self.model_meta.treedef, ordered)
+
+
+def _all_paths(model: ProgressiveModel):
+    """All (path, kind) in original flatten order."""
+    tensor_paths = {t.path: ("t", i) for i, t in enumerate(model.tensors)}
+    pass_paths = {p: ("p", leaf) for p, leaf in model.passthrough}
+    # tree_flatten_with_path order == tree_flatten order; reconstruct it
+    # from the union, sorted by the order we saw them (tensors and
+    # passthrough were appended in flatten order, so merge by key lookup).
+    # We stored them separately; rebuild by walking both lists.
+    merged: list[tuple[tuple, Any]] = []
+    ti = pi = 0
+    # flatten order is recoverable because each path appears exactly once;
+    # we re-flatten a skeleton of the treedef to get the order.
+    n = len({t.path for t in model.tensors}) + len(model.passthrough)
+    skeleton = jax.tree_util.tree_unflatten(model.treedef, list(range(n)))
+    flat, _ = jax.tree_util.tree_flatten_with_path(skeleton)
+    for path, _leaf in flat:
+        merged.append((path, tensor_paths.get(path) or pass_paths.get(path)))
+    return merged
+
+
+def transmit_reconstruct(params, policy: DivisionPolicy | None = None, upto_stage: int | None = None):
+    """One-shot helper: divide, 'transmit' stages [1..upto], materialize.
+
+    The workhorse of tests and accuracy benchmarks: returns the
+    approximate params a client would hold after ``upto_stage`` stages.
+    """
+    model = divide(params, policy)
+    upto = model.n_stages if upto_stage is None else upto_stage
+    st = ReceiverState.init(model)
+    for s in range(1, upto + 1):
+        st = st.receive(model.stage(s))
+    return st.materialize()

@@ -1,0 +1,156 @@
+"""Floor-quantization and dequantization (paper eqs. 2 and 5).
+
+The paper quantizes every floating-point tensor of a model to a k-bit
+unsigned integer with a *flooring* quantizer (eq. 2); flooring — rather
+than rounding — is what makes bit-plane prefixes exact (Jin et al.,
+AdaBits): the first m planes of a floor-quantized value are themselves
+the floor-quantization of that value at Σ_{i<=m} b_i bits.
+
+Dequantization (eq. 5) adds the half-LSB revision factor ``1/2^{k+1}``
+that re-centres the floor error, so the expected reconstruction error is
+zero and the worst case is half an LSB of the *received* precision.
+
+All functions are jit-able and operate on single arrays; pytree plumbing
+lives in :mod:`repro.core.progressive`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# Container dtype for quantized values. k <= 16 everywhere in the paper;
+# we keep the container at uint16 for k <= 16 and uint32 above.
+MAX_BITS = 16
+
+
+def container_dtype(k: int) -> jnp.dtype:
+    if k <= 8:
+        return jnp.uint8
+    if k <= 16:
+        return jnp.uint16
+    if k <= 32:
+        return jnp.uint32
+    raise ValueError(f"k={k} exceeds 32-bit container")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """A k-bit floor-quantized tensor plus its dequantization range.
+
+    ``q`` holds unsigned integers in [0, 2^k); ``lo``/``hi`` are the
+    original per-tensor min/max (scalar float32 arrays), ``bits`` the
+    quantization width k (static).
+    """
+
+    q: jax.Array
+    lo: jax.Array
+    hi: jax.Array
+    bits: int
+    orig_dtype: Any = jnp.float32
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.q, self.lo, self.hi), (self.bits, self.orig_dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, lo, hi = children
+        bits, orig_dtype = aux
+        return cls(q=q, lo=lo, hi=hi, bits=bits, orig_dtype=orig_dtype)
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def nbytes_payload(self) -> int:
+        """Payload bytes if packed densely at ``bits`` bits per element."""
+        import math
+
+        return math.ceil(self.q.size * self.bits / 8)
+
+
+# ε of eq. (2): keeps the scaled value strictly below 2^k so floor lands
+# in [0, 2^k). Relative so it behaves across magnitudes.
+_EPS_REL = 1e-6
+_EPS_ABS = 1e-12
+
+
+def _range_eps(lo: jax.Array, hi: jax.Array) -> jax.Array:
+    span = hi - lo
+    return span * _EPS_REL + _EPS_ABS
+
+
+def quantize(x: jax.Array, bits: int) -> QuantizedTensor:
+    """Eq. (2): q<k> = floor(2^k * (x - min) / (max - min + eps))."""
+    if not (1 <= bits <= 32):
+        raise ValueError(f"bits must be in [1, 32], got {bits}")
+    xf = x.astype(jnp.float32)
+    lo = jnp.min(xf)
+    hi = jnp.max(xf)
+    span = hi - lo + _range_eps(lo, hi)
+    scaled = (xf - lo) / span
+    q = jnp.floor(jnp.ldexp(scaled, bits))
+    # Guard: numerical edge can land exactly on 2^k; clamp into range.
+    q = jnp.clip(q, 0, 2.0**bits - 1)
+    return QuantizedTensor(
+        q=q.astype(container_dtype(bits)),
+        lo=lo,
+        hi=hi,
+        bits=bits,
+        orig_dtype=x.dtype,
+    )
+
+
+def dequantize(qt: QuantizedTensor, received_bits: int | None = None) -> jax.Array:
+    """Eq. (5): M' = (max-min) * q'/2^k + min + 1/2^{k+1} * (max-min).
+
+    The paper writes the revision factor as ``1/2^{k+1}``; dimensional
+    consistency (and the reference implementation) put it in the *value*
+    domain, i.e. scaled by the range — half an LSB of the received
+    precision. ``received_bits`` is the effective precision m = Σ b_i of
+    the planes OR-ed in so far; the revision factor must be half *that*
+    LSB, which is what makes truncated models unbiased.
+    """
+    k = qt.bits
+    m = k if received_bits is None else received_bits
+    if not (0 <= m <= k):
+        raise ValueError(f"received_bits={m} outside [0, {k}]")
+    # Use the same effective span as eq. (2) (incl. ε) so dequantization
+    # exactly inverts the quantizer grid; the deviation from the paper's
+    # literal (max - min) is 1e-6 relative and makes the half-LSB error
+    # bound hold exactly.
+    span = qt.hi - qt.lo + _range_eps(qt.lo, qt.hi)
+    val = span * (qt.q.astype(jnp.float32) / (2.0**k)) + qt.lo
+    if m > 0:
+        val = val + span * (0.5 ** (m + 1))
+    else:
+        # Nothing received: centre of the whole range.
+        val = qt.lo + span * 0.5 + jnp.zeros_like(val)
+    return val.astype(qt.orig_dtype)
+
+
+def quantization_error_bound(qt: QuantizedTensor, received_bits: int | None = None) -> jax.Array:
+    """Worst-case |x - dequantize(quantize(x))| = half an LSB at m bits."""
+    m = qt.bits if received_bits is None else received_bits
+    span = qt.hi - qt.lo + _range_eps(qt.lo, qt.hi)
+    # Half an LSB at m bits, plus slack for fp32 rounding in the
+    # (x - lo) / span forward computation (can move a value across one
+    # grid boundary near the top of the range).
+    fp32_slack = span * (0.5**m) * 2.0**-7 + jnp.maximum(jnp.abs(qt.lo), jnp.abs(qt.hi)) * 2.0**-22
+    return span * (0.5**m) * 0.5 + fp32_slack + _EPS_ABS
+
+
+def truncate(qt: QuantizedTensor, m: int) -> QuantizedTensor:
+    """Keep only the m most-significant bits (what a receiver holds after
+    the first planes totalling m bits). Useful as an oracle: receiving
+    planes [b_1..b_j] must equal ``truncate(q, sum(b[:j]))`` shifted."""
+    if not (0 <= m <= qt.bits):
+        raise ValueError(f"m={m} outside [0, {qt.bits}]")
+    shift = qt.bits - m
+    q = (qt.q >> shift) << shift
+    return dataclasses.replace(qt, q=q)

@@ -1,0 +1,145 @@
+"""Wire format for progressive model transmission.
+
+Layout (all little-endian):
+
+    [HEADER]   json (length-prefixed): per-tensor path/shape/dtype/lo/hi,
+               plane schedule, stage order. Shipped before stage 1.
+    [STAGE 1]  concat of dense bit-packed planes, in policy priority order
+    [STAGE 2]  ...
+    ...
+    [STAGE n]
+
+``total wire bytes == header + singleton quantized payload`` — the
+paper's "no size increase" claim, verified by tests. Stages can be cut at
+arbitrary byte offsets by the transport; the client state machine in
+``transmission/client.py`` resumes mid-plane.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import bitplanes
+from repro.core.progressive import ProgressiveModel
+
+MAGIC = b"PGNJ"
+VERSION = 1
+
+
+def _path_key(path: tuple) -> str:
+    return path_str(path)
+
+
+def path_str(path: tuple) -> str:
+    """Render a jax tree path as 'a/b/0/c' regardless of key kind."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def encode_header(model: ProgressiveModel) -> bytes:
+    meta = {
+        "version": VERSION,
+        "n_stages": model.n_stages,
+        "tensors": [
+            {
+                "path": _path_key(t.path),
+                "shape": list(t.shape),
+                "dtype": np.dtype(t.orig_dtype).name,
+                "lo": float(t.lo),
+                "hi": float(t.hi),
+                "bits": t.plan.schedule.bits,
+                "widths": list(t.plan.schedule.widths),
+                "priority": t.plan.priority,
+                "slice_axis": t.slice_axis,
+                "slice_idx": t.slice_idx,
+                "n_slices": t.n_slices,
+            }
+            for t in model.tensors
+        ],
+    }
+    body = json.dumps(meta).encode()
+    return MAGIC + struct.pack("<II", VERSION, len(body)) + body
+
+
+def decode_header(buf: bytes):
+    if buf[:4] != MAGIC:
+        raise ValueError("bad magic")
+    version, n = struct.unpack("<II", buf[4:12])
+    if version != VERSION:
+        raise ValueError(f"unsupported version {version}")
+    meta = json.loads(buf[12 : 12 + n].decode())
+    return meta, 12 + n
+
+
+def encode_stage(model: ProgressiveModel, s: int) -> bytes:
+    """Dense bit-packed payload of one stage (no per-plane framing needed:
+    sizes are derivable from the header)."""
+    chunks = []
+    for idx, plane in model.stage(s):
+        t = model.tensors[idx]
+        w = t.plan.schedule.widths[s - 1]
+        packed = bitplanes.pack_bits(jnp.asarray(plane), w)
+        chunks.append(np.asarray(packed).tobytes())
+    return b"".join(chunks)
+
+
+def encode(model: ProgressiveModel) -> bytes:
+    return encode_header(model) + b"".join(
+        encode_stage(model, s) for s in range(1, model.n_stages + 1)
+    )
+
+
+@dataclasses.dataclass
+class StageLayout:
+    """Byte layout derived purely from the header — what a client needs
+    to slice an incoming byte stream into (tensor, plane) payloads."""
+
+    header_bytes: int
+    # per stage: list of (tensor_idx, width, payload_bytes, n_elements)
+    stages: list[list[tuple[int, int, int, int]]]
+
+    @property
+    def stage_bytes(self) -> list[int]:
+        return [sum(e[2] for e in st) for st in self.stages]
+
+    @property
+    def total_bytes(self) -> int:
+        return self.header_bytes + sum(self.stage_bytes)
+
+
+def layout_from_header(meta: dict, header_bytes: int) -> StageLayout:
+    n_stages = meta["n_stages"]
+    order = sorted(
+        range(len(meta["tensors"])),
+        key=lambda i: (meta["tensors"][i]["priority"], i),
+    )
+    stages = []
+    for s in range(1, n_stages + 1):
+        entries = []
+        for i in order:
+            t = meta["tensors"][i]
+            if s <= len(t["widths"]):
+                w = t["widths"][s - 1]
+                n_el = int(np.prod(t["shape"])) if t["shape"] else 1
+                nbytes = -(-n_el * w // 8)
+                entries.append((i, w, nbytes, n_el))
+        stages.append(entries)
+    return StageLayout(header_bytes=header_bytes, stages=stages)
+
+
+def decode_plane(payload: bytes, width: int, n_elements: int) -> np.ndarray:
+    packed = jnp.asarray(np.frombuffer(payload, dtype=np.uint8))
+    return np.asarray(bitplanes.unpack_bits(packed, width, n_elements))

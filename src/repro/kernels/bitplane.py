@@ -1,0 +1,107 @@
+"""Bit-plane accumulate (eq. 4) as a Pallas TPU kernel.
+
+A precision upgrade on a serving pod is, per weight shard:
+
+    acc <- acc | (plane << shift)
+
+pure integer VPU work, elementwise, embarrassingly tiled. On a real pod
+the plane shard arrives over ICI/DCN into HBM and this kernel streams
+(acc, plane) HBM->VMEM, ORs, and writes back — memory-bound at
+~3 bytes/element moved, i.e. a 27B-param upgrade costs ~`3*27e9/819e9`
+≈ 100 ms of HBM time per chip. The serving engine calls this between
+decode steps; it never blocks the MXU for long.
+
+The same kernel also implements eq. (3) extraction (split) via shift
+masks, so divide/concat are one code path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _or_kernel(acc_ref, plane_ref, o_ref, *, shift: int):
+    a = acc_ref[...].astype(jnp.uint32)
+    p = plane_ref[...].astype(jnp.uint32)
+    o_ref[...] = (a | (p << shift)).astype(o_ref.dtype)
+
+
+def _extract_kernel(q_ref, o_ref, *, bits: int, before: int, width: int):
+    q = q_ref[...].astype(jnp.uint32)
+    mask = jnp.uint32(2 ** bits - 1)
+    o_ref[...] = (((q << before) & mask) >> (bits - width)).astype(o_ref.dtype)
+
+
+def _tile_1d(n: int, block: int) -> tuple[int, int]:
+    pad = (-n) % block
+    return n + pad, pad
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "block", "interpret"))
+def plane_or(acc: jax.Array, plane: jax.Array, *, shift: int,
+             block: int = 1024, interpret: bool = False) -> jax.Array:
+    """acc | (plane << shift), elementwise over arbitrary-shape arrays."""
+    shape = acc.shape
+    a = acc.ravel()
+    p = plane.ravel()
+    n = a.shape[0]
+    block = min(block, max(n, 8))
+    npad, pad = _tile_1d(n, block)
+    if pad:
+        a = jnp.pad(a, (0, pad))
+        p = jnp.pad(p, (0, pad))
+    # 2-D tiles: TPU vregs want (8, 128); flatten into rows of `block`.
+    a2 = a.reshape(-1, block)
+    p2 = p.reshape(-1, block)
+    rows = a2.shape[0]
+    brows = min(rows, 8)
+    rpad = (-rows) % brows
+    if rpad:
+        a2 = jnp.pad(a2, ((0, rpad), (0, 0)))
+        p2 = jnp.pad(p2, ((0, rpad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_or_kernel, shift=shift),
+        grid=(a2.shape[0] // brows,),
+        in_specs=[
+            pl.BlockSpec((brows, block), lambda i: (i, 0)),
+            pl.BlockSpec((brows, block), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((brows, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(a2.shape, acc.dtype),
+        interpret=interpret,
+    )(a2, p2)
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "before", "width", "block", "interpret")
+)
+def plane_extract(q: jax.Array, *, bits: int, before: int, width: int,
+                  block: int = 1024, interpret: bool = False) -> jax.Array:
+    """Eq. (3): extract the plane at cumulative offset ``before`` of
+    ``width`` bits from k-bit values (server-side divide)."""
+    shape = q.shape
+    a = q.ravel()
+    n = a.shape[0]
+    block = min(block, max(n, 8))
+    npad, pad = _tile_1d(n, block)
+    if pad:
+        a = jnp.pad(a, (0, pad))
+    a2 = a.reshape(-1, block)
+    rows = a2.shape[0]
+    brows = min(rows, 8)
+    rpad = (-rows) % brows
+    if rpad:
+        a2 = jnp.pad(a2, ((0, rpad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_extract_kernel, bits=bits, before=before, width=width),
+        grid=(a2.shape[0] // brows,),
+        in_specs=[pl.BlockSpec((brows, block), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((brows, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(a2.shape, q.dtype),
+        interpret=interpret,
+    )(a2)
+    return out.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,129 @@
+"""Flash decode-attention Pallas TPU kernel (single new token vs a long
+KV cache).
+
+Decode at 32k–500k context is memory-bound: the whole KV cache crosses
+HBM once per token while the MXU does a rank-1 sliver of work. The
+kernel therefore optimizes for exactly one pass over K and V:
+
+  grid = (B, Kh, S/bs); for each KV-head and cache chunk, compute the
+  (G, bs) score tile (G = query heads per KV head, padded to the 8-row
+  sublane), run the online-softmax update against VMEM scratch carries
+  (m, l, acc), and emit the normalized (G, hd) output on the last chunk.
+
+Masking uses the chunk's position vector (ring buffers pass their slot
+positions), so full caches, partially-filled caches, and sliding-window
+ring caches all use the same kernel. This is the TPU analogue of the
+paper's "inference while bits stream in": combined with the dequant
+matmul, a pod serves long-context decode from int-plane weights with
+bf16-identical results at 16 received bits.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, n_s: int, window: int, softcap: float):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, hd), pre-scaled
+    k = k_ref[0, 0].astype(jnp.float32)          # (bs, hd)
+    v = v_ref[0, 0].astype(jnp.float32)          # (bs, hd)
+    kpos = pos_ref[...]                        # (1, bs) int32
+    qpos = qpos_ref[0, 0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, bs)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = (kpos >= 0) & (kpos <= qpos)
+    if window:
+        valid = valid & (kpos > qpos - window)
+    s = jnp.where(valid, s, NEG_INF)          # broadcast (1,bs) over (G,bs)
+
+    m_prev = m_ref[...]                        # (G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(si == n_s - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "softcap", "bs", "interpret")
+)
+def flash_decode(
+    q: jax.Array,        # (B, H, hd) one new token's queries
+    k: jax.Array,        # (B, S, Kh, hd) cache
+    v: jax.Array,        # (B, S, Kh, hd)
+    k_pos: jax.Array,    # (S,) int32; negative = empty slot
+    q_pos: jax.Array,    # scalar int32
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    bs: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, hd = q.shape
+    S, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+
+    bs = min(bs, S)
+    pad_s = (-S) % bs
+    if pad_s:
+        k = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad_s), constant_values=-1)
+    Sp = S + pad_s
+    n_s = Sp // bs
+
+    # pad G to the 8-row sublane so the score tile is vreg-aligned
+    Gp = max(8, G)
+    qg = q.reshape(B, Kh, G, hd) * (hd ** -0.5)
+    if Gp != G:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
+    kk = jnp.swapaxes(k, 1, 2)  # (B, Kh, Sp, hd)
+    vv = jnp.swapaxes(v, 1, 2)
+    pos2 = k_pos.reshape(1, Sp)
+    qpos2 = q_pos.reshape(1, 1).astype(jnp.int32)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_s=n_s, window=window, softcap=softcap),
+        grid=(B, Kh, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, s: (0, 0)),
+            pl.BlockSpec((1, 1, Gp, hd), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, bs, hd), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, bs), lambda b, h, s: (0, s)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Gp, hd), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Kh, Gp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Gp, 1), jnp.float32),
+            pltpu.VMEM((Gp, 1), jnp.float32),
+            pltpu.VMEM((Gp, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qpos2, qg, kk, vv, pos2)
+    return out[:, :, :G, :].reshape(B, H, hd)

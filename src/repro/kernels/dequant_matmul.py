@@ -1,0 +1,112 @@
+"""Fused dequantize-matmul Pallas TPU kernel.
+
+The TPU-native form of the paper's steps 3+4: weights stay in HBM as
+k-bit unsigned integers (the receiver's plane accumulator), and eq. (5)
+is applied *in VMEM, per tile, on the way into the MXU*:
+
+    y = x @ (span * q / 2^k + lo + span / 2^{m+1})
+      = x @ (scale * q + offset)
+
+So the model is never materialized in floating point in HBM: resident
+weight bytes are ``k/16``x smaller than bf16 and a precision upgrade
+(another plane OR-ed into ``q``) changes *values only* — same buffer,
+same executable. ``scale``/``offset`` are per-tensor scalars computed on
+the host from (lo, hi, bits, received_bits).
+
+Tiling: grid (M/bm, N/bn, K/bk) with K innermost; a fp32 accumulator
+tile lives in VMEM scratch across the K sweep. Block shapes default to
+MXU-aligned (128, 128) tiles (512 in K for bandwidth); the uint16 weight
+tile (bk x bn) is dequantized in-register (VPU) then fed to the MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, q_ref, scale_ref, off_ref, o_ref, acc_ref, *, n_k: int):
+    """One (bm, bn) output tile; K swept by the innermost grid dim."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    scale = scale_ref[0, 0]
+    off = off_ref[0, 0]
+    # eq. (5) on the weight tile, in-register: uint -> fp32 affine.
+    w = q_ref[...].astype(jnp.float32) * scale + off
+    x = x_ref[...].astype(jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "received_bits", "bm", "bn", "bk", "interpret", "out_dtype"),
+)
+def dequant_matmul(
+    x: jax.Array,            # (M, K) float
+    q: jax.Array,            # (K, N) uint8/uint16/uint32
+    lo: jax.Array,           # scalar f32
+    hi: jax.Array,           # scalar f32
+    *,
+    bits: int,
+    received_bits: int | None = None,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """y = x @ dequantize(q, lo, hi) without materializing the fp weight."""
+    M, K = x.shape
+    K2, N = q.shape
+    assert K == K2, (x.shape, q.shape)
+    m = bits if received_bits is None else received_bits
+
+    span = hi - lo + (hi - lo) * 1e-6 + 1e-12
+    scale = (span / (2.0 ** bits)).reshape(1, 1).astype(jnp.float32)
+    if m > 0:
+        off = (lo + span * (0.5 ** (m + 1))).reshape(1, 1).astype(jnp.float32)
+    else:
+        # degenerate zero-planes case: w == centre of range, q is all-zero
+        off = (lo + span * 0.5).reshape(1, 1).astype(jnp.float32)
+
+    bm = min(bm, M)
+    bn = min(bn, N)
+    bk = min(bk, K)
+    # pad to tile multiples (host-side; cheap relative to the matmul)
+    pm, pn, pk = (-M) % bm, (-N) % bn, (-K) % bk
+    if pm or pk:
+        x = jnp.pad(x, ((0, pm), (0, pk)))
+    if pk or pn:
+        q = jnp.pad(q, ((0, pk), (0, pn)))
+    Mp, Kp, Np = M + pm, K + pk, N + pn
+    n_k = Kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=(Mp // bm, Np // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        # fp32 accumulator tile persists across the K sweep
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, q, scale, off)
+    return out[:M, :N]

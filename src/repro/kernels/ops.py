@@ -1,0 +1,66 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On this CPU container everything runs with ``interpret=True`` (the
+kernel body executes in Python, bit-exact with the TPU lowering's
+semantics); on a real TPU the same calls compile to Mosaic. The switch
+is automatic via the default backend — callers never pass ``interpret``.
+
+Also hosts the pytree-level conveniences used by the serving engine:
+``receiver_or`` (eq. 4 across a whole plane shipment) and
+``progressive_matmul`` (consume quantized weights without an fp copy).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dequant_matmul as _dqm
+from repro.kernels import bitplane as _bp
+from repro.kernels import decode_attention as _da
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def dequant_matmul(x, q, lo, hi, *, bits, received_bits=None, **kw):
+    kw.setdefault("interpret", _interpret_default())
+    return _dqm.dequant_matmul(
+        x, q, lo, hi, bits=bits, received_bits=received_bits, **kw
+    )
+
+
+def plane_or(acc, plane, *, shift, **kw):
+    kw.setdefault("interpret", _interpret_default())
+    return _bp.plane_or(acc, plane, shift=shift, **kw)
+
+
+def plane_extract(q, *, bits, before, width, **kw):
+    kw.setdefault("interpret", _interpret_default())
+    return _bp.plane_extract(q, bits=bits, before=before, width=width, **kw)
+
+
+def flash_decode(q, k, v, k_pos, q_pos, *, window=0, softcap=0.0, **kw):
+    kw.setdefault("interpret", _interpret_default())
+    return _da.flash_decode(
+        q, k, v, k_pos, q_pos, window=window, softcap=softcap, **kw
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pytree-level conveniences
+# ---------------------------------------------------------------------------
+
+def receiver_or(acc_tree, plane_tree, shifts: dict):
+    """Apply eq. (4) across a shipment of planes. ``shifts`` maps the
+    flat index of each leaf to its shift; leaves absent from
+    ``plane_tree`` pass through."""
+    out = {}
+    for key, acc in acc_tree.items():
+        if key in plane_tree:
+            out[key] = plane_or(acc, plane_tree[key], shift=shifts[key])
+        else:
+            out[key] = acc
+    return out

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the mathematical definition of its kernel, written with
+plain jnp ops (no pallas imports). Kernel tests sweep shapes/dtypes and
+assert_allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def dequant_ref(q: jax.Array, lo: jax.Array, hi: jax.Array, bits: int,
+                received_bits: int | None = None,
+                eps_rel: float = 1e-6, eps_abs: float = 1e-12) -> jax.Array:
+    """Eq. (5) with the same effective span as repro.core.quantize."""
+    m = bits if received_bits is None else received_bits
+    span = hi - lo + (hi - lo) * eps_rel + eps_abs
+    val = span * (q.astype(jnp.float32) / (2.0 ** bits)) + lo
+    if m > 0:
+        val = val + span * (0.5 ** (m + 1))
+    else:
+        val = lo + span * 0.5 + jnp.zeros_like(val)
+    return val
+
+
+def dequant_matmul_ref(x: jax.Array, q: jax.Array, lo: jax.Array,
+                       hi: jax.Array, bits: int,
+                       received_bits: int | None = None) -> jax.Array:
+    """y = x @ dequantize(q).  x: (M, K) float; q: (K, N) uint."""
+    w = dequant_ref(q, lo, hi, bits, received_bits)
+    return x.astype(jnp.float32) @ w
+
+
+def plane_or_ref(acc: jax.Array, plane: jax.Array, shift: int) -> jax.Array:
+    """Eq. (4) single-plane accumulate: acc | (plane << shift)."""
+    return (acc.astype(jnp.uint32) | (plane.astype(jnp.uint32) << shift)).astype(acc.dtype)
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     k_pos: jax.Array, q_pos: jax.Array,
+                     *, window: int = 0, softcap: float = 0.0) -> jax.Array:
+    """Single-token GQA decode attention.
+
+    q: (B, H, hd); k/v: (B, S, Kh, hd); k_pos: (S,) int32 (negative =
+    empty slot); q_pos: scalar int32 current position.
+    Returns (B, H, hd).
+    """
+    B, H, hd = q.shape
+    S, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    qf = q.reshape(B, Kh, G, hd).astype(jnp.float32) * (hd ** -0.5)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k.astype(jnp.float32))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = (k_pos >= 0) & (k_pos <= q_pos)
+    if window:
+        valid = valid & (k_pos > q_pos - window)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, hd)

@@ -1,0 +1,213 @@
+"""Sharding rules: param/optimizer/cache/input PartitionSpecs.
+
+Strategy (baseline — §Perf iterates from here):
+
+* every weight matrix is 2-D sharded: one dim over the ``model`` axis
+  (tensor parallel), another over the FSDP axes (``data``, plus ``pod``
+  in multi-pod) — chosen greedily by size with divisibility checks, with
+  semantic overrides for embeddings and expert banks;
+* optimizer state shards exactly like its param;
+* batch dims shard over (pod, data); decode KV caches shard batch over
+  data and heads over model when head-count divides, else the sequence
+  dim takes the model axis; long_500k (batch=1) puts sequence on data.
+
+Everything returns NamedSharding so it can be handed to jax.jit
+in_shardings/out_shardings directly.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes, model_axis
+from repro.core.wire import path_str
+
+# tensors smaller than this stay replicated (no FSDP benefit)
+_FSDP_MIN_ELEMENTS = 65_536
+
+
+def _divides(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a]
+    return s
+
+
+# Megatron-style directional rules (§Perf hillclimb): column-parallel
+# producers shard their OUTPUT dim on the model axis, row-parallel
+# consumers shard their INPUT (contraction) dim — attention heads and
+# d_ff then stay model-sharded through the whole block with exactly one
+# all-reduce per block output, instead of the greedy rule's
+# shard-the-largest-dim which can put the model axis on a contraction
+# and leave the downstream attention replicated 16-way.
+_COL_PARALLEL = re.compile(r"(wq|wk|wv|wi_gate|wi_up|up_proj|in_proj|w_in|w_if)$")
+_ROW_PARALLEL = re.compile(r"(wo|down_proj|out_proj)$")
+
+
+def spec_for_param(path: str, shape: tuple, mesh: Mesh,
+                   strategy: str = "greedy") -> P:
+    """Choose a PartitionSpec for one parameter tensor.
+
+    strategy: "greedy" (baseline — largest divisible dim takes the model
+    axis) or "megatron" (directional column/row-parallel overrides,
+    falling back to greedy where no rule matches).
+    """
+    fsdp = data_axes(mesh)
+    tp = model_axis(mesh)
+    tp_size = _axis_size(mesh, tp)
+    fsdp_size = _axis_size(mesh, fsdp)
+
+    if len(shape) <= 1:
+        return P()
+
+    # stacked cycle params carry a leading n_cycles dim -> never shard it
+    start = 1 if "cycles/" in path else 0
+    dims = list(range(start, len(shape)))
+    spec: list[Any] = [None] * len(shape)
+
+    if strategy == "megatron" and len(shape) - start == 2:
+        leaf = path.rsplit("/", 1)[-1]
+        tp_dim = None
+        if _COL_PARALLEL.search(leaf):
+            tp_dim = start + 1  # output dim
+        elif _ROW_PARALLEL.search(leaf):
+            tp_dim = start      # input (contraction) dim
+        if tp_dim is not None and _divides(shape[tp_dim], tp_size):
+            spec[tp_dim] = tp
+            other = start + 1 if tp_dim == start else start
+            size = 1
+            for s in shape:
+                size *= s
+            if size >= _FSDP_MIN_ELEMENTS and _divides(shape[other], fsdp_size):
+                spec[other] = fsdp
+            return P(*spec)
+
+    # semantic override (both strategies): expert banks (E, d, f) —
+    # prefer expert dim for the model axis when it divides
+    if re.search(r"we_(gate|up|down)", path):
+        e_dim = start  # (R?, E, d, f)
+        if _divides(shape[e_dim], tp_size):
+            spec[e_dim] = tp
+            dims.remove(e_dim)
+        remaining = sorted(dims, key=lambda d: -shape[d])
+        for d in remaining:
+            if spec[e_dim] is None and _divides(shape[d], tp_size):
+                spec[d] = tp
+                dims.remove(d)
+                break
+        for d in sorted(dims, key=lambda d: -shape[d]):
+            if spec[d] is None and _divides(shape[d], fsdp_size):
+                spec[d] = fsdp
+                break
+        return P(*spec)
+
+    # generic: largest divisible dim -> model axis; next -> fsdp
+    order = sorted(dims, key=lambda d: -shape[d])
+    tp_dim = next((d for d in order if _divides(shape[d], tp_size)), None)
+    if tp_dim is not None:
+        spec[tp_dim] = tp
+    size = 1
+    for s in shape:
+        size *= s
+    if size >= _FSDP_MIN_ELEMENTS:
+        fsdp_dim = next(
+            (d for d in order if d != tp_dim and _divides(shape[d], fsdp_size)), None
+        )
+        if fsdp_dim is not None:
+            spec[fsdp_dim] = fsdp
+    return P(*spec)
+
+
+def param_shardings(params_shape_tree, mesh: Mesh, strategy: str = "greedy"):
+    def one(path, leaf):
+        return NamedSharding(
+            mesh, spec_for_param(path_str(path), leaf.shape, mesh, strategy)
+        )
+
+    return jax.tree_util.tree_map_with_path(one, params_shape_tree)
+
+
+def opt_state_shardings(opt_shape_tree, params_shardings, mesh: Mesh):
+    """mu/nu mirror params; scalars replicated."""
+    return {
+        "mu": params_shardings,
+        "nu": params_shardings,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def batch_shardings(batch_shape_tree, mesh: Mesh):
+    """Input batches: dim 0 over (pod, data)."""
+    fsdp = data_axes(mesh)
+
+    def one(leaf):
+        spec = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 1 and _divides(leaf.shape[0], _axis_size(mesh, fsdp)):
+            spec[0] = fsdp
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_shape_tree)
+
+
+def cache_shardings(cache_shape_tree, mesh: Mesh, *, batch: int):
+    """Decode caches. Layout per leaf kind:
+
+    stacked KV:   (R, B, S, K, hd)
+    tail KV:      (B, S, K, hd)
+    mamba state:  (R?, B, H, N, hd)
+    mlstm C:      (R?, B, H, hd, hd);  n: (R?, B, H, hd);  m: (R?, B, H)
+    slstm states: (R?, B, d_inner) / (R?, B, H)
+
+    Batch dim -> data when divisible; else (long_500k, B=1) sequence/head
+    dims absorb data. Head/seq dims -> model when divisible.
+    """
+    fsdp = data_axes(mesh)
+    tp = model_axis(mesh)
+    fsdp_size = _axis_size(mesh, fsdp)
+    tp_size = _axis_size(mesh, tp)
+
+    def one(path, leaf):
+        shape = leaf.shape
+        p = path_str(path)
+        spec: list[Any] = [None] * len(shape)
+        # locate batch dim: first dim equal to `batch`, skipping a
+        # leading stacked dim when present
+        start = 1 if ("cycles/" in p and len(shape) >= 2) else 0
+        bdim = None
+        for d in range(start, len(shape)):
+            if shape[d] == batch:
+                bdim = d
+                break
+        batch_on_data = bdim is not None and _divides(batch, fsdp_size)
+        if batch_on_data:
+            spec[bdim] = fsdp
+        # model axis: largest remaining divisible dim (prefers seq/heads)
+        rest = [d for d in range(start, len(shape)) if d != bdim]
+        order = sorted(rest, key=lambda d: -shape[d])
+        tp_dim = next((d for d in order if _divides(shape[d], tp_size)), None)
+        if tp_dim is not None:
+            spec[tp_dim] = tp
+        # batch=1 long-context: give `data` to another divisible dim
+        if not batch_on_data:
+            d_dim = next(
+                (d for d in order if d != tp_dim and _divides(shape[d], fsdp_size)),
+                None,
+            )
+            if d_dim is not None:
+                spec[d_dim] = fsdp
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape_tree)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

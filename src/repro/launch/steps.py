@@ -1,0 +1,145 @@
+"""Step builders shared by the dry-run, the trainer, and the server.
+
+These are the exact functions that get pjit'd onto the production mesh:
+
+    train_step(params, opt_state, batch)        -> (params, opt_state, metrics)
+    prefill_step(params, batch)                 -> (last_logits, caches)
+    serve_step(params, caches, tokens, pos)     -> (logits, caches)
+
+plus the input-spec helpers that produce ShapeDtypeStruct stand-ins for
+every argument (the dry-run lowers against these; nothing allocates).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+from repro.models.model import Model, build_model
+from repro.train import optimizer as opt
+
+
+# -- workload shapes (assigned) ------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": WorkloadShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": WorkloadShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": WorkloadShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": WorkloadShape("long_500k", 524_288, 1, "decode"),
+}
+
+# long_500k runs only where prefill/decoding is sub-quadratic or
+# sliding-window-dominated (DESIGN.md §4); pure full-attention archs skip.
+LONG_CONTEXT_OK = {
+    "gemma3-27b",      # 5:1 SWA-1024 : global
+    "xlstm-125m",      # recurrent, O(1) state
+    "zamba2-7b",       # Mamba2-dominated hybrid
+    "mixtral-8x22b",   # SWA-4096 everywhere
+}
+
+
+def long_context_supported(cfg: ArchConfig) -> bool:
+    return cfg.name in LONG_CONTEXT_OK
+
+
+# -- step builders ---------------------------------------------------------------
+
+def make_train_step(model: Model, ocfg: opt.OptConfig, *, microbatches: int = 1):
+    """microbatches > 1 = gradient accumulation: the global batch is
+    split along dim 0 and swept under lax.scan, shrinking peak activation
+    memory by ~the microbatch factor at the cost of re-running the
+    (already scanned) layer stack per slice. §Perf iterates on this."""
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                B = x.shape[0]
+                return x.reshape(microbatches, B // microbatches, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                (loss, metrics), grads = grad_fn(params, mb)
+                g_acc, l_acc, m_acc = acc
+                g_acc = jax.tree.map(jnp.add, g_acc, grads)
+                m_acc = {k: m_acc[k] + metrics[k] for k in m_acc}
+                return (g_acc, l_acc + loss, m_acc), None
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            metrics0 = {"ce": jnp.float32(0), "balance_loss": jnp.float32(0),
+                        "dropped_frac": jnp.float32(0)}
+            if model.cfg.costing:
+                # unrolled so cost_analysis counts every microbatch
+                carry = (zeros, jnp.float32(0), metrics0)
+                for i in range(microbatches):
+                    carry, _ = body(carry, jax.tree.map(lambda x: x[i], micro))
+                grads, loss, metrics = carry
+            else:
+                (grads, loss, metrics), _ = jax.lax.scan(
+                    body, (zeros, jnp.float32(0), metrics0), micro
+                )
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            metrics = {k: v / microbatches for k, v in metrics.items()}
+        params, opt_state, opt_metrics = opt.update(ocfg, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, caches, tokens, pos):
+        return model.decode_step(params, caches, tokens, pos)
+
+    return serve_step
+
+
+# -- dry-run input specs ------------------------------------------------------------
+
+def step_input_specs(cfg: ArchConfig, shape: WorkloadShape):
+    """ShapeDtypeStructs for every argument of the step for this shape.
+
+    Returns (step_fn_builder_name, specs_tuple) where specs_tuple matches
+    the positional signature of the corresponding step function.
+    """
+    model = build_model(cfg)
+    params_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.mode == "train":
+        batch = model.input_specs(batch=B, seq_len=S, mode="train")
+        opt_sds = jax.eval_shape(lambda: opt.init(params_sds))
+        return (params_sds, opt_sds, batch)
+
+    if shape.mode == "prefill":
+        batch = model.input_specs(batch=B, seq_len=S, mode="prefill")
+        return (params_sds, batch)
+
+    # decode: one token against a seq_len-deep cache
+    caches_sds = jax.eval_shape(lambda: model.init_caches(B, S))
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return (params_sds, caches_sds, tokens, pos)

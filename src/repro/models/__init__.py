@@ -1,0 +1,4 @@
+from repro.models.common import ArchConfig
+from repro.models.model import Model, build_model
+
+__all__ = ["ArchConfig", "Model", "build_model"]

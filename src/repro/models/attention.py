@@ -1,0 +1,275 @@
+"""Attention: RoPE, chunked online-softmax (flash-style) attention, and
+the attention-family block (full / sliding-window / cross / enc-dec).
+
+The chunked attention is the load-bearing piece for this box: it scans
+over KV chunks with a running (max, denominator, accumulator) triple, so
+neither the 32k-prefill compile nor the 500k-decode compile ever
+materializes a (Tq, Tk) score matrix. The same structure is what the
+Pallas flash kernel implements on real TPUs (``kernels/decode_attention``);
+this module is its jnp oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import ArchConfig, apply_norm, norm_init, activation, dense_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (B, T, H, hd); pos: (T,) int32 positions."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = pos.astype(jnp.float32)[:, None] * freqs[None, :]  # (T, half)
+    cos = jnp.cos(angles)[None, :, None, :]
+    sin = jnp.sin(angles)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention
+# ---------------------------------------------------------------------------
+
+def chunked_attention(
+    q: jax.Array,  # (B, Tq, H, hd)
+    k: jax.Array,  # (B, Tk, K, hd)
+    v: jax.Array,  # (B, Tk, K, hd)
+    q_pos: jax.Array,  # (Tq,) int32
+    k_pos: jax.Array,  # (Tk,) int32; negative = invalid slot
+    *,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 1024,
+    softcap: float = 0.0,
+    unroll: bool = False,
+) -> jax.Array:
+    B, Tq, H, hd = q.shape
+    Tk, K = k.shape[1], k.shape[2]
+    G = H // K
+    scale = hd**-0.5
+
+    chunk = min(chunk, Tk) if Tk else 1
+    if unroll:
+        # costing mode: cap the unrolled trip count at 16 by enlarging the
+        # chunk (FLOPs/bytes are chunk-size-invariant; only tiling changes)
+        chunk = max(chunk, -(-Tk // 16))
+    pad = (-Tk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-1)
+    n_chunks = k.shape[1] // chunk
+
+    qg = q.reshape(B, Tq, K, G, hd).astype(jnp.float32) * scale
+    kc = jnp.moveaxis(k.reshape(B, n_chunks, chunk, K, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n_chunks, chunk, K, hd), 1, 0)
+    pc = k_pos.reshape(n_chunks, chunk)
+
+    def body(carry, xs):
+        m, l, acc = carry  # (B,K,G,Tq), (B,K,G,Tq), (B,K,G,Tq,hd)
+        kk, vv, pp = xs
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kk.astype(jnp.float32))
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        valid = pp[None, :] >= 0  # (1, chunk)
+        if causal:
+            valid = valid & (pp[None, :] <= q_pos[:, None])
+        if window:
+            valid = valid & (pp[None, :] > q_pos[:, None] - window)
+        s = jnp.where(valid[None, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vv.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, G, Tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Tq), jnp.float32)
+    a0 = jnp.zeros((B, K, G, Tq, hd), jnp.float32)
+    if unroll:
+        carry = (m0, l0, a0)
+        for c in range(n_chunks):
+            carry, _ = body(carry, (kc[c], vc[c], pc[c]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B,K,G,Tq,hd)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, Tq, H, hd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache helpers
+# ---------------------------------------------------------------------------
+
+def make_ring_cache(k: jax.Array, v: jax.Array, window: int):
+    """Prefill -> ring cache holding the last `window` positions at slot
+    p % window. k/v: (B, S, K, hd)."""
+    B, S, K, hd = k.shape
+    W = min(window, S)
+    slots = jnp.arange(S - W, S) % window
+    ring_k = jnp.zeros((B, window, K, hd), k.dtype).at[:, slots].set(k[:, S - W :])
+    ring_v = jnp.zeros((B, window, K, hd), v.dtype).at[:, slots].set(v[:, S - W :])
+    return ring_k, ring_v
+
+
+def ring_positions(window: int, pos: jax.Array) -> jax.Array:
+    """Position stored at each ring slot after a write at ``pos``;
+    negative for not-yet-filled slots."""
+    i = jnp.arange(window)
+    return pos - ((pos - i) % window)
+
+
+# ---------------------------------------------------------------------------
+# Attention-family blocks
+# ---------------------------------------------------------------------------
+
+def mlp_init(cfg: ArchConfig, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(k1, cfg.d_model, cfg.d_ff),
+        "wi_up": dense_init(k2, cfg.d_model, cfg.d_ff),
+        "wo": dense_init(k3, cfg.d_ff, cfg.d_model),
+    }
+
+
+def mlp_apply(cfg: ArchConfig, p, x: jax.Array) -> jax.Array:
+    dt = cfg.dtype
+    h = activation(cfg, x @ p["wi_gate"].astype(dt)) * (x @ p["wi_up"].astype(dt))
+    return h @ p["wo"].astype(dt)
+
+
+def attn_init(cfg: ArchConfig, key, *, cross: bool = False):
+    ks = jax.random.split(key, 5)
+    kv_in = cfg.d_model  # enc states are projected to d_model upstream
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * cfg.hd),
+        "wk": dense_init(ks[1], kv_in, cfg.n_kv * cfg.hd),
+        "wv": dense_init(ks[2], kv_in, cfg.n_kv * cfg.hd),
+        "wo": dense_init(ks[3], cfg.n_heads * cfg.hd, cfg.d_model),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((cfg.hd,), jnp.float32)
+    return p
+
+
+def _qk_norm(x: jax.Array, scale: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf * lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+    return (y * scale).astype(x.dtype)
+
+
+def project_qkv(cfg: ArchConfig, p, x: jax.Array, kv_src: jax.Array):
+    dt = cfg.dtype
+    B, Tq, _ = x.shape
+    Tk = kv_src.shape[1]
+    q = (x @ p["wq"].astype(dt)).reshape(B, Tq, cfg.n_heads, cfg.hd)
+    k = (kv_src @ p["wk"].astype(dt)).reshape(B, Tk, cfg.n_kv, cfg.hd)
+    v = (kv_src @ p["wv"].astype(dt)).reshape(B, Tk, cfg.n_kv, cfg.hd)
+    if cfg.qk_norm:
+        q = _qk_norm(q, p["q_norm"])
+        k = _qk_norm(k, p["k_norm"])
+    return q, k, v
+
+
+def self_attention(
+    cfg: ArchConfig,
+    p,
+    x: jax.Array,
+    *,
+    mode: str,  # full | prefill | decode
+    window: int,
+    cache,  # {"k","v"} or None
+    pos,  # decode: scalar int32; else None
+    rope_theta: float | None = None,
+):
+    """Returns (attn_out, new_cache)."""
+    theta = rope_theta if rope_theta is not None else cfg.rope_theta
+    B, Tq, _ = x.shape
+    if mode in ("full", "prefill"):
+        q, k, v = project_qkv(cfg, p, x, x)
+        q_pos = jnp.arange(Tq, dtype=jnp.int32)
+        q = rope(q, q_pos, theta)
+        k = rope(k, q_pos, theta)
+        out = chunked_attention(
+            q, k, v, q_pos, q_pos, causal=True, window=window,
+            chunk=cfg.attn_chunk, unroll=cfg.costing,
+        )
+        new_cache = None
+        if mode == "prefill":
+            if window:
+                rk, rv = make_ring_cache(k, v, window)
+                new_cache = {"k": rk, "v": rv}
+            else:
+                new_cache = {"k": k, "v": v}
+    else:  # decode
+        q, k_new, v_new = project_qkv(cfg, p, x, x)
+        pos_arr = jnp.full((Tq,), pos, jnp.int32)
+        q = rope(q, pos_arr, theta)
+        k_new = rope(k_new, pos_arr, theta)
+        if window:
+            slot = pos % window
+            k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
+            v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
+            k_pos = ring_positions(window, pos)
+        else:
+            k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos, axis=1)
+            v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos, axis=1)
+            S = k_cache.shape[1]
+            k_pos = jnp.where(jnp.arange(S) <= pos, jnp.arange(S), -1)
+        out = chunked_attention(
+            q,
+            k_cache,
+            v_cache,
+            pos_arr,
+            k_pos.astype(jnp.int32),
+            causal=True,
+            window=window,
+            chunk=cfg.attn_chunk,
+            unroll=cfg.costing,
+        )
+        new_cache = {"k": k_cache, "v": v_cache}
+    return (out.reshape(B, Tq, -1) @ p["wo"].astype(cfg.dtype)), new_cache
+
+
+def cross_attention(cfg: ArchConfig, p, x: jax.Array, enc_kv):
+    """enc_kv: precomputed {"k","v"} (B, Tv, K, hd) from the encoder or
+    vision projector — computed once at prefill, static afterwards."""
+    dt = cfg.dtype
+    B, Tq, _ = x.shape
+    q = (x @ p["wq"].astype(dt)).reshape(B, Tq, cfg.n_heads, cfg.hd)
+    if cfg.qk_norm:
+        q = _qk_norm(q, p["q_norm"])
+    Tv = enc_kv["k"].shape[1]
+    k_pos = jnp.arange(Tv, dtype=jnp.int32)
+    q_pos = jnp.zeros((Tq,), jnp.int32)  # no causality vs. memory tokens
+    out = chunked_attention(
+        q, enc_kv["k"], enc_kv["v"], q_pos, k_pos, causal=False, window=0,
+        chunk=cfg.attn_chunk, unroll=cfg.costing,
+    )
+    return out.reshape(B, Tq, -1) @ p["wo"].astype(dt)
+
+
+def cross_kv(cfg: ArchConfig, p, enc_out: jax.Array):
+    """Project encoder/vision states to this block's K/V once."""
+    dt = cfg.dtype
+    B, Tv, _ = enc_out.shape
+    k = (enc_out @ p["wk"].astype(dt)).reshape(B, Tv, cfg.n_kv, cfg.hd)
+    v = (enc_out @ p["wv"].astype(dt)).reshape(B, Tv, cfg.n_kv, cfg.hd)
+    if cfg.qk_norm:
+        k = _qk_norm(k, p["k_norm"])
+    return {"k": k, "v": v}

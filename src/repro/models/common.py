@@ -1,0 +1,193 @@
+"""Shared model plumbing: config dataclass, norms, activations, init."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One architecture. ``cycle`` is the repeating block pattern; layers
+    = len(cycle) * n_cycles + len(tail). Block kinds:
+
+    attn        full-attention decoder block (GQA + GLU MLP)
+    swa         sliding-window attention block (window=cfg.window)
+    global      full attention (gemma3 naming, distinct rope_theta)
+    moe         attention + MoE FFN (full attn)
+    swa_moe     sliding-window attention + MoE FFN (mixtral)
+    cross       cross-attention block (VLM image layers)
+    selfcross   self-attn + cross-attn + MLP in one block (enc-dec decoder)
+    mamba2      Mamba-2 SSD block
+    slstm       xLSTM sLSTM block
+    mlstm       xLSTM mLSTM block
+    shared_attn Zamba2 shared transformer block (one weight set reused)
+    enc_attn    bidirectional encoder block
+    """
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm | cnn
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    cycle: tuple[str, ...] = ("attn",)
+    head_dim: int | None = None
+    # attention
+    rope_theta: float = 10_000.0
+    window: int = 0  # sliding window width for swa/local blocks
+    qk_norm: bool = False
+    norm_type: str = "rmsnorm"  # rmsnorm | layernorm | nonparam_ln
+    act: str = "silu"
+    attn_chunk: int = 1024  # online-softmax KV chunk
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # ssm
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_expand: int = 2
+    conv_width: int = 4
+    ssm_chunk: int = 256
+    # xlstm
+    lstm_proj_factor: float = 2.0
+    # enc-dec (audio)
+    enc_layers: int = 0
+    enc_seq_divisor: int = 4  # encoder frames = seq // divisor
+    # vlm
+    vision_tokens: int = 0
+    d_vision: int = 0
+    # output
+    tie_embeddings: bool = True
+    logit_softcap: float = 0.0
+    # compute dtype for activations
+    dtype: Any = jnp.bfloat16
+    # storage dtype for parameters. fp32 = training default (master
+    # weights); bf16 halves the resident weight bytes + HBM traffic for
+    # serving (§Perf iteration; the int-plane resident path in
+    # serving/quantized.py goes further, to k/16 of bf16)
+    param_dtype: Any = jnp.float32
+    # rematerialize cycle bodies in the training forward (memory/compute
+    # trade; §Perf iterates on this)
+    remat: bool = True
+    # costing mode: unroll every lax.scan (cycle stack, attention chunks,
+    # SSD chunks, CE chunks) so compiled.cost_analysis() counts loop
+    # bodies x trip_count. XLA's HLO cost analysis visits a while-loop
+    # body ONCE (verified; see EXPERIMENTS.md §Dry-run), so the scanned
+    # production model undercounts FLOPs/bytes/collectives by the trip
+    # counts. The costing variant is mathematically identical (scan
+    # unrolling does not change the computed function); only HLO size
+    # and compile time differ. Never use for real training.
+    costing: bool = False
+
+    def for_costing(self) -> "ArchConfig":
+        import dataclasses as _dc
+
+        return _dc.replace(self, costing=True)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def n_cycles(self) -> int:
+        return self.n_layers // len(self.cycle)
+
+    @property
+    def tail(self) -> tuple[str, ...]:
+        """Remainder blocks after full cycles, continuing the pattern."""
+        r = self.n_layers % len(self.cycle)
+        return self.cycle[:r]
+
+    @property
+    def uses_cross(self) -> bool:
+        return any(k in ("cross", "selfcross") for k in self.cycle)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True when no block does *unwindowed* attention over the full
+        sequence during prefill (SSM/SWA mixes count; a minority of
+        'global' layers is allowed for decode-only long-context shapes)."""
+        quad = {"attn", "moe", "cross", "selfcross", "enc_attn"}
+        return not any(k in quad for k in self.cycle)
+
+    def reduced(self, **overrides) -> "ArchConfig":
+        """Smoke-test variant: same family/pattern, tiny dims."""
+        small = dict(
+            n_layers=max(2, len(self.cycle)),
+            d_model=min(self.d_model, 128),
+            n_heads=min(self.n_heads, 4),
+            n_kv=min(self.n_kv, 2),
+            d_ff=min(self.d_ff, 256) if self.d_ff else 0,
+            vocab=min(self.vocab, 512),
+            head_dim=32 if self.head_dim else None,
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            # drop-free capacity (cf >= E/K) so prefill==decode exactly in
+            # consistency tests; production configs keep the real cf.
+            capacity_factor=4.0 if self.n_experts else self.capacity_factor,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_heads=min(self.ssm_heads, 2) if self.ssm_heads else 0,
+            enc_layers=min(self.enc_layers, 2) if self.enc_layers else 0,
+            vision_tokens=min(self.vision_tokens, 16) if self.vision_tokens else 0,
+            d_vision=min(self.d_vision, 64) if self.d_vision else 0,
+            window=min(self.window, 16) if self.window else 0,
+            attn_chunk=16,
+            ssm_chunk=8,
+            dtype=jnp.float32,
+        )
+        # keep n_kv dividing n_heads
+        if small["n_heads"] % max(small["n_kv"], 1):
+            small["n_kv"] = 1
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+# ---------------------------------------------------------------------------
+# Norms & activations
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: ArchConfig, d: int):
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm_type == "nonparam_ln":  # OLMo: LN without affine params
+        return {}
+    raise ValueError(cfg.norm_type)
+
+
+def apply_norm(cfg: ArchConfig, p, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + 1e-6)
+        y = y * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        if cfg.norm_type == "layernorm":
+            y = y * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+def activation(cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    if cfg.act == "silu":
+        return jax.nn.silu(x)
+    if cfg.act == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(cfg.act)
+
+
+def dense_init(key, d_in: int, d_out: int) -> jax.Array:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return scale * jax.random.normal(key, (d_in, d_out), jnp.float32)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return jnp.tanh(x / cap) * cap if cap else x

@@ -1,0 +1,73 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with capacity.
+
+Dispatch is the dense-dispatch formulation (one-hot dispatch/combine
+tensors), the standard JAX MoE layout: expert compute is
+(E, capacity) tokens, so HLO FLOPs reflect *active* expert compute
+(≈ top_k/E of dense-all-experts), which is what the roofline needs.
+Experts shard over the `model` mesh axis; the dispatch einsum then lowers
+to an all-to-all over that axis in the compiled collective schedule.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig, activation, dense_init
+
+
+def moe_init(cfg: ArchConfig, key):
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    s_in = (2.0 / (d + f)) ** 0.5
+    s_out = (2.0 / (d + f)) ** 0.5
+    return {
+        "router": dense_init(k0, d, E),
+        "we_gate": s_in * jax.random.normal(k1, (E, d, f), jnp.float32),
+        "we_up": s_in * jax.random.normal(k2, (E, d, f), jnp.float32),
+        "we_down": s_out * jax.random.normal(k3, (E, f, d), jnp.float32),
+    }
+
+
+def capacity(cfg: ArchConfig, n_tokens: int) -> int:
+    cap = int(cfg.capacity_factor * n_tokens * cfg.top_k / cfg.n_experts)
+    return max(cap, cfg.top_k)
+
+
+def moe_apply(cfg: ArchConfig, p, x: jax.Array):
+    """x: (B, T, d) -> (y, aux) where aux carries the load-balance loss
+    terms (mean router entropy + switch-style balance loss)."""
+    dt = cfg.dtype
+    B, T, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity(cfg, T)
+
+    logits = (x @ p["router"].astype(dt)).astype(jnp.float32)  # (B,T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # (B,T,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, k) in its expert's buffer
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (B,T,K,E)
+    flat = onehot.reshape(B, T * K, E)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat  # (B,T*K,E)
+    pos = (pos_in_expert * flat).sum(-1).reshape(B, T, K)  # (B,T,K)
+    keep = pos < C
+    gate_vals = gate_vals * keep
+
+    # dispatch: (B, T, E, C) one-hot; combine: weighted
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1, dtype=jnp.float32)[..., :C]
+    dispatch = jnp.einsum("btke,btkc->btec", onehot, pos_oh)  # (B,T,E,C)
+    combine = jnp.einsum("btke,btkc,btk->btec", onehot, pos_oh, gate_vals)
+
+    xin = jnp.einsum("btec,btd->becd", dispatch.astype(dt), x)  # (B,E,C,d)
+    h = activation(cfg, jnp.einsum("becd,edf->becf", xin, p["we_gate"].astype(dt)))
+    h = h * jnp.einsum("becd,edf->becf", xin, p["we_up"].astype(dt))
+    out = jnp.einsum("becf,efd->becd", h, p["we_down"].astype(dt))
+    y = jnp.einsum("btec,becd->btd", combine.astype(dt), out)
+
+    # Switch-transformer load-balance loss
+    me = probs.mean(axis=(0, 1))  # mean router prob per expert
+    ce = onehot.sum(2).reshape(B * T, E).mean(0)  # fraction routed per expert
+    balance_loss = E * jnp.sum(me * ce)
+    dropped = 1.0 - keep.mean()
+    return y, {"balance_loss": balance_loss, "dropped_frac": dropped}

@@ -1,0 +1,362 @@
+"""Recurrent blocks: Mamba-2 (SSD, chunked), xLSTM mLSTM and sLSTM.
+
+TPU adaptation notes (see DESIGN.md §7):
+* Mamba-2 runs in its chunked SSD form — intra-chunk work is a masked
+  matmul (MXU-friendly), inter-chunk state passing is a `lax.scan` over
+  chunk summaries. Mathematically identical to the step recurrence
+  (property-tested against it).
+* mLSTM/sLSTM run as `lax.scan` step recurrences (one HLO body regardless
+  of sequence length). A chunked mLSTM is a recorded hillclimb candidate.
+* Decode paths are single-step recurrences; state is the "KV cache" of
+  these blocks and is O(1) in sequence length — which is why the SSM and
+  hybrid architectures take the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import ArchConfig, dense_init
+
+# ---------------------------------------------------------------------------
+# Mamba-2
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads if cfg.ssm_heads else max(1, d_inner // 64)
+    hd = d_inner // H
+    return d_inner, H, hd, cfg.ssm_state
+
+
+def mamba2_init(cfg: ArchConfig, key):
+    d_inner, H, hd, N = mamba2_dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        # [z, x, B, C, dt] fused input projection
+        "in_proj": dense_init(ks[0], cfg.d_model, 2 * d_inner + 2 * N + H),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (cfg.conv_width, d_inner), jnp.float32),
+        "conv_b": jnp.zeros((d_inner,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01, jnp.float32))),
+        "out_norm": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[2], d_inner, cfg.d_model),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, T, C); w: (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(W))
+    return out + b
+
+
+def _split_proj(cfg: ArchConfig, p, u: jax.Array):
+    d_inner, H, hd, N = mamba2_dims(cfg)
+    zxbcdt = u @ p["in_proj"].astype(u.dtype)
+    z, x, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1
+    )
+    return z, x, Bm, Cm, dt
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array) -> jax.Array:
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    out = gf * lax.rsqrt(jnp.mean(gf * gf, axis=-1, keepdims=True) + 1e-6) * scale
+    return out.astype(y.dtype)
+
+
+def mamba2_forward(cfg: ArchConfig, p, u: jax.Array, state=None, return_state=False):
+    """Chunked SSD scan. u: (B, T, d_model) -> (B, T, d_model)."""
+    d_inner, H, hd, N = mamba2_dims(cfg)
+    B_, T, _ = u.shape
+    dtype = u.dtype
+    z, x, Bm, Cm, dt_raw = _split_proj(cfg, p, u)
+    x = jax.nn.silu(_causal_conv(x, p["conv_w"].astype(dtype), p["conv_b"].astype(dtype)))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    a_log = -dt * jnp.exp(p["A_log"])  # log decay, (B,T,H)
+
+    L = min(cfg.ssm_chunk, T)
+    if cfg.costing:
+        # unrolled below; cap trips at 16 (chunk size does not change FLOPs)
+        L = max(L, -(-T // 16))
+    pad = (-T) % L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))  # pad a=1? log a=0 -> pad ok
+    Tp = T + pad
+    nC = Tp // L
+
+    xh = x.reshape(B_, nC, L, H, hd)
+    Bc = Bm.reshape(B_, nC, L, N).astype(jnp.float32)
+    Cc = Cm.reshape(B_, nC, L, N).astype(jnp.float32)
+    dtc = dt.reshape(B_, nC, L, H)
+    alc = a_log.reshape(B_, nC, L, H)
+
+    def chunk_body(S, xs):
+        xk, Bk, Ck, dtk, alk = xs  # (B,L,...)
+        cum = jnp.cumsum(alk, axis=1)  # (B,L,H) inclusive
+        # intra-chunk: masked decay matmul
+        seg = cum[:, :, None, :] - cum[:, None, :, :]  # (B,i,j,H)
+        ii = jnp.arange(L)
+        mask = ii[:, None] >= ii[None, :]
+        decay = jnp.where(mask[None, :, :, None], jnp.exp(seg), 0.0)
+        CB = jnp.einsum("bin,bjn->bij", Ck, Bk)
+        W = CB[..., None] * decay * dtk[:, None, :, :]  # (B,i,j,H)
+        y = jnp.einsum("bijh,bjhd->bihd", W, xk.astype(jnp.float32))
+        # inter-chunk: contribution of incoming state
+        y = y + jnp.einsum("bin,bih,bhnd->bihd", Ck, jnp.exp(cum), S)
+        # state update
+        rem = jnp.exp(cum[:, -1:, :] - cum)  # decay from j to chunk end
+        S_new = jnp.exp(cum[:, -1])[:, :, None, None] * S + jnp.einsum(
+            "bjh,bjn,bjhd->bhnd", dtk * rem, Bk, xk.astype(jnp.float32)
+        )
+        return S_new, y
+
+    S0 = (
+        jnp.zeros((B_, H, N, hd), jnp.float32)
+        if state is None
+        else state.astype(jnp.float32)
+    )
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xh, Bc, Cc, dtc, alc))
+    if cfg.costing:
+        S_fin, ys_l = S0, []
+        for c in range(nC):
+            S_fin, y_c = chunk_body(S_fin, tuple(t[c] for t in xs))
+            ys_l.append(y_c)
+        ys = jnp.stack(ys_l)
+    else:
+        S_fin, ys = lax.scan(chunk_body, S0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B_, Tp, H, hd)[:, :T]
+    y = y + x[:, :T].reshape(B_, T, H, hd).astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B_, T, d_inner).astype(dtype)
+    out = _gated_norm(y, z, p["out_norm"]) @ p["out_proj"].astype(dtype)
+    if return_state:
+        return out, S_fin
+    return out
+
+
+def mamba2_init_cache(cfg: ArchConfig, batch: int, dtype):
+    d_inner, H, hd, N = mamba2_dims(cfg)
+    return {
+        "state": jnp.zeros((batch, H, N, hd), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, d_inner), dtype),
+    }
+
+
+def mamba2_prefill(cfg: ArchConfig, p, u: jax.Array):
+    """Full forward + final recurrent state as cache."""
+    d_inner, H, hd, N = mamba2_dims(cfg)
+    out, S = mamba2_forward(cfg, p, u, return_state=True)
+    # conv cache: last (W-1) pre-conv x values
+    _, x, *_ = _split_proj(cfg, p, u)
+    Wc = cfg.conv_width
+    conv_cache = x[:, -(Wc - 1) :, :]
+    pad = Wc - 1 - conv_cache.shape[1]
+    if pad > 0:
+        conv_cache = jnp.pad(conv_cache, ((0, 0), (pad, 0), (0, 0)))
+    return out, {"state": S, "conv": conv_cache}
+
+
+def mamba2_step(cfg: ArchConfig, p, u: jax.Array, cache):
+    """Single-token decode. u: (B, 1, d_model)."""
+    d_inner, H, hd, N = mamba2_dims(cfg)
+    dtype = u.dtype
+    z, x, Bm, Cm, dt_raw = _split_proj(cfg, p, u)  # (B,1,·)
+    conv_in = jnp.concatenate([cache["conv"], x], axis=1)  # (B, W, d_inner)
+    w = p["conv_w"].astype(dtype)
+    xc = jax.nn.silu((conv_in * w[None, :, :]).sum(axis=1, keepdims=True) + p["conv_b"].astype(dtype))
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(-dt * jnp.exp(p["A_log"]))  # (B,H)
+    xh = xc[:, 0].reshape(-1, H, hd).astype(jnp.float32)
+    Bv = Bm[:, 0].astype(jnp.float32)  # (B,N)
+    Cv = Cm[:, 0].astype(jnp.float32)
+    S = cache["state"]
+    S = a[:, :, None, None] * S + jnp.einsum(
+        "bh,bn,bhd->bhnd", dt, Bv, xh
+    )
+    y = jnp.einsum("bn,bhnd->bhd", Cv, S) + xh * p["D"][None, :, None]
+    y = y.reshape(-1, 1, d_inner).astype(dtype)
+    out = _gated_norm(y, z, p["out_norm"]) @ p["out_proj"].astype(dtype)
+    return out, {"state": S, "conv": conv_in[:, 1:, :]}
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory)
+# ---------------------------------------------------------------------------
+
+def mlstm_dims(cfg: ArchConfig):
+    d_inner = int(cfg.lstm_proj_factor * cfg.d_model)
+    H = cfg.n_heads
+    return d_inner, H, d_inner // H
+
+
+def mlstm_init(cfg: ArchConfig, key):
+    d_inner, H, hd = mlstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "up_proj": dense_init(ks[0], cfg.d_model, 2 * d_inner),
+        "wq": dense_init(ks[1], d_inner, d_inner),
+        "wk": dense_init(ks[2], d_inner, d_inner),
+        "wv": dense_init(ks[3], d_inner, d_inner),
+        "w_if": dense_init(ks[4], d_inner, 2 * H),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]).astype(jnp.float32),
+        "out_norm": jnp.ones((d_inner,), jnp.float32),
+        "down_proj": dense_init(ks[5], d_inner, cfg.d_model),
+    }
+
+
+def _mlstm_qkvif(cfg, p, u):
+    d_inner, H, hd = mlstm_dims(cfg)
+    dt = u.dtype
+    xz = u @ p["up_proj"].astype(dt)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    B_, T, _ = x_in.shape
+    q = (x_in @ p["wq"].astype(dt)).reshape(B_, T, H, hd)
+    k = (x_in @ p["wk"].astype(dt)).reshape(B_, T, H, hd) * (hd**-0.5)
+    v = (x_in @ p["wv"].astype(dt)).reshape(B_, T, H, hd)
+    i_f = (x_in @ p["w_if"].astype(dt)).astype(jnp.float32) + p["b_if"]
+    i_raw, f_raw = jnp.split(i_f, 2, axis=-1)  # (B,T,H)
+    return x_in, z, q, k, v, i_raw, f_raw
+
+
+def _mlstm_cell(carry, xs):
+    """Stabilized mLSTM step. carry: (C, n, m)."""
+    C, n, m = carry  # (B,H,hd,hd), (B,H,hd), (B,H)
+    q, k, v, i_raw, f_raw = xs  # (B,H,hd) x3, (B,H) x2
+    f_log = -jax.nn.softplus(-f_raw)  # log sigmoid(f)
+    m_new = jnp.maximum(f_log + m, i_raw)
+    i_g = jnp.exp(i_raw - m_new)
+    f_g = jnp.exp(f_log + m - m_new)
+    C_new = f_g[..., None, None] * C + i_g[..., None, None] * (
+        v[..., :, None] * k[..., None, :]
+    )
+    n_new = f_g[..., None] * n + i_g[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_new, q)), jnp.exp(-m_new))
+    h = jnp.einsum("bhvd,bhd->bhv", C_new, q) / denom[..., None]
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_forward(cfg: ArchConfig, p, u: jax.Array, cache=None, return_cache=False):
+    d_inner, H, hd = mlstm_dims(cfg)
+    B_, T, _ = u.shape
+    x_in, z, q, k, v, i_raw, f_raw = _mlstm_qkvif(cfg, p, u)
+    if cache is None:
+        C0 = jnp.zeros((B_, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B_, H, hd), jnp.float32)
+        m0 = jnp.zeros((B_, H), jnp.float32)
+    else:
+        C0, n0, m0 = cache["C"], cache["n"], cache["m"]
+    xs = (
+        jnp.moveaxis(q.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(k.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(v.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(i_raw, 1, 0),
+        jnp.moveaxis(f_raw, 1, 0),
+    )
+    (C, n, m), hs = lax.scan(_mlstm_cell, (C0, n0, m0), xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B_, T, d_inner).astype(u.dtype)
+    from repro.models.ssm import _gated_norm  # self-import for clarity
+
+    out = _gated_norm(h, z, p["out_norm"]) @ p["down_proj"].astype(u.dtype)
+    if return_cache:
+        return out, {"C": C, "n": n, "m": m}
+    return out
+
+
+def mlstm_init_cache(cfg: ArchConfig, batch: int, dtype):
+    d_inner, H, hd = mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+    }
+
+
+def mlstm_step(cfg: ArchConfig, p, u: jax.Array, cache):
+    out, new_cache = mlstm_forward(cfg, p, u, cache=cache, return_cache=True)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: sLSTM (scalar memory, per-head recurrent mixing)
+# ---------------------------------------------------------------------------
+
+def slstm_dims(cfg: ArchConfig):
+    d_inner = cfg.d_model  # sLSTM operates at model width
+    H = cfg.n_heads
+    return d_inner, H, d_inner // H
+
+
+def slstm_init(cfg: ArchConfig, key):
+    d_inner, H, hd = slstm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": dense_init(ks[0], cfg.d_model, 4 * d_inner),  # z i f o
+        "r": 0.1 * jax.random.normal(ks[1], (H, hd, 4 * hd), jnp.float32),
+        "b": jnp.zeros((4 * d_inner,), jnp.float32),
+        "out_norm": jnp.ones((d_inner,), jnp.float32),
+        "up_proj": dense_init(ks[2], d_inner, int(4 * d_inner / 3)),
+        "down_proj": dense_init(ks[3], int(4 * d_inner / 3), cfg.d_model),
+    }
+
+
+def _slstm_cell(p_r, carry, x_t):
+    """x_t: (B, 4*d_inner) pre-activations from input; recurrent term
+    added from h via block-diagonal per-head R."""
+    c, n, h, m = carry  # (B,d_inner) x3, (B,H)
+    B_ = h.shape[0]
+    H, hd, _ = p_r.shape
+    hh = h.reshape(B_, H, hd)
+    rec = jnp.einsum("bhd,hdf->bhf", hh, p_r).reshape(B_, 4 * H * hd)
+    z_r, i_r, f_r, o_r = jnp.split(x_t + rec, 4, axis=-1)
+    zh = jnp.tanh(z_r)
+    oh = jax.nn.sigmoid(o_r)
+    i_rh = i_r.reshape(B_, H, hd)
+    f_rh = f_r.reshape(B_, H, hd)
+    f_log = -jax.nn.softplus(-f_rh)
+    m_new = jnp.maximum(f_log.max(-1) + m, i_rh.max(-1))  # per-head stabilizer
+    i_g = jnp.exp(i_rh - m_new[..., None]).reshape(B_, -1)
+    f_g = jnp.exp(f_log + (m - m_new)[..., None]).reshape(B_, -1)
+    c_new = f_g * c + i_g * zh
+    n_new = f_g * n + i_g
+    h_new = oh * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_forward(cfg: ArchConfig, p, u: jax.Array, cache=None, return_cache=False):
+    d_inner, H, hd = slstm_dims(cfg)
+    B_, T, _ = u.shape
+    x_pre = (u @ p["w_in"].astype(u.dtype)).astype(jnp.float32) + p["b"]
+    if cache is None:
+        zeros = jnp.zeros((B_, d_inner), jnp.float32)
+        carry = (zeros, zeros, zeros, jnp.zeros((B_, H), jnp.float32))
+    else:
+        carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    cell = lambda cr, xt: _slstm_cell(p["r"], cr, xt)
+    (c, n, h, m), hs = lax.scan(cell, carry, jnp.moveaxis(x_pre, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(u.dtype)  # (B,T,d_inner)
+    yf = y.astype(jnp.float32)
+    y = (yf * lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6) * p["out_norm"]).astype(u.dtype)
+    out = jax.nn.gelu(y @ p["up_proj"].astype(u.dtype)) @ p["down_proj"].astype(u.dtype)
+    if return_cache:
+        return out, {"c": c, "n": n, "h": h, "m": m}
+    return out
+
+
+def slstm_init_cache(cfg: ArchConfig, batch: int, dtype):
+    d_inner, H, hd = slstm_dims(cfg)
+    z = jnp.zeros((batch, d_inner), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": jnp.zeros((batch, H), jnp.float32)}
+
+
+def slstm_step(cfg: ArchConfig, p, u: jax.Array, cache):
+    out, new_cache = slstm_forward(cfg, p, u, cache=cache, return_cache=True)
+    return out, new_cache

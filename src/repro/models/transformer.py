@@ -1,0 +1,359 @@
+"""Pattern-scan stack executor.
+
+A model is a repeating cycle of block kinds (cfg.cycle) executed
+``n_cycles`` times under ``lax.scan`` with parameters stacked over the
+cycle dimension, plus an unrolled tail for the remainder layers. HLO size
+is therefore O(len(cycle)), not O(n_layers) — a 100-layer model compiles
+as fast as a 5-layer one, which is what makes 80 dry-run compiles
+feasible (and is just good practice on real TPUs too).
+
+Caches mirror the parameter layout: one stacked pytree per cycle slot
+plus per-tail-block pytrees. ``shared_attn`` blocks (Zamba2) read their
+weights from a single non-stacked store and only their caches are
+per-occurrence.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.common import ArchConfig, apply_norm, norm_init, dense_init
+
+ZERO_AUX = lambda: {"balance_loss": jnp.float32(0.0), "dropped_frac": jnp.float32(0.0)}
+
+ATTN_KINDS = {"attn", "swa", "global", "moe", "swa_moe", "shared_attn", "enc_attn"}
+
+
+# ---------------------------------------------------------------------------
+# Per-block init / apply
+# ---------------------------------------------------------------------------
+
+def block_init(cfg: ArchConfig, key, kind: str):
+    ks = jax.random.split(key, 4)
+    if kind in ("attn", "swa", "global", "shared_attn", "enc_attn"):
+        return {
+            "norm1": norm_init(cfg, cfg.d_model),
+            "attn": attn.attn_init(cfg, ks[0]),
+            "norm2": norm_init(cfg, cfg.d_model),
+            "mlp": attn.mlp_init(cfg, ks[1]),
+        }
+    if kind in ("moe", "swa_moe"):
+        return {
+            "norm1": norm_init(cfg, cfg.d_model),
+            "attn": attn.attn_init(cfg, ks[0]),
+            "norm2": norm_init(cfg, cfg.d_model),
+            "moe": moe_mod.moe_init(cfg, ks[1]),
+        }
+    if kind == "cross":
+        return {
+            "norm1": norm_init(cfg, cfg.d_model),
+            "attn": attn.attn_init(cfg, ks[0], cross=True),
+            "gate_attn": jnp.zeros((), jnp.float32),
+            "norm2": norm_init(cfg, cfg.d_model),
+            "mlp": attn.mlp_init(cfg, ks[1]),
+            "gate_mlp": jnp.zeros((), jnp.float32),
+        }
+    if kind == "selfcross":
+        return {
+            "norm1": norm_init(cfg, cfg.d_model),
+            "self_attn": attn.attn_init(cfg, ks[0]),
+            "norm_x": norm_init(cfg, cfg.d_model),
+            "cross_attn": attn.attn_init(cfg, ks[1], cross=True),
+            "norm2": norm_init(cfg, cfg.d_model),
+            "mlp": attn.mlp_init(cfg, ks[2]),
+        }
+    if kind == "mamba2":
+        return {"norm1": norm_init(cfg, cfg.d_model), "mixer": ssm.mamba2_init(cfg, ks[0])}
+    if kind == "mlstm":
+        return {"norm1": norm_init(cfg, cfg.d_model), "mixer": ssm.mlstm_init(cfg, ks[0])}
+    if kind == "slstm":
+        return {"norm1": norm_init(cfg, cfg.d_model), "mixer": ssm.slstm_init(cfg, ks[0])}
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def _attn_window(cfg: ArchConfig, kind: str) -> int:
+    if kind in ("swa", "swa_moe"):
+        return cfg.window
+    return 0
+
+
+def _attn_theta(cfg: ArchConfig, kind: str) -> float:
+    # gemma3-style: global layers use a larger rope base
+    if kind == "global":
+        return getattr(cfg, "rope_theta", 1e4) * 100.0
+    return cfg.rope_theta
+
+
+def block_apply(cfg: ArchConfig, kind: str, p, x, *, mode: str, cache, pos, enc_out):
+    """Returns (x, new_cache, aux)."""
+    aux = ZERO_AUX()
+    if kind in ("attn", "swa", "global", "shared_attn", "enc_attn"):
+        h = apply_norm(cfg, p["norm1"], x)
+        if kind == "enc_attn":
+            q, k, v = attn.project_qkv(cfg, p["attn"], h, h)
+            T = h.shape[1]
+            qpos = jnp.arange(T, dtype=jnp.int32)
+            q = attn.rope(q, qpos, cfg.rope_theta)
+            k = attn.rope(k, qpos, cfg.rope_theta)
+            o = attn.chunked_attention(
+                q, k, v, qpos, qpos, causal=False, window=0,
+                chunk=cfg.attn_chunk, unroll=cfg.costing,
+            )
+            a_out = o.reshape(*h.shape[:2], -1) @ p["attn"]["wo"].astype(cfg.dtype)
+            new_cache = None
+        else:
+            a_out, new_cache = attn.self_attention(
+                cfg,
+                p["attn"],
+                h,
+                mode=mode,
+                window=_attn_window(cfg, kind),
+                cache=cache,
+                pos=pos,
+                rope_theta=_attn_theta(cfg, kind),
+            )
+        x = x + a_out
+        h2 = apply_norm(cfg, p["norm2"], x)
+        x = x + attn.mlp_apply(cfg, p["mlp"], h2)
+        return x, new_cache, aux
+
+    if kind in ("moe", "swa_moe"):
+        h = apply_norm(cfg, p["norm1"], x)
+        a_out, new_cache = attn.self_attention(
+            cfg,
+            p["attn"],
+            h,
+            mode=mode,
+            window=_attn_window(cfg, kind),
+            cache=cache,
+            pos=pos,
+        )
+        x = x + a_out
+        h2 = apply_norm(cfg, p["norm2"], x)
+        m_out, moe_aux = moe_mod.moe_apply(cfg, p["moe"], h2)
+        x = x + m_out
+        aux = {k: aux[k] + jnp.float32(moe_aux[k]) for k in aux}
+        return x, new_cache, aux
+
+    if kind == "cross":
+        h = apply_norm(cfg, p["norm1"], x)
+        if mode == "decode":
+            kv = cache
+            new_cache = cache  # static after prefill
+        else:
+            kv = attn.cross_kv(cfg, p["attn"], enc_out)
+            new_cache = kv if mode == "prefill" else None
+        a_out = attn.cross_attention(cfg, p["attn"], h, kv)
+        x = x + jnp.tanh(p["gate_attn"]).astype(cfg.dtype) * a_out
+        h2 = apply_norm(cfg, p["norm2"], x)
+        x = x + jnp.tanh(p["gate_mlp"]).astype(cfg.dtype) * attn.mlp_apply(cfg, p["mlp"], h2)
+        return x, new_cache, aux
+
+    if kind == "selfcross":
+        h = apply_norm(cfg, p["norm1"], x)
+        self_cache = cache["self"] if cache is not None else None
+        a_out, new_self = attn.self_attention(
+            cfg, p["self_attn"], h, mode=mode, window=0, cache=self_cache, pos=pos
+        )
+        x = x + a_out
+        hx = apply_norm(cfg, p["norm_x"], x)
+        if mode == "decode":
+            kv = cache["cross"]
+            new_cross = kv
+        else:
+            kv = attn.cross_kv(cfg, p["cross_attn"], enc_out)
+            new_cross = kv if mode == "prefill" else None
+        x = x + attn.cross_attention(cfg, p["cross_attn"], hx, kv)
+        h2 = apply_norm(cfg, p["norm2"], x)
+        x = x + attn.mlp_apply(cfg, p["mlp"], h2)
+        new_cache = None
+        if mode in ("prefill", "decode"):
+            new_cache = {"self": new_self, "cross": new_cross}
+        return x, new_cache, aux
+
+    if kind == "mamba2":
+        h = apply_norm(cfg, p["norm1"], x)
+        if mode == "full":
+            out = ssm.mamba2_forward(cfg, p["mixer"], h)
+            new_cache = None
+        elif mode == "prefill":
+            out, new_cache = ssm.mamba2_prefill(cfg, p["mixer"], h)
+        else:
+            out, new_cache = ssm.mamba2_step(cfg, p["mixer"], h, cache)
+        return x + out, new_cache, aux
+
+    if kind in ("mlstm", "slstm"):
+        fwd = ssm.mlstm_forward if kind == "mlstm" else ssm.slstm_forward
+        step = ssm.mlstm_step if kind == "mlstm" else ssm.slstm_step
+        h = apply_norm(cfg, p["norm1"], x)
+        if mode == "full":
+            out = fwd(cfg, p["mixer"], h)
+            new_cache = None
+        elif mode == "prefill":
+            out, new_cache = fwd(cfg, p["mixer"], h, return_cache=True)
+        else:
+            out, new_cache = step(cfg, p["mixer"], h, cache)
+        return x + out, new_cache, aux
+
+    raise ValueError(f"unknown block kind {kind}")
+
+
+# ---------------------------------------------------------------------------
+# Cache construction (shape-only safe: works under jax.eval_shape)
+# ---------------------------------------------------------------------------
+
+def block_init_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int, enc_len: int):
+    dt = cfg.dtype
+    if kind in ("attn", "global", "moe"):
+        return {
+            "k": jnp.zeros((batch, max_len, cfg.n_kv, cfg.hd), dt),
+            "v": jnp.zeros((batch, max_len, cfg.n_kv, cfg.hd), dt),
+        }
+    if kind == "shared_attn":  # Zamba2 shared block: full attention
+        return {
+            "k": jnp.zeros((batch, max_len, cfg.n_kv, cfg.hd), dt),
+            "v": jnp.zeros((batch, max_len, cfg.n_kv, cfg.hd), dt),
+        }
+    if kind in ("swa", "swa_moe"):
+        W = cfg.window if cfg.window else max_len  # ring buffer size
+        return {
+            "k": jnp.zeros((batch, W, cfg.n_kv, cfg.hd), dt),
+            "v": jnp.zeros((batch, W, cfg.n_kv, cfg.hd), dt),
+        }
+    if kind == "cross":
+        return {
+            "k": jnp.zeros((batch, enc_len, cfg.n_kv, cfg.hd), dt),
+            "v": jnp.zeros((batch, enc_len, cfg.n_kv, cfg.hd), dt),
+        }
+    if kind == "selfcross":
+        return {
+            "self": {
+                "k": jnp.zeros((batch, max_len, cfg.n_kv, cfg.hd), dt),
+                "v": jnp.zeros((batch, max_len, cfg.n_kv, cfg.hd), dt),
+            },
+            "cross": {
+                "k": jnp.zeros((batch, enc_len, cfg.n_kv, cfg.hd), dt),
+                "v": jnp.zeros((batch, enc_len, cfg.n_kv, cfg.hd), dt),
+            },
+        }
+    if kind == "mamba2":
+        return ssm.mamba2_init_cache(cfg, batch, dt)
+    if kind == "mlstm":
+        return ssm.mlstm_init_cache(cfg, batch, dt)
+    if kind == "slstm":
+        return ssm.slstm_init_cache(cfg, batch, dt)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Stack init / run
+# ---------------------------------------------------------------------------
+
+def _stacked_init(cfg: ArchConfig, key, kind: str, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: block_init(cfg, k, kind))(keys)
+
+
+def stack_init(cfg: ArchConfig, key) -> dict:
+    """Params for the decoder stack (cycles + tail + shared)."""
+    out: dict[str, Any] = {"cycles": {}, "tail": {}}
+    n_slots = len(cfg.cycle)
+    keys = jax.random.split(key, n_slots + len(cfg.tail) + 1)
+    for j, kind in enumerate(cfg.cycle):
+        if kind == "shared_attn":
+            continue
+        out["cycles"][f"{j}_{kind}"] = _stacked_init(cfg, keys[j], kind, cfg.n_cycles)
+    for i, kind in enumerate(cfg.tail):
+        if kind == "shared_attn":
+            continue
+        out["tail"][f"{i}_{kind}"] = block_init(cfg, keys[n_slots + i], kind)
+    if "shared_attn" in cfg.cycle + cfg.tail:
+        out["shared"] = block_init(cfg, keys[-1], "shared_attn")
+    return out
+
+
+def stack_init_caches(cfg: ArchConfig, batch: int, max_len: int, enc_len: int = 0):
+    caches: dict[str, Any] = {"cycles": {}, "tail": {}}
+    for j, kind in enumerate(cfg.cycle):
+        one = block_init_cache(cfg, kind, batch, max_len, enc_len)
+        caches["cycles"][f"{j}_{kind}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_cycles,) + a.shape), one
+        )
+    for i, kind in enumerate(cfg.tail):
+        caches["tail"][f"{i}_{kind}"] = block_init_cache(cfg, kind, batch, max_len, enc_len)
+    return caches
+
+
+def run_stack(
+    cfg: ArchConfig,
+    params: dict,
+    x: jax.Array,
+    *,
+    mode: str,  # full | prefill | decode
+    caches=None,
+    pos=None,
+    enc_out=None,
+):
+    """Returns (x, new_caches, aux)."""
+    cycle = cfg.cycle
+    aux0 = ZERO_AUX()
+    shared = params.get("shared")
+
+    def cycle_body(carry, xs):
+        x, aux = carry
+        cyc_params, cyc_caches = xs
+        new_caches = {}
+        for j, kind in enumerate(cycle):
+            slot = f"{j}_{kind}"
+            p = shared if kind == "shared_attn" else cyc_params[slot]
+            c = cyc_caches[slot] if cyc_caches is not None else None
+            x, nc, a = block_apply(
+                cfg, kind, p, x, mode=mode, cache=c, pos=pos, enc_out=enc_out
+            )
+            if nc is not None:
+                new_caches[slot] = nc
+            aux = {k: aux[k] + a[k] for k in aux}
+        return (x, aux), new_caches if new_caches else None
+
+    if cfg.n_cycles > 0:
+        cyc_caches = caches["cycles"] if caches is not None else None
+        xs = (params["cycles"], cyc_caches)
+        body = cycle_body
+        if mode == "full" and cfg.remat:
+            body = jax.checkpoint(cycle_body, prevent_cse=False)
+        if cfg.costing:
+            # unrolled for cost_analysis fidelity (see ArchConfig.costing)
+            carry = (x, aux0)
+            per_cycle = []
+            for r in range(cfg.n_cycles):
+                xs_r = jax.tree.map(lambda a: a[r], xs)
+                carry, y_r = body(carry, xs_r)
+                per_cycle.append(y_r)
+            (x, aux) = carry
+            ys = (
+                jax.tree.map(lambda *zs: jnp.stack(zs), *per_cycle)
+                if per_cycle[0] is not None
+                else None
+            )
+        else:
+            (x, aux), ys = lax.scan(body, (x, aux0), xs)
+        new_caches = {"cycles": ys, "tail": {}}
+    else:
+        aux = aux0
+        new_caches = {"cycles": None, "tail": {}}
+
+    for i, kind in enumerate(cfg.tail):
+        slot = f"{i}_{kind}"
+        p = shared if kind == "shared_attn" else params["tail"][slot]
+        c = caches["tail"][slot] if caches is not None else None
+        x, nc, a = block_apply(cfg, kind, p, x, mode=mode, cache=c, pos=pos, enc_out=enc_out)
+        if nc is not None:
+            new_caches["tail"][slot] = nc
+        aux = {k: aux[k] + a[k] for k in aux}
+    return x, (new_caches if mode in ("prefill", "decode") else None), aux

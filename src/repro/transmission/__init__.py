@@ -1,0 +1,19 @@
+"""Transmission substrate: bandwidth simulation, the Fig.-4 concurrent
+transmission/inference scheduler, and the progressive client."""
+from repro.transmission.simulator import Link, TransferEvent, simulate_transfer
+from repro.transmission.scheduler import (
+    Timeline,
+    singleton_timeline,
+    progressive_timeline,
+)
+from repro.transmission.client import ProgressiveClient
+
+__all__ = [
+    "Link",
+    "TransferEvent",
+    "simulate_transfer",
+    "Timeline",
+    "singleton_timeline",
+    "progressive_timeline",
+    "ProgressiveClient",
+]

@@ -1,0 +1,134 @@
+"""Progressive client: byte stream -> ReceiverState.
+
+Consumes the wire format produced by :mod:`repro.core.wire` incrementally
+(arbitrary chunk boundaries — a transport delivers bytes, not planes),
+OR-accumulates planes as they complete (eq. 4), and exposes
+``materialize()`` for inference at the current precision.
+
+This is the framework's equivalent of the paper's browser client; the
+serving engine drives the same state machine with device-resident
+accumulators.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import wire, bitplanes
+from repro.core.quantize import QuantizedTensor, dequantize, container_dtype
+
+
+@dataclasses.dataclass
+class _TensorState:
+    meta: dict
+    acc: np.ndarray
+    planes_received: int = 0
+
+    @property
+    def effective_bits(self) -> int:
+        return sum(self.meta["widths"][: self.planes_received])
+
+
+class ProgressiveClient:
+    """Incremental decoder of the progressive wire format."""
+
+    def __init__(self, on_stage_complete: Callable[[int], None] | None = None):
+        self._buf = bytearray()
+        self._meta = None
+        self._layout: wire.StageLayout | None = None
+        self._tensors: list[_TensorState] = []
+        self._cursor = 0          # absolute offset of next undecoded byte
+        self._stage = 0           # completed stages
+        self._entry = 0           # next entry within current stage
+        self._on_stage_complete = on_stage_complete
+
+    # -- feeding -----------------------------------------------------------
+    def feed(self, chunk: bytes) -> None:
+        self._buf.extend(chunk)
+        self._advance()
+
+    @property
+    def stages_complete(self) -> int:
+        return self._stage
+
+    @property
+    def header_ready(self) -> bool:
+        return self._meta is not None
+
+    @property
+    def expected_total_bytes(self) -> int | None:
+        return self._layout.total_bytes if self._layout else None
+
+    def _advance(self) -> None:
+        if self._meta is None:
+            if len(self._buf) < 12:
+                return
+            import struct
+
+            _, n = struct.unpack("<II", bytes(self._buf[4:12]))
+            if len(self._buf) < 12 + n:
+                return
+            self._meta, hdr = wire.decode_header(bytes(self._buf))
+            self._layout = wire.layout_from_header(self._meta, hdr)
+            self._cursor = hdr
+            for t in self._meta["tensors"]:
+                n_el = int(np.prod(t["shape"])) if t["shape"] else 1
+                self._tensors.append(
+                    _TensorState(
+                        meta=t,
+                        acc=np.zeros(n_el, dtype=np.uint32),
+                    )
+                )
+        # Decode completed planes.
+        assert self._layout is not None
+        while self._stage < len(self._layout.stages):
+            entries = self._layout.stages[self._stage]
+            while self._entry < len(entries):
+                idx, w, nbytes, n_el = entries[self._entry]
+                if len(self._buf) - self._cursor < nbytes:
+                    return
+                payload = bytes(self._buf[self._cursor : self._cursor + nbytes])
+                vals = wire.decode_plane(payload, w, n_el)
+                ts = self._tensors[idx]
+                cum_before = sum(ts.meta["widths"][: ts.planes_received])
+                shift = ts.meta["bits"] - cum_before - w
+                ts.acc |= vals.astype(np.uint32) << shift
+                ts.planes_received += 1
+                self._cursor += nbytes
+                self._entry += 1
+            self._stage += 1
+            self._entry = 0
+            if self._on_stage_complete:
+                self._on_stage_complete(self._stage)
+
+    # -- inference-side view -------------------------------------------------
+    def materialize(self):
+        """Current approximate params as a flat {path: array} dict (eq. 5;
+        sliced tensors are stacked back along their slice axis)."""
+        if self._meta is None:
+            raise RuntimeError("header not received yet")
+        pieces: dict[str, list] = {}
+        for ts in self._tensors:
+            m = ts.meta
+            qt = QuantizedTensor(
+                q=jnp.asarray(ts.acc.astype(container_dtype(m["bits"]))).reshape(m["shape"]),
+                lo=jnp.float32(m["lo"]),
+                hi=jnp.float32(m["hi"]),
+                bits=m["bits"],
+                orig_dtype=np.dtype(m["dtype"]),
+            )
+            val = dequantize(qt, received_bits=ts.effective_bits)
+            pieces.setdefault(m["path"], []).append(
+                (m.get("slice_idx", 0), m.get("slice_axis"), val))
+        out = {}
+        for path, parts in pieces.items():
+            if len(parts) == 1 and parts[0][1] is None:
+                out[path] = parts[0][2]
+            else:
+                axis = parts[0][1]
+                parts.sort(key=lambda x: x[0])
+                out[path] = jnp.stack([v for _, _, v in parts], axis=axis)
+        return out

@@ -1,0 +1,177 @@
+"""Pallas kernel sweeps: every kernel vs its pure-jnp oracle across
+shapes / dtypes / bit-widths (interpret=True executes the kernel body on
+CPU with TPU semantics)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitplanes
+from repro.core.quantize import quantize, container_dtype
+from repro.kernels import ref
+from repro.kernels.bitplane import plane_extract, plane_or
+from repro.kernels.decode_attention import flash_decode
+from repro.kernels.dequant_matmul import dequant_matmul
+
+
+# ---------------------------------------------------------------------------
+# dequant_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,K,N", [(8, 16, 8), (96, 200, 130), (128, 128, 128),
+                                   (1, 64, 257), (33, 500, 65)])
+@pytest.mark.parametrize("bits", [4, 8, 16])
+def test_dequant_matmul_shapes_bits(M, K, N, bits):
+    kx, kw = jax.random.split(jax.random.PRNGKey(M * 1000 + K + N + bits))
+    x = jax.random.normal(kx, (M, K), jnp.float32)
+    w = jax.random.normal(kw, (K, N), jnp.float32) * 3.0 + 0.5
+    qt = quantize(w, bits)
+    y = dequant_matmul(x, qt.q, qt.lo, qt.hi, bits=bits,
+                       bm=32, bn=64, bk=64, interpret=True)
+    yr = ref.dequant_matmul_ref(x, qt.q, qt.lo, qt.hi, bits)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=3e-5, atol=3e-4)
+
+
+@pytest.mark.parametrize("x_dtype", [jnp.float32, jnp.bfloat16])
+def test_dequant_matmul_input_dtypes(x_dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 64)).astype(x_dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 48))
+    qt = quantize(w, 16)
+    y = dequant_matmul(x, qt.q, qt.lo, qt.hi, bits=16, bm=16, bn=16, bk=32,
+                       interpret=True)
+    yr = ref.dequant_matmul_ref(x.astype(jnp.float32), qt.q, qt.lo, qt.hi, 16)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("received", [2, 6, 10, 16])
+def test_dequant_matmul_partial_precision(received):
+    """Consuming a truncated accumulator must equal the oracle at the
+    received precision (the serving engine's mid-transmission matmul)."""
+    from repro.core.quantize import truncate
+
+    x = jax.random.normal(jax.random.PRNGKey(2), (16, 40))
+    w = jax.random.normal(jax.random.PRNGKey(3), (40, 24))
+    qt = truncate(quantize(w, 16), received)
+    y = dequant_matmul(x, qt.q, qt.lo, qt.hi, bits=16, received_bits=received,
+                       bm=16, bn=16, bk=16, interpret=True)
+    yr = ref.dequant_matmul_ref(x, qt.q, qt.lo, qt.hi, 16, received_bits=received)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=3e-5, atol=3e-4)
+
+
+def test_dequant_matmul_zero_received_uses_range_centre():
+    x = jnp.ones((4, 8))
+    q = jnp.zeros((8, 4), jnp.uint16)
+    lo, hi = jnp.float32(-1.0), jnp.float32(3.0)
+    y = dequant_matmul(x, q, lo, hi, bits=16, received_bits=0,
+                       bm=4, bn=4, bk=8, interpret=True)
+    np.testing.assert_allclose(np.asarray(y), 8 * 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# bitplane kernels
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(7,), (64,), (37, 53), (3, 5, 11)])
+@pytest.mark.parametrize("widths", [(2,) * 8, (1, 3, 12), (8, 8), (16,)])
+def test_plane_extract_or_roundtrip(shape, widths):
+    x = jax.random.normal(jax.random.PRNGKey(sum(shape)), shape)
+    qt = quantize(x, 16)
+    cum = (0,) + bitplanes.cumulative(widths)
+    acc = jnp.zeros_like(qt.q)
+    for m, w in enumerate(widths, 1):
+        pk = plane_extract(qt.q, bits=16, before=cum[m - 1], width=w,
+                           interpret=True)
+        want = bitplanes.split_plane(qt.q, 16, widths, m)
+        assert (np.asarray(pk) == np.asarray(want, np.uint16)).all()
+        acc = plane_or(acc, pk, shift=16 - cum[m], interpret=True)
+    assert (np.asarray(acc) == np.asarray(qt.q)).all()
+
+
+@pytest.mark.parametrize("bits", [4, 8, 16])
+def test_plane_or_matches_ref(bits):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(bits))
+    dt = container_dtype(bits)
+    acc = jax.random.randint(k1, (129,), 0, 2 ** (bits // 2)).astype(dt)
+    plane = jax.random.randint(k2, (129,), 0, 4).astype(dt)
+    shift = bits - 2
+    got = plane_or(acc, plane, shift=shift, interpret=True)
+    want = ref.plane_or_ref(acc, plane, shift)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+# ---------------------------------------------------------------------------
+# flash decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,Kh,hd,S", [
+    (1, 4, 4, 32, 64),     # MHA
+    (2, 8, 2, 64, 300),    # GQA, ragged S
+    (2, 16, 1, 32, 128),   # MQA
+    (1, 8, 8, 128, 1024),  # long-ish
+])
+def test_flash_decode_vs_ref(B, H, Kh, hd, S):
+    ks = jax.random.split(jax.random.PRNGKey(B + H + S), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, S, Kh, hd))
+    v = jax.random.normal(ks[2], (B, S, Kh, hd))
+    pos = S * 3 // 4
+    k_pos = jnp.where(jnp.arange(S) <= pos, jnp.arange(S), -1)
+    o = flash_decode(q, k, v, k_pos, jnp.int32(pos), bs=128, interpret=True)
+    orf = ref.flash_decode_ref(q, k, v, k_pos, jnp.int32(pos))
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_decode_window(window):
+    B, H, Kh, hd, S = 2, 8, 4, 32, 200
+    ks = jax.random.split(jax.random.PRNGKey(window), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, S, Kh, hd))
+    v = jax.random.normal(ks[2], (B, S, Kh, hd))
+    pos = 150
+    k_pos = jnp.where(jnp.arange(S) <= pos, jnp.arange(S), -1)
+    o = flash_decode(q, k, v, k_pos, jnp.int32(pos), window=window, bs=64,
+                     interpret=True)
+    orf = ref.flash_decode_ref(q, k, v, k_pos, jnp.int32(pos), window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_softcap_and_ring_positions():
+    """Ring-buffer slot positions (unordered, with overwrites) must work."""
+    from repro.models.attention import ring_positions
+
+    B, H, Kh, hd, W = 1, 4, 2, 32, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, W, Kh, hd))
+    v = jax.random.normal(ks[2], (B, W, Kh, hd))
+    pos = 50  # ring has wrapped
+    k_pos = ring_positions(W, jnp.int32(pos))
+    o = flash_decode(q, k, v, k_pos, jnp.int32(pos), window=W, softcap=20.0,
+                     bs=16, interpret=True)
+    orf = ref.flash_decode_ref(q, k, v, k_pos, jnp.int32(pos), window=W,
+                               softcap=20.0)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_matches_model_attention():
+    """The kernel must agree with the model's chunked_attention decode
+    path (the jnp oracle used by every architecture)."""
+    from repro.models.attention import chunked_attention
+
+    B, H, Kh, hd, S = 2, 8, 4, 32, 96
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q1 = jax.random.normal(ks[0], (B, 1, H, hd))
+    k = jax.random.normal(ks[1], (B, S, Kh, hd))
+    v = jax.random.normal(ks[2], (B, S, Kh, hd))
+    pos = 64
+    k_pos = jnp.where(jnp.arange(S) <= pos, jnp.arange(S), -1)
+    got = flash_decode(q1[:, 0], k, v, k_pos, jnp.int32(pos), bs=32,
+                       interpret=True)
+    want = chunked_attention(
+        q1, k, v, jnp.full((1,), pos, jnp.int32), k_pos.astype(jnp.int32),
+        causal=True, window=0, chunk=32,
+    )[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,161 @@
+"""Per-architecture smoke tests on reduced variants (2 layers-ish,
+d_model <= 512, <= 4 experts): one forward + one train step on CPU with
+shape and finiteness asserts, plus prefill+decode vs full-forward
+consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models.model import build_model
+from repro.train import optimizer as opt
+from repro.launch.steps import make_train_step
+
+ARCH_LIST = [a for a in ARCHS if a != "progressivenet_cnn"]
+
+
+def tiny_batch(cfg, B=2, S=24, seed=0):
+    k = jax.random.PRNGKey(seed)
+    batch = {
+        "tokens": jax.random.randint(k, (B, S), 0, cfg.vocab).astype(jnp.int32),
+        "labels": jax.random.randint(k, (B, S), 0, cfg.vocab).astype(jnp.int32),
+    }
+    if cfg.enc_layers:
+        batch["enc_input"] = 0.1 * jax.random.normal(
+            jax.random.fold_in(k, 1),
+            (B, max(1, S // cfg.enc_seq_divisor), cfg.d_model),
+        ).astype(cfg.dtype)
+    if cfg.vision_tokens:
+        batch["vision_embeds"] = 0.1 * jax.random.normal(
+            jax.random.fold_in(k, 2), (B, cfg.vision_tokens, cfg.d_vision)
+        ).astype(cfg.dtype)
+    return batch
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.mark.parametrize("arch", ARCH_LIST)
+def test_reduced_dims_within_smoke_budget(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.d_model <= 512 and cfg.n_layers <= max(2, len(cfg.cycle))
+    assert cfg.n_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCH_LIST)
+def test_forward_shapes_and_finite(arch):
+    cfg, model, params = _setup(arch)
+    B, S = 2, 24
+    batch = tiny_batch(cfg, B, S)
+    logits, aux = model.forward(params, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux["balance_loss"]))
+
+
+@pytest.mark.parametrize("arch", ARCH_LIST)
+def test_one_train_step_no_nans(arch):
+    cfg, model, params = _setup(arch)
+    batch = tiny_batch(cfg)
+    step = jax.jit(make_train_step(model, opt.OptConfig(lr=1e-3, total_steps=10)))
+    opt_state = opt.init(params)
+    params2, opt_state2, metrics = step(params, opt_state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a - b))) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2))
+    )
+    assert moved
+    for leaf in jax.tree.leaves(params2):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+@pytest.mark.parametrize("arch", ARCH_LIST)
+def test_prefill_decode_matches_full_forward(arch):
+    """Teacher-forced decode after prefill must reproduce the full
+    forward's logits (same tokens), validating every cache path. MoE
+    reduced configs use drop-free capacity so routing is identical."""
+    cfg, model, params = _setup(arch)
+    B, S, extra = 1, 16, 4
+    batch = tiny_batch(cfg, B, S + extra, seed=3)
+    full_logits, _ = model.forward(params, batch)
+
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = batch["tokens"][:, :S]
+    pre_batch.pop("labels")
+    last, caches = model.prefill(params, pre_batch)
+    np.testing.assert_allclose(
+        np.asarray(last), np.asarray(full_logits[:, S - 1]), rtol=2e-3, atol=2e-3
+    )
+
+    caches = model.grow_caches(caches, S + extra)
+    for t in range(extra):
+        tok = batch["tokens"][:, S + t : S + t + 1]
+        logits, caches = model.decode_step(params, caches, tok, jnp.int32(S + t))
+        np.testing.assert_allclose(
+            np.asarray(logits),
+            np.asarray(full_logits[:, S + t]),
+            rtol=3e-3,
+            atol=3e-3,
+            err_msg=f"{arch} decode step {t}",
+        )
+
+
+@pytest.mark.parametrize("arch", ["gemma3-27b", "mixtral-8x22b"])
+def test_sliding_window_ring_cache_consistency(arch):
+    """Run decode past the window so the ring buffer wraps; logits must
+    still match the full forward (window semantics are position-based)."""
+    cfg = get_config(arch).reduced(window=8, attn_chunk=8)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    B, S, extra = 1, 12, 6  # decode positions 12..17 > window 8
+    batch = tiny_batch(cfg, B, S + extra, seed=5)
+    full_logits, _ = model.forward(params, batch)
+    pre = {"tokens": batch["tokens"][:, :S]}
+    last, caches = model.prefill(params, pre)
+    caches = model.grow_caches(caches, S + extra)
+    for t in range(extra):
+        tok = batch["tokens"][:, S + t : S + t + 1]
+        logits, caches = model.decode_step(params, caches, tok, jnp.int32(S + t))
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full_logits[:, S + t]),
+            rtol=3e-3, atol=3e-3, err_msg=f"step {t}",
+        )
+
+
+@pytest.mark.parametrize("arch", ARCH_LIST)
+def test_costing_variant_same_function(arch):
+    """cfg.costing unrolls scans but must compute the same function."""
+    cfg, model, params = _setup(arch)
+    model_c = build_model(cfg.for_costing())
+    batch = tiny_batch(cfg, seed=9)
+    la, _ = model.forward(params, batch)
+    lb, _ = model_c.forward(params, batch)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb), rtol=2e-4, atol=2e-4)
+
+
+def test_input_specs_cover_all_inputs():
+    for arch in ARCH_LIST:
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        for mode in ("train", "prefill", "decode"):
+            specs = model.input_specs(batch=4, seq_len=64, mode=mode)
+            assert "tokens" in specs
+            if mode != "decode":
+                if cfg.enc_layers:
+                    assert "enc_input" in specs
+                if cfg.vision_tokens:
+                    assert "vision_embeds" in specs

@@ -1,0 +1,108 @@
+"""Property tests for eq. (2)/(5): floor quantizer + half-LSB dequant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantize import (
+    QuantizedTensor,
+    container_dtype,
+    dequantize,
+    quantize,
+    quantization_error_bound,
+    truncate,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def arrays(min_size=1, max_size=64):
+    return st.lists(
+        st.floats(-1e4, 1e4, allow_nan=False, width=32),
+        min_size=min_size,
+        max_size=max_size,
+    ).map(lambda xs: np.asarray(xs, np.float32))
+
+
+@settings(max_examples=60, deadline=None)
+@given(arrays(), st.integers(1, 16))
+def test_roundtrip_error_bound(x, bits):
+    qt = quantize(jnp.asarray(x), bits)
+    xr = np.asarray(dequantize(qt))
+    bound = float(quantization_error_bound(qt))
+    assert np.all(np.abs(x - xr) <= bound), (np.max(np.abs(x - xr)), bound)
+
+
+@settings(max_examples=40, deadline=None)
+@given(arrays(), st.integers(1, 16))
+def test_q_in_range(x, bits):
+    qt = quantize(jnp.asarray(x), bits)
+    q = np.asarray(qt.q, np.uint32)
+    assert q.max() < 2**bits
+    assert np.asarray(qt.q).dtype == container_dtype(bits)
+
+
+@settings(max_examples=40, deadline=None)
+@given(arrays(min_size=2), st.integers(2, 16))
+def test_monotone(x, bits):
+    """Quantization preserves order (floor of a monotone map)."""
+    qt = quantize(jnp.asarray(x), bits)
+    q = np.asarray(qt.q, np.int64)
+    order = np.argsort(x, kind="stable")
+    assert np.all(np.diff(q[order]) >= 0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(arrays(), st.integers(2, 16), st.data())
+def test_truncation_is_coarser_quantization_grid(x, bits, data):
+    """Floor quantizer prefix property (why the paper floors): the top m
+    bits of q<k> equal q<m> computed directly — bit-plane prefixes ARE
+    the lower-precision model."""
+    m = data.draw(st.integers(1, bits))
+    qt = quantize(jnp.asarray(x), bits)
+    q_hi = np.asarray(qt.q, np.uint32) >> (bits - m)
+    q_m = np.asarray(quantize(jnp.asarray(x), m).q, np.uint32)
+    # identical up to one-off at exact grid boundaries from fp rounding
+    assert np.all(np.abs(q_hi.astype(np.int64) - q_m.astype(np.int64)) <= 1)
+    exact = np.mean(q_hi == q_m)
+    assert exact > 0.95 or x.size < 20
+
+
+@settings(max_examples=30, deadline=None)
+@given(arrays(min_size=4), st.integers(4, 16))
+def test_error_shrinks_with_bits(x, bits):
+    qt = quantize(jnp.asarray(x), bits)
+    errs = []
+    for m in range(1, bits + 1):
+        xr = np.asarray(dequantize(truncate(qt, m), received_bits=m))
+        errs.append(float(np.max(np.abs(x - xr))))
+    # worst-case error at m bits is bounded by span/2^m (+ slack)
+    span = float(qt.hi - qt.lo) + 1e-9
+    for m, e in enumerate(errs, 1):
+        assert e <= span * 0.5**m * 0.5 + span * 1e-4 + 1e-6
+
+
+def test_constant_tensor():
+    x = jnp.full((8, 8), 3.14159)
+    qt = quantize(x, 16)
+    xr = dequantize(qt)
+    np.testing.assert_allclose(np.asarray(xr), 3.14159, atol=1e-5)
+
+
+def test_received_bits_zero_gives_range_centre():
+    x = jnp.asarray([0.0, 1.0, 2.0])
+    qt = quantize(x, 16)
+    out = dequantize(QuantizedTensor(jnp.zeros_like(qt.q), qt.lo, qt.hi, 16),
+                     received_bits=0)
+    np.testing.assert_allclose(np.asarray(out), 1.0, atol=1e-5)
+
+
+def test_bits_validation():
+    with pytest.raises(ValueError):
+        quantize(jnp.ones(3), 0)
+    with pytest.raises(ValueError):
+        quantize(jnp.ones(3), 33)
+    qt = quantize(jnp.ones(3), 8)
+    with pytest.raises(ValueError):
+        dequantize(qt, received_bits=9)

@@ -1,0 +1,91 @@
+"""Fig.-4 timeline algebra: the concurrency claim is a theorem about the
+schedule; these tests pin it down."""
+import pytest
+
+from repro.transmission.scheduler import (
+    StageCost,
+    overhead_pct,
+    progressive_timeline,
+    singleton_timeline,
+    time_to_first_useful,
+)
+from repro.transmission.simulator import Link, bytes_available, simulate_transfer
+
+
+LINK = Link(bandwidth_bytes_per_s=1e6)
+
+
+def test_singleton():
+    t = singleton_timeline(8_000_000, LINK, StageCost(0.1, 0.1, 0.3))
+    assert t.download_done == [8.0]
+    assert t.total_s == pytest.approx(8.5)
+
+
+def test_concurrent_hides_processing():
+    """Paper Table I: with concurrency, total == singleton total whenever
+    each stage's processing fits inside the next stage's download."""
+    stage_bytes = [1_000_000] * 8
+    costs = [StageCost(0.05, 0.05, 0.4)] * 8  # 0.5s < 1s download window
+    prog = progressive_timeline(stage_bytes, LINK, costs, concurrent=True)
+    single = singleton_timeline(8_000_000, LINK, costs[-1])
+    assert overhead_pct(prog, single) == pytest.approx(0.0, abs=1e-9)
+    # and the first approximate result appears ~7s earlier
+    assert prog.first_result_s == pytest.approx(1.5)
+
+
+def test_non_concurrent_pays_processing_serially():
+    stage_bytes = [1_000_000] * 8
+    costs = [StageCost(0.05, 0.05, 0.4)] * 8
+    prog = progressive_timeline(stage_bytes, LINK, costs, concurrent=False)
+    single = singleton_timeline(8_000_000, LINK, costs[-1])
+    # paper's +20..80% band: here 8 * 0.5s processing on an 8.5s baseline
+    assert overhead_pct(prog, single) == pytest.approx(100 * (12.0 - 8.5) / 8.5)
+
+
+def test_slow_processing_shows_at_last_stage_only():
+    """If processing is *slower* than a stage download, concurrency can't
+    hide all of it — total grows by the spill of the last stages."""
+    stage_bytes = [1_000_000] * 4
+    costs = [StageCost(0.0, 0.0, 1.5)] * 4
+    prog = progressive_timeline(stage_bytes, LINK, costs, concurrent=True)
+    # downloads end at 1,2,3,4; processing: start 1..2.5, 2.5..4, 4..5.5, 5.5..7
+    assert prog.result_ready[-1] == pytest.approx(7.0)
+
+
+def test_result_ready_monotone_and_after_download():
+    stage_bytes = [500_000, 1_500_000, 1_000_000]
+    costs = [StageCost(0.01, 0.02, 0.1)] * 3
+    for concurrent in (True, False):
+        t = progressive_timeline(stage_bytes, LINK, costs, concurrent=concurrent)
+        assert all(a <= b for a, b in zip(t.result_ready, t.result_ready[1:]))
+        assert all(d <= r for d, r in zip(t.download_done, t.result_ready))
+
+
+def test_time_to_first_useful():
+    stage_bytes = [1_000_000] * 8
+    costs = [StageCost(0, 0, 0.1)] * 8
+    t = progressive_timeline(stage_bytes, LINK, costs, concurrent=True)
+    # paper: 6-bit (= stage 3 of the 2-bit schedule) is the first useful
+    assert time_to_first_useful(t, 3) == pytest.approx(3.1)
+
+
+def test_header_bytes_shift_everything():
+    stage_bytes = [1_000_000] * 2
+    costs = [StageCost(0, 0, 0)] * 2
+    a = progressive_timeline(stage_bytes, LINK, costs, True, header_bytes=0)
+    b = progressive_timeline(stage_bytes, LINK, costs, True, header_bytes=1_000_000)
+    assert b.download_done[0] - a.download_done[0] == pytest.approx(1.0)
+
+
+def test_simulator_bytes_available_mid_payload():
+    ev = simulate_transfer([("a", 1_000_000), ("b", 1_000_000)], LINK)
+    assert bytes_available(ev, 0.5) == 500_000
+    assert bytes_available(ev, 1.5) == 1_500_000
+    assert bytes_available(ev, 3.0) == 2_000_000
+
+
+def test_latency_paid_once():
+    link = Link(bandwidth_bytes_per_s=1e6, latency_s=0.2)
+    ev = simulate_transfer([("a", 1_000_000), ("b", 1_000_000)], link)
+    assert ev[0].start_s == pytest.approx(0.2)
+    assert ev[1].end_s == pytest.approx(2.2)

@@ -1,0 +1,110 @@
+"""Recurrent-block equivalences: the chunked/parallel forms used for TPU
+must match the step recurrences used at decode, token for token."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import ssm
+from repro.models.common import ArchConfig
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("zamba2-7b").reduced(ssm_chunk=4)
+
+
+def test_mamba2_chunked_equals_stepwise(cfg):
+    """Chunked SSD scan == one-token-at-a-time recurrence."""
+    p = ssm.mamba2_init(cfg, jax.random.PRNGKey(0))
+    B, T = 2, 13  # deliberately not a chunk multiple
+    u = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.d_model))
+    full = ssm.mamba2_forward(cfg, p, u)
+
+    cache = ssm.mamba2_init_cache(cfg, B, u.dtype)
+    outs = []
+    for t in range(T):
+        o, cache = ssm.mamba2_step(cfg, p, u[:, t : t + 1], cache)
+        outs.append(o)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_mamba2_prefill_state_continues_decode(cfg):
+    p = ssm.mamba2_init(cfg, jax.random.PRNGKey(0))
+    B, T, extra = 1, 8, 3
+    u = 0.5 * jax.random.normal(jax.random.PRNGKey(2), (B, T + extra, cfg.d_model))
+    full = ssm.mamba2_forward(cfg, p, u)
+    out_p, cache = ssm.mamba2_prefill(cfg, p, u[:, :T])
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(full[:, :T]),
+                               rtol=2e-4, atol=2e-4)
+    for t in range(extra):
+        o, cache = ssm.mamba2_step(cfg, p, u[:, T + t : T + t + 1], cache)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(full[:, T + t : T + t + 1]),
+                                   rtol=2e-4, atol=2e-4, err_msg=f"t={t}")
+
+
+def test_mamba2_chunk_size_invariance(cfg):
+    """FLOP-count knob must not change the math."""
+    p = ssm.mamba2_init(cfg, jax.random.PRNGKey(0))
+    u = 0.5 * jax.random.normal(jax.random.PRNGKey(3), (1, 16, cfg.d_model))
+    a = ssm.mamba2_forward(cfg, p, u)
+    cfg2 = dataclasses.replace(cfg, ssm_chunk=16)
+    b = ssm.mamba2_forward(cfg2, p, u)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+@pytest.fixture(scope="module")
+def xcfg():
+    return get_config("xlstm-125m").reduced()
+
+
+def test_mlstm_forward_continues_from_cache(xcfg):
+    p = ssm.mlstm_init(xcfg, jax.random.PRNGKey(0))
+    B, T, extra = 2, 9, 4
+    u = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (B, T + extra, xcfg.d_model))
+    full = ssm.mlstm_forward(xcfg, p, u)
+    out, cache = ssm.mlstm_forward(xcfg, p, u[:, :T], return_cache=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(full[:, :T]),
+                               rtol=2e-4, atol=2e-4)
+    for t in range(extra):
+        o, cache = ssm.mlstm_step(xcfg, p, u[:, T + t : T + t + 1], cache)
+        np.testing.assert_allclose(
+            np.asarray(o), np.asarray(full[:, T + t : T + t + 1]),
+            rtol=2e-4, atol=2e-4, err_msg=f"t={t}")
+
+
+def test_slstm_forward_continues_from_cache(xcfg):
+    p = ssm.slstm_init(xcfg, jax.random.PRNGKey(0))
+    B, T, extra = 2, 9, 4
+    u = 0.5 * jax.random.normal(jax.random.PRNGKey(2), (B, T + extra, xcfg.d_model))
+    full = ssm.slstm_forward(xcfg, p, u)
+    out, cache = ssm.slstm_forward(xcfg, p, u[:, :T], return_cache=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(full[:, :T]),
+                               rtol=2e-4, atol=2e-4)
+    for t in range(extra):
+        o, cache = ssm.slstm_step(xcfg, p, u[:, T + t : T + t + 1], cache)
+        np.testing.assert_allclose(
+            np.asarray(o), np.asarray(full[:, T + t : T + t + 1]),
+            rtol=2e-4, atol=2e-4, err_msg=f"t={t}")
+
+
+def test_mlstm_stability_long_sequence(xcfg):
+    """Stabilized gates must not overflow over long ranges."""
+    p = ssm.mlstm_init(xcfg, jax.random.PRNGKey(0))
+    u = jax.random.normal(jax.random.PRNGKey(3), (1, 256, xcfg.d_model))
+    out = ssm.mlstm_forward(xcfg, p, u)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_state_is_constant_size(xcfg, cfg):
+    """The whole point of SSM/hybrid long-context: cache size independent
+    of sequence length."""
+    for c, init in ((cfg, ssm.mamba2_init_cache), (xcfg, ssm.mlstm_init_cache)):
+        cache = init(c, 2, jnp.float32)
+        n = sum(x.size for x in jax.tree.leaves(cache))
+        assert n < 5e6  # O(1), not O(S)

@@ -1,0 +1,109 @@
+"""Training loop learns; progressive checkpoints roundtrip and cold-start."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.policy import UniformPolicy
+from repro.core.bitplanes import PlaneSchedule
+from repro.models.model import build_model
+from repro.train import checkpoint, optimizer as opt
+from repro.train.data import DataConfig, MarkovMotifDataset, Prefetcher
+from repro.train.loop import train
+
+
+def test_data_deterministic_and_learnable_structure():
+    cfg = DataConfig(vocab=256, seq_len=64, global_batch=4, seed=1)
+    ds = MarkovMotifDataset(cfg)
+    a = ds.batch(3)
+    b = ds.batch(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].shape == (4, 64)
+    assert (a["labels"][:, :-1] == a["tokens"][:, 1:]).all()
+
+
+def test_prefetcher_yields_in_order():
+    cfg = DataConfig(vocab=64, seq_len=16, global_batch=2)
+    ds = MarkovMotifDataset(cfg)
+    pf = Prefetcher(ds)
+    try:
+        b0 = pf.next()
+        b1 = pf.next()
+        np.testing.assert_array_equal(b0["tokens"], ds.batch(0)["tokens"])
+        np.testing.assert_array_equal(b1["tokens"], ds.batch(1)["tokens"])
+    finally:
+        pf.close()
+
+
+@pytest.mark.slow
+def test_training_learns():
+    """Loss on the structured stream must drop well below the first-step
+    value in ~100 steps at tiny scale (validated curve: 4.19 -> ~2.3)."""
+    cfg = get_config("olmo-1b").reduced(n_layers=2, d_model=128, d_ff=256,
+                                        vocab=64, n_heads=4, n_kv=4)
+    model = build_model(cfg)
+    res = train(
+        model,
+        steps=100,
+        data_cfg=DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=16),
+        opt_cfg=opt.OptConfig(lr=1e-2, warmup_steps=20, total_steps=100),
+        log_every=10,
+    )
+    first = res.history[0]["loss"]
+    best_late = min(h["loss"] for h in res.history[len(res.history) // 2 :])
+    assert best_late < first - 1.0, (first, best_late)
+
+
+def test_progressive_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("olmo-1b").reduced(n_layers=2, d_model=64, d_ff=128,
+                                        vocab=128, n_heads=2, n_kv=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ckpt = str(tmp_path / "ckpt")
+    checkpoint.save(params, ckpt)
+    assert os.path.exists(os.path.join(ckpt, "header.bin"))
+    assert os.path.exists(os.path.join(ckpt, "stage_08.bin"))
+
+    restored = checkpoint.load_into(ckpt, params)
+    # 16-bit quantization error only
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        span = float(jnp.max(a) - jnp.min(a)) + 1e-9
+        assert float(jnp.max(jnp.abs(a - b))) <= span / 2**16 + 1e-6
+
+
+def test_progressive_checkpoint_coldstart_partial(tmp_path):
+    """Loading only the first stages must produce a *usable* (finite,
+    increasingly accurate) model — the cold-start path."""
+    cfg = get_config("olmo-1b").reduced(n_layers=2, d_model=64, d_ff=128,
+                                        vocab=128, n_heads=2, n_kv=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ckpt = str(tmp_path / "ckpt")
+    checkpoint.save(params, ckpt)
+
+    batch = {"tokens": jnp.zeros((1, 8), jnp.int32)}
+    ref_logits, _ = model.forward(params, batch)
+    errs = []
+    for stages in (1, 4, 8):
+        approx = checkpoint.load_into(ckpt, params, stages=stages)
+        logits, _ = model.forward(approx, batch)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        errs.append(float(jnp.mean((logits - ref_logits) ** 2)))
+    assert errs[0] > errs[1] > errs[2]
+    assert errs[2] < 1e-4
+
+
+def test_checkpoint_manifest(tmp_path):
+    cfg = get_config("olmo-1b").reduced(n_layers=2, d_model=32, d_ff=64,
+                                        vocab=64, n_heads=2, n_kv=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ckpt = str(tmp_path / "c")
+    checkpoint.save(params, ckpt, UniformPolicy(PlaneSchedule(bits=8, widths=(4, 4))))
+    m = checkpoint.manifest(ckpt)
+    assert set(m["stage_bytes"]) == {1, 2}
+    # equal widths -> equal stage sizes
+    assert m["stage_bytes"][1] == m["stage_bytes"][2]

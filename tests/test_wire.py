@@ -1,0 +1,103 @@
+"""Wire format + incremental client: arbitrary chunk boundaries must
+reconstruct exactly what the in-memory pipeline produces."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import wire
+from repro.core.progressive import ReceiverState, divide
+from repro.transmission.client import ProgressiveClient
+
+
+@pytest.fixture(scope="module")
+def setup():
+    k = jax.random.PRNGKey(1)
+    params = {
+        "w1": jax.random.normal(k, (24, 8)),
+        "w2": jax.random.normal(jax.random.fold_in(k, 1), (7,)),  # odd size
+        "scale": jnp.float32(2.5),  # scalar tensor
+    }
+    model = divide(params)
+    blob = wire.encode(model)
+    return params, model, blob
+
+
+def test_total_wire_size_is_singleton_plus_header(setup):
+    params, model, blob = setup
+    hdr = len(wire.encode_header(model))
+    stage_total = sum(
+        len(wire.encode_stage(model, s)) for s in range(1, model.n_stages + 1)
+    )
+    assert len(blob) == hdr + stage_total
+    assert stage_total <= model.singleton_payload_bytes() + model.padding_overhead_bound()
+
+
+def test_header_roundtrip(setup):
+    _, model, blob = setup
+    meta, hdr = wire.decode_header(blob)
+    assert meta["n_stages"] == model.n_stages
+    assert len(meta["tensors"]) == len(model.tensors)
+    layout = wire.layout_from_header(meta, hdr)
+    assert layout.total_bytes == len(blob)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 257))
+def test_client_chunked_feed_any_boundary(chunk_size):
+    k = jax.random.PRNGKey(2)
+    params = {"w": jax.random.normal(k, (16, 6))}
+    model = divide(params)
+    blob = wire.encode(model)
+
+    client = ProgressiveClient()
+    for i in range(0, len(blob), chunk_size):
+        client.feed(blob[i : i + chunk_size])
+    assert client.stages_complete == model.n_stages
+
+    # must equal the in-memory receiver at full precision
+    st_ref = ReceiverState.init(model)
+    for s in range(1, model.n_stages + 1):
+        st_ref = st_ref.receive(model.stage(s))
+    ref = st_ref.materialize()
+    got = client.materialize()
+    np.testing.assert_array_equal(
+        np.asarray(got["w"]), np.asarray(ref["w"])
+    )
+
+
+def test_client_partial_precision_matches_receiver(setup):
+    params, model, blob = setup
+    meta, hdr = wire.decode_header(blob)
+    layout = wire.layout_from_header(meta, hdr)
+    upto = hdr + sum(layout.stage_bytes[:3])
+
+    client = ProgressiveClient()
+    client.feed(blob[:upto])
+    assert client.stages_complete == 3
+    got = client.materialize()
+
+    st_ref = ReceiverState.init(model)
+    for s in range(1, 4):
+        st_ref = st_ref.receive(model.stage(s))
+    ref = st_ref.materialize()
+    leaves, _ = jax.tree_util.tree_flatten_with_path(ref)
+    for path, leaf in leaves:
+        key = wire.path_str(path)
+        np.testing.assert_array_equal(np.asarray(got[key]).reshape(leaf.shape),
+                                      np.asarray(leaf))
+
+
+def test_stage_callback(setup):
+    _, model, blob = setup
+    seen = []
+    client = ProgressiveClient(on_stage_complete=seen.append)
+    client.feed(blob)
+    assert seen == list(range(1, model.n_stages + 1))
+
+
+def test_bad_magic():
+    client = ProgressiveClient()
+    with pytest.raises(ValueError):
+        client.feed(b"XXXX" + b"\0" * 100)
