@@ -14,17 +14,19 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced training steps / fewer archs")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: table1,table2,table3,roofline")
+                    help="comma-separated subset: table1,table2,table3,"
+                         "roofline,upgrade_latency")
     args = ap.parse_args()
 
     from benchmarks import table1_execution_time, table2_accuracy, table3_ttfi
-    from benchmarks import roofline
+    from benchmarks import roofline, upgrade_latency
 
     benches = {
         "table1": table1_execution_time,
         "table2": table2_accuracy,
         "table3": table3_ttfi,
         "roofline": roofline,
+        "upgrade_latency": upgrade_latency,
     }
     selected = (args.only.split(",") if args.only else list(benches))
 

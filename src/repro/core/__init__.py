@@ -16,6 +16,7 @@ from repro.core.policy import (
     ExpertPopularityPolicy,
     schedule_from_stages,
 )
+from repro.core.plane_store import PlaneStore, TensorSlot
 from repro.core.progressive import (
     ProgressiveModel,
     ReceiverState,
@@ -39,6 +40,8 @@ __all__ = [
     "LayerPriorityPolicy",
     "ExpertPopularityPolicy",
     "schedule_from_stages",
+    "PlaneStore",
+    "TensorSlot",
     "ProgressiveModel",
     "ReceiverState",
     "divide",

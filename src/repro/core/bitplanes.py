@@ -118,27 +118,78 @@ PAPER_DEFAULT = PlaneSchedule(bits=16, widths=(2,) * 8)
 # increase" true on the wire.
 # ---------------------------------------------------------------------------
 
+def _bit_group(width: int) -> tuple[int, int]:
+    """Smallest group of values whose packed bits land on a byte
+    boundary: lcm(width, 8) bits = (values per group, bytes per group)."""
+    import math
+
+    L = width * 8 // math.gcd(width, 8)
+    return L // width, L // 8
+
+
 def pack_bits(plane: jax.Array, width: int) -> jax.Array:
     """Pack a width-bit plane into a dense uint8 byte stream (big-endian
-    bit order). Pure-jnp; used by the wire format."""
+    bit order). Pure-jnp; used by the wire format.
+
+    Works at byte granularity: values are grouped so a group's bits fill
+    whole bytes (lcm(width, 8) bits), and each output byte is assembled
+    from the <= 2 + 8//width values overlapping it. Peak intermediate is
+    O(n) — never the old (n, width) bit matrix, which at width=16 was a
+    32x blowup over the packed payload.
+    """
     flat = plane.astype(jnp.uint32).ravel()
     n = flat.shape[0]
-    # Expand each value into `width` bits, MSB first.
-    shifts = jnp.arange(width - 1, -1, -1, dtype=jnp.uint32)
-    bits = (flat[:, None] >> shifts[None, :]) & jnp.uint32(1)  # (n, width)
-    bitstream = bits.ravel()
-    pad = (-bitstream.shape[0]) % 8
-    bitstream = jnp.pad(bitstream, (0, pad))
-    by = bitstream.reshape(-1, 8)
-    weights = jnp.uint32(1) << jnp.arange(7, -1, -1, dtype=jnp.uint32)
-    return (by * weights[None, :]).sum(axis=1).astype(jnp.uint8)
+    gv, gb = _bit_group(width)
+    pad = (-n) % gv
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    vals = flat.reshape(-1, gv)
+    out_cols = []
+    for b in range(gb):
+        lo_bit, hi_bit = 8 * b, 8 * b + 8
+        acc = jnp.zeros((vals.shape[0],), jnp.uint32)
+        for i in range(gv):
+            v_lo, v_hi = i * width, (i + 1) * width
+            o_lo, o_hi = max(lo_bit, v_lo), min(hi_bit, v_hi)
+            if o_lo >= o_hi:
+                continue
+            nbits = o_hi - o_lo
+            piece = (vals[:, i] >> (v_hi - o_hi)) & jnp.uint32(2**nbits - 1)
+            acc = acc | (piece << (hi_bit - o_hi))
+        out_cols.append(acc.astype(jnp.uint8))
+    by = jnp.stack(out_cols, axis=1).ravel()
+    return by[: -(-n * width // 8)]
 
 
 def unpack_bits(packed: jax.Array, width: int, n_elements: int) -> jax.Array:
-    """Inverse of :func:`pack_bits`; returns uint32 values in [0, 2^w)."""
-    by = packed.astype(jnp.uint32)
-    shifts = jnp.arange(7, -1, -1, dtype=jnp.uint32)
-    bitstream = ((by[:, None] >> shifts[None, :]) & jnp.uint32(1)).ravel()
-    bitstream = bitstream[: n_elements * width].reshape(n_elements, width)
-    weights = jnp.uint32(1) << jnp.arange(width - 1, -1, -1, dtype=jnp.uint32)
-    return (bitstream * weights[None, :]).sum(axis=1)
+    """Inverse of :func:`pack_bits`; returns uint32 values in [0, 2^w).
+    Byte-granular like :func:`pack_bits`: O(n) peak intermediates.
+    A payload too short for ``n_elements`` values raises (a truncated
+    wire payload must never decode to silent zeros); extra trailing
+    bytes are ignored."""
+    need = -(-n_elements * width // 8)
+    if packed.shape[0] < need:
+        raise ValueError(
+            f"packed payload has {packed.shape[0]} bytes, need {need} "
+            f"for {n_elements} width-{width} values")
+    gv, gb = _bit_group(width)
+    groups = -(-n_elements // gv)
+    by = packed[:need].astype(jnp.uint32)
+    pad = groups * gb - need
+    if pad:
+        by = jnp.pad(by, (0, pad))
+    bys = by.reshape(groups, gb)
+    cols = []
+    for i in range(gv):
+        v_lo, v_hi = i * width, (i + 1) * width
+        acc = jnp.zeros((groups,), jnp.uint32)
+        for b in range(gb):
+            lo_bit, hi_bit = 8 * b, 8 * b + 8
+            o_lo, o_hi = max(lo_bit, v_lo), min(hi_bit, v_hi)
+            if o_lo >= o_hi:
+                continue
+            nbits = o_hi - o_lo
+            piece = (bys[:, b] >> (hi_bit - o_hi)) & jnp.uint32(2**nbits - 1)
+            acc = acc | (piece << (v_hi - o_hi))
+        cols.append(acc)
+    return jnp.stack(cols, axis=1).ravel()[:n_elements]

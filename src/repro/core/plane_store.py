@@ -1,0 +1,388 @@
+"""PlaneStore: the single device-resident receiver runtime (eqs. 4+5).
+
+Every client of progressive transmission — the pytree receiver
+(``core/progressive.ReceiverState``), the byte-stream client
+(``transmission/client.ProgressiveClient``), and the quantized-resident
+serving path (``serving/quantized``) — used to carry its own copy of
+the OR/shift/stacking arithmetic. They now all sit on this one store.
+
+Layout
+------
+All tensors sharing a container dtype live in ONE flat 1-D uint buffer;
+each tensor occupies a block-aligned segment ``[offset, offset+size)``
+(padding between segments is dead space, < ``block`` elements per
+tensor). Per-tensor metadata (shape, plane schedule, quantization
+range, slice info) lives in :class:`TensorSlot` views.
+
+Upgrades (eq. 4)
+----------------
+``ingest([(tensor_idx, plane), ...])`` assembles one flat plane buffer
+plus a per-block int32 shift table and issues ONE batched
+``plane_or_segments`` Pallas launch per container dtype — O(1) in the
+number of tensors, vs. the old one-``pallas_call``-per-tensor loop.
+Block alignment is what makes the per-block shift well defined: a block
+never straddles two tensors.
+
+Materialization (eq. 5)
+-----------------------
+``materialize()`` is *incremental*: only tensors whose accumulator
+changed since the last call are re-dequantized; unchanged float leaves
+come out of a cache (same array objects — downstream jit sees identical
+buffer donations). Sliced tensors (expert banks) are restacked along
+their slice axis only when one of their slices is dirty.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bitplanes import PlaneSchedule
+from repro.core.quantize import QuantizedTensor, container_dtype, dequantize
+from repro.kernels import ops
+
+# One grid step of plane_or_segments: 8 sublanes x 128 lanes.
+DEFAULT_BLOCK = 1024
+
+
+@functools.partial(jax.jit, static_argnames=("segs",))
+def _scatter_segments(buf: jax.Array, out: jax.Array,
+                      segs: tuple) -> jax.Array:
+    """Write compact OR results back into the flat buffer. ``segs`` is
+    ``((buf_offset, compact_pos, length), ...)``. One jitted call: the
+    update chain fuses into a single new buffer (one allocation per
+    round, not one full copy per segment as eager .at[].set would pay).
+    NOT donated: ``copy()`` stores share buffer objects, so donating
+    here would invalidate a sibling store's accumulator."""
+    for off, pos, length in segs:
+        buf = jax.lax.dynamic_update_slice_in_dim(
+            buf, jax.lax.dynamic_slice_in_dim(out, pos, length), off, axis=0)
+    return buf
+
+
+def next_plane_shift(schedule: PlaneSchedule, received: int) -> int:
+    """Eq. (4) shift for the next arriving plane: after ``received``
+    planes, plane ``received+1`` lands at ``bits - c_{received+1}``.
+    The ONLY place this arithmetic lives."""
+    if received >= schedule.n_planes:
+        raise ValueError(
+            f"all {schedule.n_planes} planes already received")
+    return schedule.bits - schedule.cumulative_bits[received]
+
+
+def received_bits(schedule: PlaneSchedule, received: int) -> int:
+    """Effective precision m = sum of the first ``received`` widths."""
+    return schedule.cumulative_bits[received - 1] if received > 0 else 0
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSlot:
+    """Static per-tensor metadata: a view descriptor into a flat buffer."""
+
+    key: Any                  # opaque leaf key (tuple path or path string)
+    schedule: PlaneSchedule
+    lo: jax.Array
+    hi: jax.Array
+    shape: tuple
+    orig_dtype: Any
+    offset: int               # element offset within the dtype's buffer
+    size: int                 # n elements
+    padded: int               # block-aligned span (size rounded up)
+    slice_axis: int | None = None
+    slice_idx: int = 0
+
+    @property
+    def bits(self) -> int:
+        return self.schedule.bits
+
+    @property
+    def container(self):
+        return container_dtype(self.bits)
+
+
+class PlaneStore:
+    """Device-resident accumulators for one progressive model."""
+
+    def __init__(self, slots: list[TensorSlot], *, block: int = DEFAULT_BLOCK):
+        self.block = block
+        self.slots = slots
+        self.received = [0] * len(slots)
+        # dtype name -> flat uint buffer (length: multiple of block)
+        self.buffers: dict[str, jax.Array] = {}
+        sizes: dict[str, int] = {}
+        for t in slots:
+            dt = np.dtype(t.container).name
+            sizes[dt] = max(sizes.get(dt, 0), t.offset + t.padded)
+        for dt, n in sizes.items():
+            self.buffers[dt] = jnp.zeros((n,), dtype=np.dtype(dt))
+        self._dirty: set[int] = set(range(len(slots)))
+        self._leaf_cache: dict[Any, jax.Array] = {}
+        self._acc_cache: dict[int, jax.Array] = {}
+
+    # -- construction ------------------------------------------------------
+    @staticmethod
+    def _layout(entries, block):
+        """Assign (offset, padded) per entry, grouped by container dtype."""
+        cursors: dict[str, int] = {}
+        out = []
+        for e in entries:
+            dt = np.dtype(container_dtype(e["schedule"].bits)).name
+            size = int(np.prod(e["shape"])) if e["shape"] else 1
+            padded = -(-size // block) * block
+            off = cursors.get(dt, 0)
+            cursors[dt] = off + padded
+            out.append((off, size, padded))
+        return out
+
+    @classmethod
+    def from_model(cls, model, *, block: int = DEFAULT_BLOCK,
+                   indices: Sequence[int] | None = None) -> "PlaneStore":
+        """Build from a server-side :class:`ProgressiveModel` (keys are
+        pytree paths). ``indices`` restricts the store to a subset of
+        the model's tensors (slot i is then ``model.tensors[indices[i]]``
+        — a single-tensor store allocates one tensor's buffer, not the
+        whole model's)."""
+        tensors = (model.tensors if indices is None
+                   else [model.tensors[i] for i in indices])
+        entries = [{"schedule": t.plan.schedule, "shape": t.shape}
+                   for t in tensors]
+        layout = cls._layout(entries, block)
+        slots = [
+            TensorSlot(
+                key=t.path, schedule=t.plan.schedule, lo=t.lo, hi=t.hi,
+                shape=tuple(t.shape), orig_dtype=t.orig_dtype,
+                offset=off, size=size, padded=padded,
+                slice_axis=t.slice_axis, slice_idx=t.slice_idx,
+            )
+            for t, (off, size, padded) in zip(tensors, layout)
+        ]
+        return cls(slots, block=block)
+
+    @classmethod
+    def from_wire_meta(cls, meta: Mapping, *, block: int = DEFAULT_BLOCK
+                       ) -> "PlaneStore":
+        """Build from a decoded wire header (keys are path strings)."""
+        entries = [
+            {"schedule": PlaneSchedule(bits=t["bits"],
+                                       widths=tuple(t["widths"])),
+             "shape": tuple(t["shape"])}
+            for t in meta["tensors"]
+        ]
+        layout = cls._layout(entries, block)
+        slots = [
+            TensorSlot(
+                key=t["path"], schedule=e["schedule"],
+                lo=jnp.float32(t["lo"]), hi=jnp.float32(t["hi"]),
+                shape=tuple(t["shape"]), orig_dtype=np.dtype(t["dtype"]),
+                offset=off, size=size, padded=padded,
+                slice_axis=t.get("slice_axis"), slice_idx=t.get("slice_idx", 0),
+            )
+            for t, e, (off, size, padded)
+            in zip(meta["tensors"], entries, layout)
+        ]
+        return cls(slots, block=block)
+
+    def copy(self) -> "PlaneStore":
+        """Cheap snapshot: buffers are immutable jax arrays, so sharing
+        them is safe; bookkeeping is shallow-copied. Lets the functional
+        ``ReceiverState.receive`` keep value semantics for free."""
+        new = object.__new__(PlaneStore)
+        new.block = self.block
+        new.slots = self.slots
+        new.received = list(self.received)
+        new.buffers = dict(self.buffers)
+        new._dirty = set(self._dirty)
+        new._leaf_cache = dict(self._leaf_cache)
+        new._acc_cache = dict(self._acc_cache)
+        return new
+
+    # -- views -------------------------------------------------------------
+    def _slice_acc(self, i: int) -> jax.Array:
+        t = self.slots[i]
+        dt = np.dtype(t.container).name
+        return self.buffers[dt][t.offset:t.offset + t.size].reshape(t.shape)
+
+    def acc(self, i: int) -> jax.Array:
+        """Tensor i's accumulator: a view into the flat buffer. Cached
+        until the tensor's next ingest, so eager hot paths (per-token
+        ``QuantizedLinearState.matmul``) don't re-slice per call. The
+        cache fills only on explicit ``acc`` access — one-shot readers
+        (materialize) slice without caching, so they don't pin a second
+        copy of every accumulator."""
+        got = self._acc_cache.get(i)
+        if got is None:
+            got = self._slice_acc(i)
+            self._acc_cache[i] = got
+        return got
+
+    def quantized(self, i: int) -> QuantizedTensor:
+        t = self.slots[i]
+        return QuantizedTensor(q=self._slice_acc(i), lo=t.lo, hi=t.hi,
+                               bits=t.bits, orig_dtype=t.orig_dtype)
+
+    def effective_bits(self, i: int) -> int:
+        return received_bits(self.slots[i].schedule, self.received[i])
+
+    @property
+    def n_tensors(self) -> int:
+        return len(self.slots)
+
+    def resident_bytes(self) -> int:
+        return sum(b.size * b.dtype.itemsize for b in self.buffers.values())
+
+    # -- eq. (4): batched upgrade -----------------------------------------
+    def ingest(self, items: Sequence[tuple[int, jax.Array]]) -> None:
+        """OR a shipment of planes into the store. ``items`` holds
+        ``(tensor_idx, plane_values)`` pairs; each plane is the *next*
+        plane of its tensor's schedule (the wire delivers them in
+        order). One ``plane_or_segments`` launch per container dtype per
+        round; a shipment carrying several planes of the same tensor is
+        split into rounds (distinct shifts for the same segment can't
+        share one OR).
+
+        The whole shipment is validated up front, so a bad item leaves
+        the store untouched — callers (e.g. the client's ``_flush``)
+        may safely retry the identical shipment after a failure."""
+        pending = list(items)
+        counts: dict[int, int] = {}
+        for idx, plane in pending:
+            t = self.slots[idx]
+            n = int(np.prod(np.shape(plane)) or 1)
+            if n != t.size:
+                raise ValueError(
+                    f"plane for tensor {idx} has {n} elements, "
+                    f"expected {t.size}")
+            counts[idx] = counts.get(idx, 0) + 1
+        for idx, c in counts.items():
+            have, total = self.received[idx], self.slots[idx].schedule.n_planes
+            if have + c > total:
+                raise ValueError(
+                    f"tensor {idx}: {have} planes received + {c} arriving "
+                    f"exceeds schedule of {total}")
+        while pending:
+            round_items: dict[int, jax.Array] = {}
+            rest = []
+            for idx, plane in pending:
+                if idx in round_items:
+                    rest.append((idx, plane))
+                else:
+                    round_items[idx] = plane
+            self._ingest_round(round_items)
+            pending = rest
+
+    def _ingest_round(self, items: dict[int, jax.Array]) -> None:
+        """One OR round: the accumulator never round-trips through the
+        host. Touched segments are gathered into a *compact* buffer
+        (cheap XLA slices/concat, no kernel launches), the single
+        ``plane_or_segments`` launch sweeps only those blocks, and the
+        results go back via one fused scatter — a sparse shipment's OR
+        work and transfers are O(touched bytes); the write-back is a
+        single whole-buffer update (immutable arrays), not one per
+        segment."""
+        by_dtype: dict[str, list[int]] = {}
+        for idx in items:
+            dt = np.dtype(self.slots[idx].container).name
+            by_dtype.setdefault(dt, []).append(idx)
+        for dt, idxs in by_dtype.items():
+            buf = self.buffers[dt]
+            idxs.sort(key=lambda i: self.slots[i].offset)
+            total = sum(self.slots[i].padded for i in idxs)
+            full = total == buf.shape[0]
+            shifts = np.empty((total // self.block,), np.int32)
+            pos = 0
+            for idx in idxs:
+                t = self.slots[idx]
+                sh = next_plane_shift(t.schedule, self.received[idx])
+                shifts[pos // self.block:(pos + t.padded) // self.block] = sh
+                pos += t.padded
+            shifts = jnp.asarray(shifts)
+            # Plane assembly: on an accelerator, keep device-resident
+            # planes (engine path) on device — pad+concat is cheap XLA
+            # work and avoids a blocking D2H+H2D round trip. On the CPU
+            # backend host assembly is the DMA landing zone (one memcpy
+            # pass + one upload) and measurably faster. The ACCUMULATOR
+            # never leaves the device on either path.
+            if jax.default_backend() != "cpu":
+                parts = []
+                for idx in idxs:
+                    t = self.slots[idx]
+                    p = jnp.asarray(items[idx]).reshape(-1).astype(buf.dtype)
+                    if t.padded != t.size:
+                        p = jnp.pad(p, (0, t.padded - t.size))
+                    parts.append(p)
+                plane = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+            else:
+                plane_np = np.zeros((total,), dtype=buf.dtype)
+                pos = 0
+                for idx in idxs:
+                    t = self.slots[idx]
+                    plane_np[pos:pos + t.size] = (
+                        np.asarray(items[idx]).reshape(-1))
+                    pos += t.padded
+                plane = jnp.asarray(plane_np)
+            if full:
+                # Whole buffer touched (the common full-stage upgrade):
+                # segments are dense by layout, no gather/scatter needed.
+                self.buffers[dt] = ops.plane_or_segments(
+                    buf, plane, shifts, block=self.block)
+            else:
+                # Sparse shipment: sweep only the touched blocks —
+                # O(touched bytes), not O(whole per-dtype buffer).
+                compact = (buf[self.slots[idxs[0]].offset:
+                               self.slots[idxs[0]].offset + total]
+                           if len(idxs) == 1 else
+                           jnp.concatenate([
+                               buf[self.slots[i].offset:
+                                   self.slots[i].offset + self.slots[i].padded]
+                               for i in idxs]))
+                out = ops.plane_or_segments(
+                    compact, plane, shifts, block=self.block)
+                segs, pos = [], 0
+                for idx in idxs:
+                    t = self.slots[idx]
+                    segs.append((t.offset, pos, t.padded))
+                    pos += t.padded
+                self.buffers[dt] = _scatter_segments(buf, out, tuple(segs))
+        for idx in items:
+            self.received[idx] += 1
+            self._dirty.add(idx)
+            self._acc_cache.pop(idx, None)
+            self._leaf_cache.pop(self.slots[idx].key, None)
+
+    # -- eq. (5): incremental materialization ------------------------------
+    def materialize_leaves(self) -> dict[Any, jax.Array]:
+        """Dequantize into ``{key: array}``, restacking sliced tensors
+        along their slice axis. Only keys touched since the last call
+        are recomputed; the rest are served from the leaf cache."""
+        by_key: dict[Any, list[int]] = {}
+        for i, t in enumerate(self.slots):
+            by_key.setdefault(t.key, []).append(i)
+        out = {}
+        for key, idxs in by_key.items():
+            cached = self._leaf_cache.get(key)
+            if cached is not None and not any(i in self._dirty for i in idxs):
+                out[key] = cached
+                continue
+            parts = []
+            for i in idxs:
+                val = dequantize(self.quantized(i),
+                                 received_bits=self.effective_bits(i))
+                parts.append((self.slots[i].slice_idx,
+                              self.slots[i].slice_axis, val))
+            if len(parts) == 1 and parts[0][1] is None:
+                leaf = parts[0][2]
+            else:
+                axis = parts[0][1]
+                parts.sort(key=lambda x: x[0])
+                leaf = jnp.stack([v for _, _, v in parts], axis=axis)
+            self._leaf_cache[key] = leaf
+            out[key] = leaf
+        self._dirty.clear()
+        return out
+
+    def dirty_keys(self) -> set:
+        return {self.slots[i].key for i in self._dirty}

@@ -24,8 +24,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitplanes
+from repro.core.plane_store import PlaneStore
 from repro.core.policy import DivisionPolicy, UniformPolicy, TensorPlan
-from repro.core.quantize import QuantizedTensor, quantize, dequantize
+from repro.core.quantize import quantize
 
 
 def _is_float(x) -> bool:
@@ -153,63 +154,44 @@ def divide(params, policy: DivisionPolicy | None = None) -> ProgressiveModel:
 
 @dataclasses.dataclass
 class ReceiverState:
-    """Client-side accumulator (paper steps 3-4).
+    """Client-side accumulator (paper steps 3-4), a thin functional
+    shell over the shared :class:`~repro.core.plane_store.PlaneStore`.
 
-    Holds one uint accumulator per tensor; ``receive`` is the eq. (4) OR
-    — cheap integer ops, no float work — and ``materialize`` is eq. (5).
-    In the serving engine the accumulators live device-resident and the
-    OR runs as a jitted update, so a precision upgrade never stalls
-    decoding.
+    ``receive`` is the eq. (4) OR — one batched integer Pallas launch
+    per container dtype, no float work — and ``materialize`` is eq. (5),
+    incremental: tensors that received nothing since the last call come
+    back from the store's leaf cache. The store is device-resident, so
+    in the serving engine a precision upgrade never stalls decoding.
     """
 
     model_meta: ProgressiveModel  # planes unused client-side; meta only
-    acc: list[jax.Array]
+    store: PlaneStore
     received_stages: int = 0
 
     @classmethod
     def init(cls, model: ProgressiveModel) -> "ReceiverState":
-        acc = [
-            jnp.zeros(t.shape, dtype=bitplanes.container_dtype(t.bits))
-            for t in model.tensors
-        ]
-        return cls(model_meta=model, acc=acc, received_stages=0)
+        return cls(model_meta=model, store=PlaneStore.from_model(model),
+                   received_stages=0)
+
+    @property
+    def acc(self) -> list[jax.Array]:
+        """Per-tensor accumulator views (compat with the pre-PlaneStore
+        API; the storage is the store's flat buffers)."""
+        return [self.store.acc(i) for i in range(self.store.n_tensors)]
 
     def receive(self, stage_planes: Sequence[tuple[int, jax.Array]]) -> "ReceiverState":
-        s = self.received_stages + 1
-        acc = list(self.acc)
-        for idx, plane in stage_planes:
-            t = self.model_meta.tensors[idx]
-            sched = t.plan.schedule
-            cum = sched.cumulative_bits[s - 1]
-            shift = sched.bits - cum
-            acc[idx] = (
-                acc[idx].astype(jnp.uint32) | (plane.astype(jnp.uint32) << shift)
-            ).astype(acc[idx].dtype)
-        return dataclasses.replace(self, acc=acc, received_stages=s)
+        store = self.store.copy()
+        store.ingest(stage_planes)
+        return dataclasses.replace(
+            self, store=store, received_stages=self.received_stages + 1)
 
     def effective_bits(self, tensor_idx: int) -> int:
-        sched = self.model_meta.tensors[tensor_idx].plan.schedule
-        s = min(self.received_stages, sched.n_planes)
-        return sched.cumulative_bits[s - 1] if s > 0 else 0
+        return self.store.effective_bits(tensor_idx)
 
     def materialize(self):
         """Dequantize the current accumulators into the original pytree
         (stacking sliced tensors back along their slice axis)."""
-        pieces: dict[tuple, list] = {}
-        for i, t in enumerate(self.model_meta.tensors):
-            qt = QuantizedTensor(
-                q=self.acc[i], lo=t.lo, hi=t.hi, bits=t.bits, orig_dtype=t.orig_dtype
-            )
-            val = dequantize(qt, received_bits=self.effective_bits(i))
-            pieces.setdefault(t.path, []).append((t.slice_idx, t.slice_axis, val))
-        leaves = {}
-        for path, parts in pieces.items():
-            if len(parts) == 1 and parts[0][1] is None:
-                leaves[path] = parts[0][2]
-            else:
-                axis = parts[0][1]
-                parts.sort(key=lambda x: x[0])
-                leaves[path] = jnp.stack([v for _, _, v in parts], axis=axis)
+        leaves = dict(self.store.materialize_leaves())
         for path, leaf in self.model_meta.passthrough:
             leaves[path] = leaf
         # Rebuild in treedef order.

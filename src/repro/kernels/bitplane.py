@@ -21,12 +21,21 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _or_kernel(acc_ref, plane_ref, o_ref, *, shift: int):
     a = acc_ref[...].astype(jnp.uint32)
     p = plane_ref[...].astype(jnp.uint32)
     o_ref[...] = (a | (p << shift)).astype(o_ref.dtype)
+
+
+def _or_segments_kernel(shift_ref, acc_ref, plane_ref, o_ref):
+    # shift_ref is the scalar-prefetch table (SMEM): one shift per block.
+    sh = shift_ref[pl.program_id(0)].astype(jnp.uint32)
+    a = acc_ref[...].astype(jnp.uint32)
+    p = plane_ref[...].astype(jnp.uint32)
+    o_ref[...] = (a | (p << sh)).astype(o_ref.dtype)
 
 
 def _extract_kernel(q_ref, o_ref, *, bits: int, before: int, width: int):
@@ -74,6 +83,64 @@ def plane_or(acc: jax.Array, plane: jax.Array, *, shift: int,
         interpret=interpret,
     )(a2, p2)
     return out.reshape(-1)[:n].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def plane_or_segments(acc: jax.Array, plane: jax.Array, shifts: jax.Array, *,
+                      block: int = 1024, interpret: bool = False) -> jax.Array:
+    """Batched eq. (4) over a *flat concatenated* accumulator buffer.
+
+    One launch upgrades every tensor of a model at once: ``acc`` and
+    ``plane`` are 1-D buffers in which each tensor occupies a
+    block-aligned segment (see ``core/plane_store.py``), and ``shifts``
+    is an int32 ``(n_blocks,)`` table giving the left shift of the block
+    each grid step processes. The table rides in as a scalar-prefetch
+    operand (SMEM), so the per-block shift is known before the block's
+    DMA issues — the grid stays a single dense 1-D sweep and the whole
+    upgrade is ONE ``pallas_call`` instead of one per tensor.
+
+    Blocks with nothing arriving carry a zero plane segment: OR with 0
+    is the identity at any shift, so no masking is needed.
+
+    ``block`` must be a multiple of 128 (lane width); both buffers must
+    be a multiple of ``block`` long. On a real pod the table is one int
+    per 1024 elements — for very large shards raise ``block`` to keep
+    the table comfortably in SMEM.
+    """
+    if acc.ndim != 1 or plane.ndim != 1:
+        raise ValueError("plane_or_segments operates on flat 1-D buffers")
+    if block % 128:
+        raise ValueError(f"block must be a multiple of 128, got {block}")
+    n = acc.shape[0]
+    if n % block:
+        raise ValueError(f"buffer length {n} not a multiple of block {block}")
+    if plane.shape[0] != n:
+        raise ValueError(
+            f"plane length {plane.shape[0]} != acc length {n}")
+    if shifts.shape[0] != n // block:
+        raise ValueError(
+            f"shift table has {shifts.shape[0]} entries, expected "
+            f"{n // block} (one per block)")
+    rows = block // 128
+    a2 = acc.reshape(-1, 128)
+    p2 = plane.reshape(-1, 128)
+    n_blocks = n // block
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((rows, 128), lambda i, s: (i, 0)),
+            pl.BlockSpec((rows, 128), lambda i, s: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, 128), lambda i, s: (i, 0)),
+    )
+    out = pl.pallas_call(
+        _or_segments_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(a2.shape, acc.dtype),
+        interpret=interpret,
+    )(shifts.astype(jnp.int32), a2, p2)
+    return out.reshape(-1)
 
 
 @functools.partial(

@@ -5,12 +5,14 @@ kernel body executes in Python, bit-exact with the TPU lowering's
 semantics); on a real TPU the same calls compile to Mosaic. The switch
 is automatic via the default backend — callers never pass ``interpret``.
 
-Also hosts the pytree-level conveniences used by the serving engine:
-``receiver_or`` (eq. 4 across a whole plane shipment) and
-``progressive_matmul`` (consume quantized weights without an fp copy).
+``LAUNCH_COUNTS`` tallies kernel dispatches at the *call site* (outside
+jit), which is what the upgrade-latency benchmark uses to prove a
+full-model stage upgrade issues O(1) launches through the PlaneStore
+instead of O(n_tensors) through the old per-tensor loop.
 """
 from __future__ import annotations
 
+import collections
 import functools
 
 import jax
@@ -20,12 +22,21 @@ from repro.kernels import dequant_matmul as _dqm
 from repro.kernels import bitplane as _bp
 from repro.kernels import decode_attention as _da
 
+# Dispatch counts per public kernel entry point. Reset freely; purely
+# diagnostic (benchmarks, tests) — never read on a hot path.
+LAUNCH_COUNTS: collections.Counter = collections.Counter()
+
+
+def reset_launch_counts() -> None:
+    LAUNCH_COUNTS.clear()
+
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
 def dequant_matmul(x, q, lo, hi, *, bits, received_bits=None, **kw):
+    LAUNCH_COUNTS["dequant_matmul"] += 1
     kw.setdefault("interpret", _interpret_default())
     return _dqm.dequant_matmul(
         x, q, lo, hi, bits=bits, received_bits=received_bits, **kw
@@ -33,34 +44,32 @@ def dequant_matmul(x, q, lo, hi, *, bits, received_bits=None, **kw):
 
 
 def plane_or(acc, plane, *, shift, **kw):
+    LAUNCH_COUNTS["plane_or"] += 1
     kw.setdefault("interpret", _interpret_default())
     return _bp.plane_or(acc, plane, shift=shift, **kw)
 
 
+def plane_or_segments(acc, plane, shifts, **kw):
+    LAUNCH_COUNTS["plane_or_segments"] += 1
+    kw.setdefault("interpret", _interpret_default())
+    return _bp.plane_or_segments(acc, plane, shifts, **kw)
+
+
 def plane_extract(q, *, bits, before, width, **kw):
+    LAUNCH_COUNTS["plane_extract"] += 1
     kw.setdefault("interpret", _interpret_default())
     return _bp.plane_extract(q, bits=bits, before=before, width=width, **kw)
 
 
 def flash_decode(q, k, v, k_pos, q_pos, *, window=0, softcap=0.0, **kw):
+    LAUNCH_COUNTS["flash_decode"] += 1
     kw.setdefault("interpret", _interpret_default())
     return _da.flash_decode(
         q, k, v, k_pos, q_pos, window=window, softcap=softcap, **kw
     )
 
 
-# ---------------------------------------------------------------------------
-# Pytree-level conveniences
-# ---------------------------------------------------------------------------
-
-def receiver_or(acc_tree, plane_tree, shifts: dict):
-    """Apply eq. (4) across a shipment of planes. ``shifts`` maps the
-    flat index of each leaf to its shift; leaves absent from
-    ``plane_tree`` pass through."""
-    out = {}
-    for key, acc in acc_tree.items():
-        if key in plane_tree:
-            out[key] = plane_or(acc, plane_tree[key], shift=shifts[key])
-        else:
-            out[key] = acc
-    return out
+# The old pytree-level ``receiver_or`` convenience (one plane_or per
+# leaf) is gone: shipments now flow through the PlaneStore
+# (``repro/core/plane_store.py``), which batches a whole shipment into
+# one plane_or_segments launch per container dtype.

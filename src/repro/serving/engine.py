@@ -8,6 +8,11 @@ values change; shapes/dtypes don't), so an upgrade costs one integer
 OR + dequantize — no recompilation, no cache invalidation, no request
 draining. That is the TPU-serving analogue of the paper's Fig. 4
 concurrent download/inference timeline.
+
+The accumulators live in the shared PlaneStore (via ``ReceiverState``):
+a stage upgrade is one batched integer Pallas launch over the flat
+buffer, and re-dequantization touches only the tensors that actually
+received planes.
 """
 from __future__ import annotations
 
@@ -51,7 +56,14 @@ class ProgressiveServer:
 
     def receive_stage(self) -> None:
         """Pull the next stage's planes (server-push in a real
-        deployment; here the planes live in ``self.prog``)."""
+        deployment; here the planes live in ``self.prog``).
+
+        The OR is one batched ``plane_or_segments`` launch over the
+        store's flat buffer, and the materialize is incremental: only
+        tensors whose accumulator changed are re-dequantized — tensors
+        whose schedule is exhausted (or that missed this shipment) come
+        back as the *same* cached array objects, so the jitted decode
+        sees an unchanged buffer for them."""
         s = self.state.received_stages + 1
         self.state = self.state.receive(self.prog.stage(s))
         self.params = self.state.materialize()

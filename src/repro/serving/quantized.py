@@ -9,48 +9,70 @@ kernel (`kernels/dequant_matmul`):
 
     y = x @ dequant(acc)      # dequant runs in VMEM, per tile
 
-An upgrade is `plane_or` (pure integer VPU) on the resident accumulator;
-no fp copy of the model ever exists. `QuantizedLinearState` is the
-device-resident artifact; `QuantizedModelState` manages a pytree of
-them + the upgrade schedule.
+The accumulators themselves live in a shared
+:class:`~repro.core.plane_store.PlaneStore` — the same runtime the
+pytree receiver and the byte-stream client use — so an upgrade is the
+store's batched `plane_or_segments` (pure integer VPU) and a
+`QuantizedLinearState` is a zero-copy *view* of one tensor's segment:
+no fp copy of the model ever exists, and no OR/shift arithmetic is
+re-derived here.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.core.bitplanes import PlaneSchedule
+from repro.core.plane_store import PlaneStore
 from repro.core.progressive import ProgressiveModel
 from repro.kernels import ops
 
 
 @dataclasses.dataclass
 class QuantizedLinearState:
-    """One weight matrix, resident as a k-bit accumulator."""
+    """One weight matrix, resident as a view into a PlaneStore segment."""
 
-    acc: jax.Array           # (d_in, d_out) uint container
-    lo: jax.Array
-    hi: jax.Array
-    schedule: PlaneSchedule
-    received: int = 0        # planes OR-ed in so far
+    store: PlaneStore
+    idx: int = 0
+
+    def __post_init__(self):
+        if len(self.store.slots[self.idx].shape) != 2:
+            raise ValueError(
+                "dequant matmul path needs a 2-D weight, got "
+                f"{self.store.slots[self.idx].shape}")
+
+    @property
+    def acc(self) -> jax.Array:
+        return self.store.acc(self.idx)
+
+    @property
+    def lo(self) -> jax.Array:
+        return self.store.slots[self.idx].lo
+
+    @property
+    def hi(self) -> jax.Array:
+        return self.store.slots[self.idx].hi
+
+    @property
+    def schedule(self) -> PlaneSchedule:
+        return self.store.slots[self.idx].schedule
+
+    @property
+    def received(self) -> int:
+        return self.store.received[self.idx]
 
     @property
     def received_bits(self) -> int:
-        if self.received == 0:
-            return 0
-        return self.schedule.cumulative_bits[self.received - 1]
+        return self.store.effective_bits(self.idx)
 
     def upgrade(self, plane: jax.Array) -> "QuantizedLinearState":
-        """OR the next plane in place (eq. 4) — integer work only."""
-        s = self.received + 1
-        if s > self.schedule.n_planes:
-            raise ValueError("all planes already received")
-        shift = self.schedule.bits - self.schedule.cumulative_bits[s - 1]
-        acc = ops.plane_or(self.acc, plane.astype(self.acc.dtype), shift=shift)
-        return dataclasses.replace(self, acc=acc, received=s)
+        """OR the next plane into the resident store (eq. 4) — one
+        batched integer launch, shift arithmetic owned by the store."""
+        store = self.store.copy()
+        store.ingest([(self.idx, plane)])
+        return dataclasses.replace(self, store=store)
 
     def matmul(self, x: jax.Array, **kw) -> jax.Array:
         """x @ dequant(acc) without materializing the fp weight (eq. 5
@@ -62,22 +84,41 @@ class QuantizedLinearState:
 
     @property
     def resident_bytes(self) -> int:
-        return self.acc.size * self.acc.dtype.itemsize
+        """Device bytes of this tensor's segment, including the
+        block-alignment padding it actually occupies."""
+        t = self.store.slots[self.idx]
+        return t.padded * np.dtype(t.container).itemsize
 
 
 def from_progressive(model: ProgressiveModel, tensor_idx: int,
-                     planes_upto: int = 0) -> QuantizedLinearState:
-    """Build a resident state for one 2-D tensor of a divided model."""
+                     planes_upto: int = 0,
+                     store: PlaneStore | None = None) -> QuantizedLinearState:
+    """View one 2-D tensor of a divided model as a resident linear
+    state. Pass an existing ``store`` to share residency with other
+    consumers (engine, client); ``planes_upto`` planes are then ingested
+    into that store (visible to every consumer — the view never forks).
+    Note ``upgrade()`` on the returned state IS functional and snapshots
+    the store, so shared-store deployments should keep pushing planes
+    through ``store.ingest`` and treat the state as a read view. Without
+    ``store``, a private single-tensor store is built (one tensor's
+    buffer, not the whole model's)."""
     t = model.tensors[tensor_idx]
-    if len(t.shape) != 2:
-        raise ValueError(f"dequant matmul path needs a 2-D weight, got {t.shape}")
-    from repro.core.quantize import container_dtype
-
-    st = QuantizedLinearState(
-        acc=jnp.zeros(t.shape, container_dtype(t.bits)),
-        lo=t.lo, hi=t.hi,
-        schedule=t.plan.schedule,
-    )
-    for s in range(planes_upto):
-        st = st.upgrade(t.planes[s])
-    return st
+    if store is None:
+        store = PlaneStore.from_model(model, indices=[tensor_idx])
+        idx = 0
+    else:
+        # Resolve by identity, not position: subset stores (built with
+        # from_model(indices=...)) have a compacted slot space.
+        idx = next(
+            (i for i, s in enumerate(store.slots)
+             if s.key == t.path and s.slice_idx == t.slice_idx), None)
+        if idx is None:
+            raise ValueError(
+                f"store holds no slot for tensor {tensor_idx} "
+                f"(path {t.path})")
+    # ``planes_upto`` means "at least this many planes resident": planes
+    # the store already holds are never re-OR-ed (that would corrupt the
+    # accumulator at a stale shift).
+    for s in range(store.received[idx], planes_upto):
+        store.ingest([(idx, t.planes[s])])
+    return QuantizedLinearState(store=store, idx=idx)

@@ -1,35 +1,24 @@
-"""Progressive client: byte stream -> ReceiverState.
+"""Progressive client: byte stream -> device-resident PlaneStore.
 
 Consumes the wire format produced by :mod:`repro.core.wire` incrementally
-(arbitrary chunk boundaries — a transport delivers bytes, not planes),
-OR-accumulates planes as they complete (eq. 4), and exposes
-``materialize()`` for inference at the current precision.
+(arbitrary chunk boundaries — a transport delivers bytes, not planes).
+Decoded planes are fed straight into a shared
+:class:`~repro.core.plane_store.PlaneStore`: completed planes are
+buffered and flushed as one *batched* OR launch per stage completion
+(eq. 4), and ``materialize()`` is the store's incremental eq. (5) —
+tensors untouched since the last call are served from cache.
 
 This is the framework's equivalent of the paper's browser client; the
-serving engine drives the same state machine with device-resident
-accumulators.
+serving engine drives the same store with its pytree receiver.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable
 
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import wire, bitplanes
-from repro.core.quantize import QuantizedTensor, dequantize, container_dtype
-
-
-@dataclasses.dataclass
-class _TensorState:
-    meta: dict
-    acc: np.ndarray
-    planes_received: int = 0
-
-    @property
-    def effective_bits(self) -> int:
-        return sum(self.meta["widths"][: self.planes_received])
+from repro.core import wire
+from repro.core.plane_store import PlaneStore
 
 
 class ProgressiveClient:
@@ -39,7 +28,8 @@ class ProgressiveClient:
         self._buf = bytearray()
         self._meta = None
         self._layout: wire.StageLayout | None = None
-        self._tensors: list[_TensorState] = []
+        self.store: PlaneStore | None = None
+        self._pending: list[tuple[int, np.ndarray]] = []  # decoded, un-OR-ed
         self._cursor = 0          # absolute offset of next undecoded byte
         self._stage = 0           # completed stages
         self._entry = 0           # next entry within current stage
@@ -74,15 +64,9 @@ class ProgressiveClient:
             self._meta, hdr = wire.decode_header(bytes(self._buf))
             self._layout = wire.layout_from_header(self._meta, hdr)
             self._cursor = hdr
-            for t in self._meta["tensors"]:
-                n_el = int(np.prod(t["shape"])) if t["shape"] else 1
-                self._tensors.append(
-                    _TensorState(
-                        meta=t,
-                        acc=np.zeros(n_el, dtype=np.uint32),
-                    )
-                )
-        # Decode completed planes.
+            self.store = PlaneStore.from_wire_meta(self._meta)
+        # Decode completed planes; the eq. (4) OR happens in batched
+        # flushes, not per plane.
         assert self._layout is not None
         while self._stage < len(self._layout.stages):
             entries = self._layout.stages[self._stage]
@@ -91,44 +75,29 @@ class ProgressiveClient:
                 if len(self._buf) - self._cursor < nbytes:
                     return
                 payload = bytes(self._buf[self._cursor : self._cursor + nbytes])
-                vals = wire.decode_plane(payload, w, n_el)
-                ts = self._tensors[idx]
-                cum_before = sum(ts.meta["widths"][: ts.planes_received])
-                shift = ts.meta["bits"] - cum_before - w
-                ts.acc |= vals.astype(np.uint32) << shift
-                ts.planes_received += 1
+                self._pending.append((idx, wire.decode_plane(payload, w, n_el)))
                 self._cursor += nbytes
                 self._entry += 1
             self._stage += 1
             self._entry = 0
+            self._flush()
             if self._on_stage_complete:
                 self._on_stage_complete(self._stage)
+
+    def _flush(self) -> None:
+        """Push buffered planes into the store: one batched Pallas
+        launch per container dtype (per plane round)."""
+        if self._pending:
+            self.store.ingest(self._pending)
+            self._pending = []
 
     # -- inference-side view -------------------------------------------------
     def materialize(self):
         """Current approximate params as a flat {path: array} dict (eq. 5;
-        sliced tensors are stacked back along their slice axis)."""
-        if self._meta is None:
+        sliced tensors are stacked back along their slice axis). Planes
+        of a partially-received stage are flushed first, so mid-stage
+        precision is never left on the floor."""
+        if self.store is None:
             raise RuntimeError("header not received yet")
-        pieces: dict[str, list] = {}
-        for ts in self._tensors:
-            m = ts.meta
-            qt = QuantizedTensor(
-                q=jnp.asarray(ts.acc.astype(container_dtype(m["bits"]))).reshape(m["shape"]),
-                lo=jnp.float32(m["lo"]),
-                hi=jnp.float32(m["hi"]),
-                bits=m["bits"],
-                orig_dtype=np.dtype(m["dtype"]),
-            )
-            val = dequantize(qt, received_bits=ts.effective_bits)
-            pieces.setdefault(m["path"], []).append(
-                (m.get("slice_idx", 0), m.get("slice_axis"), val))
-        out = {}
-        for path, parts in pieces.items():
-            if len(parts) == 1 and parts[0][1] is None:
-                out[path] = parts[0][2]
-            else:
-                axis = parts[0][1]
-                parts.sort(key=lambda x: x[0])
-                out[path] = jnp.stack([v for _, _, v in parts], axis=axis)
-        return out
+        self._flush()
+        return dict(self.store.materialize_leaves())

@@ -12,8 +12,10 @@ from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.launch.sharding import spec_for_param
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+# AbstractMesh takes (name, size) pairs on current JAX (the old
+# (sizes, names) two-argument form was removed).
+MESH = AbstractMesh((("data", 16), ("model", 16)))
+MESH3 = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 
 
 def test_spec_matrix_2d():
@@ -88,7 +90,8 @@ def test_debug_mesh_dryrun_subprocess(tmp_path):
         with mesh:
             compiled = jax.jit(step, in_shardings=(psh, osh, bsh)).lower(
                 params_sds, opt_sds, batch).compile()
-        ca = compiled.cost_analysis()
+        from repro.launch.hlo_analysis import normalize_cost_analysis
+        ca = normalize_cost_analysis(compiled.cost_analysis())
         # decode too
         caches_sds = jax.eval_shape(lambda: model.init_caches(4, 64))
         csh = sharding.cache_shardings(caches_sds, mesh, batch=4)
