@@ -7,8 +7,21 @@ singleton download. We report, at the paper's three bandwidths, the time
 until the first useful stage (the stage where Table-2 accuracy first
 reaches >=90% of the original — the paper finds 6-bit) against the
 singleton's only milestone (everything downloaded).
+
+Since the co-simulation refactor the numbers come from an *executed*
+:class:`~repro.transmission.session.Session` — real wire bytes through
+the real client on the trace's byte clock — and the run asserts they
+match the Fig.-4 algebra to 1e-9 s, so the operational path and the
+published timeline can't silently diverge.
+
+    PYTHONPATH=src python -m benchmarks.table3_ttfi [--reduced] \
+        [--event-log artifacts/ttfi_events.jsonl]
 """
 from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -18,24 +31,31 @@ from repro.core import wire
 from repro.core.progressive import divide
 from repro.models.model import build_model
 from repro.transmission.scheduler import (
-    StageCost, progressive_timeline, singleton_timeline, time_to_first_useful,
+    progressive_timeline, singleton_timeline, time_to_first_useful,
 )
-from repro.transmission.simulator import Link
+from repro.transmission.session import Session
+from repro.transmission.simulator import BandwidthTrace
 
 from benchmarks.common import measure_stage_costs
 
 BANDWIDTHS = [0.1e6, 0.2e6, 0.5e6]  # paper's user-study settings
+ALGEBRA_TOL_S = 1e-9
 
 
-def run(useful_stage: int = 3, quick: bool = False) -> list[dict]:
+def run(useful_stage: int = 3, quick: bool = False, reduced: bool = False,
+        event_log: str | None = None) -> list[dict]:
     """useful_stage=3 -> 6 bits under the paper's 2-bit schedule.
 
     Uses the paper-regime model size (download >> per-stage processing,
     like the paper's 7-51 MB zoo); see table1_execution_time.bench_cfg.
+    ``reduced`` (and the orchestrator's ``quick``) swap in the tiny
+    smoke config (CI-friendly; the regime claim no longer holds there,
+    but the session/algebra agreement and milestones still do).
     """
     from benchmarks.table1_execution_time import bench_cfg
 
-    cfg = bench_cfg("olmo-1b")
+    cfg = (get_config("olmo-1b").reduced() if (reduced or quick)
+           else bench_cfg("olmo-1b"))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     prog = divide(params)
@@ -44,17 +64,32 @@ def run(useful_stage: int = 3, quick: bool = False) -> list[dict]:
     fwd = jax.jit(lambda p: model.forward(p, batch)[0])
     costs = measure_stage_costs(prog, fwd)
 
-    hdr = len(wire.encode_header(prog))
-    stage_bytes = [len(wire.encode_stage(prog, s))
-                   for s in range(1, prog.n_stages + 1)]
-    total = hdr + sum(stage_bytes)
+    blob = wire.encode(prog)
+    meta, hdr = wire.decode_header(blob)
+    stage_bytes = wire.layout_from_header(meta, hdr).stage_bytes
+    total = len(blob)
 
     rows = []
+    log_lines: list[str] = []
     for bw in BANDWIDTHS:
-        link = Link(bandwidth_bytes_per_s=bw)
-        single = singleton_timeline(total, link, costs[-1])
-        prog_t = progressive_timeline(stage_bytes, link, costs,
-                                      concurrent=True, header_bytes=hdr)
+        trace = BandwidthTrace.constant(bw, name=f"const-{bw / 1e6:g}MBps")
+        session = Session(blob, trace)
+        result = session.run_timeline(costs, concurrent=True)
+        prog_t = result.timeline
+
+        # the executed session must match the Fig.-4 algebra exactly
+        algebra = progressive_timeline(stage_bytes, trace, costs,
+                                       concurrent=True, header_bytes=hdr)
+        drift = max(
+            max(abs(a - b) for a, b in
+                zip(prog_t.download_done, algebra.download_done)),
+            max(abs(a - b) for a, b in
+                zip(prog_t.result_ready, algebra.result_ready)))
+        if drift > ALGEBRA_TOL_S:
+            raise AssertionError(
+                f"session/algebra drift {drift:.3e}s at {bw / 1e6} MB/s")
+
+        single = singleton_timeline(total, trace, costs[-1])
         ttfu = time_to_first_useful(prog_t, useful_stage)
         rows.append({
             "bandwidth_MBps": bw / 1e6,
@@ -62,12 +97,23 @@ def run(useful_stage: int = 3, quick: bool = False) -> list[dict]:
             "progressive_first_any_s": prog_t.first_result_s,
             "progressive_first_useful_s": ttfu,
             "speedup_to_useful": single.total_s / ttfu,
+            "session_algebra_drift_s": drift,
         })
+        if event_log:
+            log_lines.extend(
+                json.dumps({"bandwidth_MBps": bw / 1e6, "t_s": e.t_s,
+                            "kind": e.kind, **e.data}, sort_keys=True)
+                for e in result.events)
+    if event_log:
+        path = Path(event_log)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text("\n".join(log_lines) + "\n")
     return rows
 
 
-def main(quick: bool = False) -> None:
-    rows = run(quick=quick)
+def main(quick: bool = False, reduced: bool = False,
+         event_log: str | None = None) -> None:
+    rows = run(quick=quick, reduced=reduced, event_log=event_log)
     print("\n== Table 3 proxy: time-to-first-useful-inference ==")
     print(f"{'MB/s':>6s} {'singleton':>10s} {'prog 1st':>9s} "
           f"{'prog useful(6b)':>15s} {'speedup':>8s}")
@@ -76,7 +122,15 @@ def main(quick: bool = False) -> None:
               f"{r['progressive_first_any_s']:8.1f}s "
               f"{r['progressive_first_useful_s']:14.1f}s "
               f"{r['speedup_to_useful']:7.2f}x")
+    print(f"(session == algebra to {ALGEBRA_TOL_S:g}s at every milestone)")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny smoke config (CI tier-2)")
+    ap.add_argument("--event-log", default=None,
+                    help="write session audit logs (JSONL) here")
+    args = ap.parse_args()
+    main(quick=args.quick, reduced=args.reduced, event_log=args.event_log)

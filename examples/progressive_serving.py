@@ -1,74 +1,78 @@
 """Progressive cold-start serving: a pod begins decoding from the 2-bit
 planes and upgrades precision in place, mid-generation, as later planes
-"arrive" over a simulated link — KV cache and compiled step survive
-every upgrade (the paper's Fig. 4, pod-side).
+arrive over a simulated network scenario — KV cache and compiled step
+survive every upgrade (the paper's Fig. 4, pod-side).
+
+The run is a deterministic co-simulation: real wire bytes stream
+through the scenario's bandwidth trace into the real client/PlaneStore,
+and the server decodes from that same store. Same seed, same tokens,
+same event log — on any machine.
 
     PYTHONPATH=src python examples/progressive_serving.py \
-        [--arch mixtral-8x22b] [--bandwidth-mbps 2.5]
+        [--arch mixtral-8x22b] [--scenario browser-lte-handoff] [--seed 0]
+    PYTHONPATH=src python examples/progressive_serving.py \
+        --bandwidth-mbps 2.5   # constant link instead of a scenario
 """
 import argparse
+from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import wire
 from repro.core.progressive import divide
+from repro.launch.serve import build_batch
 from repro.models.model import build_model
-from repro.serving.engine import ProgressiveServer
-from repro.transmission.simulator import Link, simulate_transfer
+from repro.transmission import BandwidthTrace, Session, get_scenario, list_scenarios
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mixtral-8x22b")
-    ap.add_argument("--bandwidth-mbps", type=float, default=2.5)
+    ap.add_argument("--scenario", default="browser-lte-handoff",
+                    choices=list_scenarios())
+    ap.add_argument("--bandwidth-mbps", type=float, default=None,
+                    help="use a constant link instead of --scenario")
     ap.add_argument("--decode-steps", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--event-log", default=None,
+                    help="write the session audit log (JSONL) here")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     prog = divide(params)
+    blob = wire.encode(prog)
 
-    stage_bytes = [len(wire.encode_stage(prog, s))
-                   for s in range(1, prog.n_stages + 1)]
-    hdr = len(wire.encode_header(prog))
-    link = Link(bandwidth_bytes_per_s=args.bandwidth_mbps * 1e6)
-    events = simulate_transfer(
-        [("hdr", hdr)] + [(f"s{i}", b) for i, b in enumerate(stage_bytes, 1)], link)
-    arrivals = [e.end_s for e in events[1:]]
-    print(f"{args.arch} (reduced): {(hdr + sum(stage_bytes)) / 1e6:.2f} MB; "
-          f"stage arrivals at {[round(a, 2) for a in arrivals]} s")
+    if args.bandwidth_mbps is not None:
+        session = Session(blob, BandwidthTrace.constant(args.bandwidth_mbps * 1e6))
+        where = f"constant {args.bandwidth_mbps} MB/s"
+    else:
+        scenario = get_scenario(args.scenario)
+        session = Session.from_scenario(blob, scenario, seed=args.seed)
+        where = f"{scenario.name} (seed {args.seed}): {scenario.description}"
+    arrivals = session.stage_arrival_times()
+    print(f"{args.arch} (reduced): {len(blob) / 1e6:.2f} MB over {where}")
+    print(f"stage arrivals at {[round(a, 2) for a in arrivals]} s")
 
     B, S = 2, 16
-    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
-                                          cfg.vocab).astype(jnp.int32)}
-    if cfg.enc_layers:
-        batch["enc_input"] = jnp.zeros((B, S // cfg.enc_seq_divisor, cfg.d_model),
-                                       cfg.dtype)
-    if cfg.vision_tokens:
-        batch["vision_embeds"] = jnp.zeros((B, cfg.vision_tokens, cfg.d_vision),
-                                           cfg.dtype)
+    batch = build_batch(cfg, B, S, seed=1)
 
-    server = ProgressiveServer(model, prog, max_len=S + args.decode_steps)
-    server.receive_stage()
     print(f"cold start at t={arrivals[0]:.2f}s with 2-bit weights; decoding...")
-    server.start(batch)
-
-    # model a decode budget: tokens at a fixed cadence from cold start
-    cadence = max((arrivals[-1] - arrivals[0]) / args.decode_steps, 1e-6)
-
-    def stage_arrival(i):
-        now = arrivals[0] + (i + 1) * cadence
-        return server.stage < prog.n_stages and now >= arrivals[server.stage]
-
-    res = server.decode(args.decode_steps, stage_arrival=stage_arrival)
+    res = session.run_serving(model, prog, decode_steps=args.decode_steps,
+                              batch=batch, max_len=S + args.decode_steps)
     print("decode-step : " + " ".join(f"{i:3d}" for i in range(args.decode_steps)))
     print("bits/weight : " + " ".join(f"{2 * s:3d}" for s in res.stage_at_step))
     print("tokens[0]   : " + " ".join(f"{int(t):3d}" for t in res.tokens[0]))
     print(f"\n{len(res.upgrades)} in-place upgrades during generation; "
-          f"final precision {2 * server.stage} bits — no recompile, no KV loss")
+          f"final precision {2 * res.server.stage} bits — no recompile, "
+          f"no KV loss; {len(res.events)} audited events")
+    if args.event_log:
+        path = Path(args.event_log)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(res.to_jsonl())
+        print(f"event log -> {path}")
 
 
 if __name__ == "__main__":

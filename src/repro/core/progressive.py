@@ -17,7 +17,7 @@ exist in params, but masks might) ship verbatim in stage 1.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence
+from typing import Any, Callable, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -191,12 +191,26 @@ class ReceiverState:
     def materialize(self):
         """Dequantize the current accumulators into the original pytree
         (stacking sliced tensors back along their slice axis)."""
-        leaves = dict(self.store.materialize_leaves())
-        for path, leaf in self.model_meta.passthrough:
-            leaves[path] = leaf
-        # Rebuild in treedef order.
-        ordered = [leaves[p] for p, _ in _all_paths(self.model_meta)]
-        return jax.tree_util.tree_unflatten(self.model_meta.treedef, ordered)
+        return rebuild_params(self.model_meta, self.store.materialize_leaves())
+
+
+def rebuild_params(model: ProgressiveModel, tensor_leaves: Mapping,
+                   *, key_fn: Callable[[tuple], Any] | None = None):
+    """Rebuild the original params pytree from materialized float leaves.
+
+    ``tensor_leaves`` maps ``key_fn(path)`` -> dequantized array (one
+    entry per *leaf*; sliced tensors are already restacked by the
+    store). Non-float passthrough leaves come from the model meta. The
+    default key is the raw path tuple (``ReceiverState``); the wire
+    client keys its store by ``wire.path_str``, so a server sitting on a
+    wire-fed store passes ``key_fn=wire.path_str``.
+    """
+    key_fn = key_fn or (lambda p: p)
+    ordered = []
+    for path, kind in _all_paths(model):
+        ordered.append(kind[1] if kind[0] == "p"
+                       else tensor_leaves[key_fn(path)])
+    return jax.tree_util.tree_unflatten(model.treedef, ordered)
 
 
 def _all_paths(model: ProgressiveModel):

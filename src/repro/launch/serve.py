@@ -3,36 +3,61 @@ stages arriving over a simulated link and decode while precision climbs.
 
     PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
         --bandwidth-mbps 1.0 --decode-steps 64
+    PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
+        --scenario browser-lte-handoff --seed 1 --event-log artifacts/serve.jsonl
 
-Timeline: stage arrival times come from the bandwidth simulator over the
-*real* serialized plane sizes; the server upgrades in place between
-decode steps exactly when the link would have delivered each stage
-(paper Fig. 4 made operational).
+The whole run is a co-simulation :class:`Session`: real ``wire`` bytes
+stream through the bandwidth trace in transport chunks into the real
+``ProgressiveClient``/PlaneStore, and the ``ProgressiveServer`` decodes
+from that same store, upgrading in place between decode steps exactly
+when the link delivered each stage (paper Fig. 4 made operational —
+one code path with the Table-I/III benchmarks).
 """
 from __future__ import annotations
 
 import argparse
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.core import wire
 from repro.core.progressive import divide
 from repro.models.model import build_model
-from repro.serving.engine import ProgressiveServer
-from repro.transmission.simulator import Link, simulate_transfer
-from repro.core import wire
+from repro.transmission import Session, get_scenario, list_scenarios
+from repro.transmission.simulator import BandwidthTrace
+
+
+def build_batch(cfg, batch: int, prompt_len: int, seed: int) -> dict:
+    out = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(seed), (batch, prompt_len), 0, cfg.vocab
+    ).astype(jnp.int32)}
+    if cfg.enc_layers:
+        out["enc_input"] = jnp.zeros(
+            (batch, max(1, prompt_len // cfg.enc_seq_divisor), cfg.d_model),
+            cfg.dtype)
+    if cfg.vision_tokens:
+        out["vision_embeds"] = jnp.zeros(
+            (batch, cfg.vision_tokens, cfg.d_vision), cfg.dtype)
+    return out
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--scenario", default=None, choices=list_scenarios(),
+                    help="named network scenario (overrides --bandwidth-mbps)")
+    ap.add_argument("--trace-csv", default=None,
+                    help="bandwidth trace CSV (see benchmarks/traces/)")
     ap.add_argument("--bandwidth-mbps", type=float, default=1.0)
     ap.add_argument("--decode-steps", type=int, default=64)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--event-log", default=None,
+                    help="write the session's audit log (JSONL) here")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -41,48 +66,38 @@ def main() -> None:
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     prog = divide(params)
+    blob = wire.encode(prog)
 
-    # real stage byte sizes -> arrival times on the link
-    stage_bytes = [len(wire.encode_stage(prog, s)) for s in range(1, prog.n_stages + 1)]
-    hdr = len(wire.encode_header(prog))
-    link = Link(bandwidth_bytes_per_s=args.bandwidth_mbps * 1e6)
-    events = simulate_transfer(
-        [("hdr", hdr)] + [(f"s{t}", b) for t, b in enumerate(stage_bytes, 1)], link
-    )
-    arrivals = [e.end_s for e in events[1:]]
-    print(f"model bytes={hdr + sum(stage_bytes)}  stages={prog.n_stages}  "
-          f"arrivals={[round(a, 2) for a in arrivals]}s @ {args.bandwidth_mbps} MB/s")
+    if args.scenario:
+        scenario = get_scenario(args.scenario)
+        session = Session.from_scenario(blob, scenario, seed=args.seed)
+        link_desc = f"scenario {args.scenario} (seed {args.seed})"
+    elif args.trace_csv:
+        session = Session(blob, BandwidthTrace.from_csv(args.trace_csv))
+        link_desc = f"trace {args.trace_csv}"
+    else:
+        session = Session(
+            blob, BandwidthTrace.constant(args.bandwidth_mbps * 1e6))
+        link_desc = f"{args.bandwidth_mbps} MB/s"
+    arrivals = session.stage_arrival_times()
+    print(f"model bytes={len(blob)}  stages={prog.n_stages}  "
+          f"arrivals={[round(a, 2) for a in arrivals]}s over {link_desc}")
 
-    max_len = args.prompt_len + args.decode_steps
-    server = ProgressiveServer(model, prog, max_len=max_len)
-    server.receive_stage()  # stage 1 = cold start
-    B = args.batch
-    batch = {"tokens": jax.random.randint(
-        jax.random.PRNGKey(1), (B, args.prompt_len), 0, cfg.vocab
-    ).astype(jnp.int32)}
-    if cfg.enc_layers:
-        batch["enc_input"] = jnp.zeros(
-            (B, max(1, args.prompt_len // cfg.enc_seq_divisor), cfg.d_model), cfg.dtype
-        )
-    if cfg.vision_tokens:
-        batch["vision_embeds"] = jnp.zeros(
-            (B, cfg.vision_tokens, cfg.d_vision), cfg.dtype
-        )
-    server.start(batch)
-
-    # decode clock: assume a fixed per-step budget so upgrades interleave
-    step_s = max(arrivals[-1] / max(args.decode_steps, 1), 1e-6)
-
-    def stage_arrival(i: int) -> bool:
-        now = (i + 1) * step_s + arrivals[0]
-        return server.stage < len(arrivals) and now >= arrivals[server.stage]
-
-    result = server.decode(args.decode_steps, stage_arrival=stage_arrival)
+    batch = build_batch(cfg, args.batch, args.prompt_len, seed=1)
+    result = session.run_serving(
+        model, prog, decode_steps=args.decode_steps, batch=batch,
+        max_len=args.prompt_len + args.decode_steps)
+    server = result.server
     print("upgrades (decode step -> stage):", result.upgrades)
     print("stage per step:", result.stage_at_step)
     print("tokens[0]:", [int(t) for t in result.tokens[0][:16]], "...")
-    print(f"served {args.decode_steps} steps across {server.stage} precision stages; "
-          f"mean step {1e3 * sum(result.per_step_s) / len(result.per_step_s):.1f} ms")
+    print(f"served {args.decode_steps} steps across {server.stage} precision "
+          f"stages; {len(result.events)} audited session events")
+    if args.event_log:
+        path = Path(args.event_log)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(result.to_jsonl())
+        print(f"event log -> {path}")
 
 
 if __name__ == "__main__":

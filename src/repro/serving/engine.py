@@ -23,7 +23,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.progressive import ProgressiveModel, ReceiverState
+from repro.core import wire
+from repro.core.progressive import ProgressiveModel, ReceiverState, rebuild_params
 from repro.models.model import Model
 
 
@@ -35,14 +36,58 @@ class GenerationResult:
     per_step_s: list
 
 
-class ProgressiveServer:
-    """Holds device-resident plane accumulators + a jit'd decode step."""
+class WireStoreReceiver:
+    """Adapts a wire-fed :class:`~repro.transmission.client.ProgressiveClient`
+    as a server's parameter source, so the *same* device-resident
+    PlaneStore that the byte stream fills is the one the server decodes
+    from — no second ingest, no second set of Pallas launches.
 
-    def __init__(self, model: Model, prog: ProgressiveModel, max_len: int):
+    ``materialize`` reads only *completed* stages: it goes straight to
+    ``store.materialize_leaves()`` without flushing the client's pending
+    partial-stage planes, so the served params are exactly the stage
+    prefix (bit-identical to ``transmit_reconstruct`` at that stage) —
+    mid-stage planes land with their stage's completion flush.
+    """
+
+    def __init__(self, client, prog: ProgressiveModel):
+        self.client = client
+        self.prog = prog
+
+    @property
+    def stages_complete(self) -> int:
+        return self.client.stages_complete
+
+    def materialize(self):
+        if self.client.store is None:
+            raise RuntimeError("wire header not received yet")
+        leaves = self.client.store.materialize_leaves()
+        return rebuild_params(self.prog, leaves, key_fn=wire.path_str)
+
+
+class ProgressiveServer:
+    """Holds device-resident plane accumulators + a jit'd decode step.
+
+    Two feeding modes:
+
+    * pull (default): ``receive_stage()`` ingests the next stage's
+      planes from ``self.prog`` into the server's own ReceiverState
+      (server-push in a real deployment).
+    * receiver: constructed with ``receiver=`` (e.g.
+      :class:`WireStoreReceiver` over the wire client's store) the
+      server holds no accumulators of its own — ``receive_stage()``
+      re-materializes from the externally-fed store. This is what the
+      co-simulation :class:`~repro.transmission.session.Session` uses:
+      bytes are ingested once, by the client.
+    """
+
+    def __init__(self, model: Model, prog: ProgressiveModel, max_len: int,
+                 receiver: WireStoreReceiver | None = None):
         self.model = model
         self.prog = prog
         self.max_len = max_len
-        self.state = ReceiverState.init(prog)
+        self._receiver = receiver
+        self.state = None if receiver is not None else ReceiverState.init(prog)
+        self._consumed = 0  # receiver mode: stages reflected in params
         self.params = None  # materialized at current precision
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
@@ -52,11 +97,22 @@ class ProgressiveServer:
     # -- precision management ------------------------------------------------
     @property
     def stage(self) -> int:
+        if self._receiver is not None:
+            return self._consumed
         return self.state.received_stages
+
+    @property
+    def stages_available(self) -> int:
+        """Stages the server could upgrade to right now."""
+        if self._receiver is not None:
+            return self._receiver.stages_complete
+        return self.prog.n_stages
 
     def receive_stage(self) -> None:
         """Pull the next stage's planes (server-push in a real
-        deployment; here the planes live in ``self.prog``).
+        deployment; here the planes live in ``self.prog``), or — in
+        receiver mode — refresh params from the externally-fed store,
+        catching up to every stage the receiver has completed.
 
         The OR is one batched ``plane_or_segments`` launch over the
         store's flat buffer, and the materialize is incremental: only
@@ -64,6 +120,15 @@ class ProgressiveServer:
         whose schedule is exhausted (or that missed this shipment) come
         back as the *same* cached array objects, so the jitted decode
         sees an unchanged buffer for them."""
+        if self._receiver is not None:
+            avail = self._receiver.stages_complete
+            if avail <= self._consumed:
+                raise RuntimeError(
+                    f"receiver has no new stage (at {avail}, "
+                    f"served {self._consumed})")
+            self._consumed = avail
+            self.params = self._receiver.materialize()
+            return
         s = self.state.received_stages + 1
         self.state = self.state.receive(self.prog.stage(s))
         self.params = self.state.materialize()

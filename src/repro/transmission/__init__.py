@@ -1,19 +1,41 @@
-"""Transmission substrate: bandwidth simulation, the Fig.-4 concurrent
-transmission/inference scheduler, and the progressive client."""
-from repro.transmission.simulator import Link, TransferEvent, simulate_transfer
+"""Transmission substrate: bandwidth traces and simulation, the Fig.-4
+concurrent transmission/inference scheduler, the progressive client,
+named network scenarios, and the deterministic co-simulation Session."""
+from repro.transmission.simulator import (
+    BandwidthTrace,
+    Link,
+    TransferEvent,
+    as_trace,
+    simulate_transfer,
+)
 from repro.transmission.scheduler import (
+    StageCost,
     Timeline,
-    singleton_timeline,
+    overhead_pct,
     progressive_timeline,
+    singleton_timeline,
 )
 from repro.transmission.client import ProgressiveClient
+from repro.transmission.scenarios import SCENARIOS, Scenario, get_scenario, list_scenarios
+from repro.transmission.session import Session, SessionEvent, SessionResult
 
 __all__ = [
+    "BandwidthTrace",
     "Link",
     "TransferEvent",
+    "as_trace",
     "simulate_transfer",
+    "StageCost",
     "Timeline",
-    "singleton_timeline",
+    "overhead_pct",
     "progressive_timeline",
+    "singleton_timeline",
     "ProgressiveClient",
+    "SCENARIOS",
+    "Scenario",
+    "get_scenario",
+    "list_scenarios",
+    "Session",
+    "SessionEvent",
+    "SessionResult",
 ]

@@ -45,6 +45,15 @@ class ProgressiveClient:
         return self._stage
 
     @property
+    def bytes_fed(self) -> int:
+        return len(self._buf)
+
+    @property
+    def complete(self) -> bool:
+        return (self._layout is not None
+                and self._stage == len(self._layout.stages))
+
+    @property
     def header_ready(self) -> bool:
         return self._meta is not None
 

@@ -14,16 +14,22 @@ Three schedules are modelled:
   whenever per-stage processing fits inside the next stage's download
   window — the paper's headline claim (Table I, +0%).
 
-The schedule is pure algebra over byte counts and per-step costs, so the
-Table-I benchmark derives times rather than measuring noisy wall-clock;
-processing costs are either supplied (measured on-device) or estimated.
+The schedule is pure algebra over byte counts and per-step costs: every
+download milestone is a :meth:`BandwidthTrace.time_to_deliver` query, so
+it works unchanged for constant links *and* fluctuating traces, and
+times are derived, never measured. The same byte->time mapping drives
+the co-simulation harness (:mod:`repro.transmission.session`), which
+executes the real client/server against the same clock — a test pins
+the two to <1e-9 s. Latency is a one-time shift of the byte clock, paid
+exactly once per connection in every branch (including
+``header_bytes=0``).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Sequence
 
-from repro.transmission.simulator import Link, simulate_transfer
+from repro.transmission.simulator import TraceLike, as_trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,15 +62,16 @@ class Timeline:
         return self.result_ready[0]
 
 
-def singleton_timeline(total_bytes: int, link: Link, cost: StageCost) -> Timeline:
+def singleton_timeline(total_bytes: int, link: TraceLike, cost: StageCost) -> Timeline:
     """Download whole file, process once."""
-    dl = link.transfer_time(total_bytes)
+    trace, latency = as_trace(link)
+    dl = latency + trace.time_to_deliver(total_bytes)
     return Timeline(download_done=[dl], result_ready=[dl + cost.total])
 
 
 def progressive_timeline(
     stage_bytes: Sequence[int],
-    link: Link,
+    link: TraceLike,
     stage_costs: Sequence[StageCost],
     concurrent: bool,
     header_bytes: int = 0,
@@ -77,32 +84,36 @@ def progressive_timeline(
     (single compute queue, like the paper's JS main thread + WebGL).
 
     w/o concurrency: the link idles while the client processes; stage
-    s+1's download starts only after stage s's result is shown.
+    s+1's download starts only after stage s's result is shown. With a
+    trace-driven link the idle window consumes *wall* time, so the
+    resumed download sees whatever bandwidth the trace has then.
     """
     if len(stage_bytes) != len(stage_costs):
         raise ValueError("stage_bytes and stage_costs length mismatch")
+    trace, latency = as_trace(link)
     n = len(stage_bytes)
     download_done: list[float] = []
     result_ready: list[float] = []
+    # trace-clock time of the last delivered byte (wall = latency + tt)
+    tt = trace.time_to_deliver(header_bytes)
     if concurrent:
-        payloads = [("hdr", header_bytes)] + [
-            (f"stage{s}", b) for s, b in enumerate(stage_bytes, 1)
-        ]
-        events = simulate_transfer(payloads, link)
         proc_free = 0.0
         for s in range(n):
-            dl_done = events[s + 1].end_s
-            download_done.append(dl_done)
-            start = max(dl_done, proc_free)
+            tt = trace.time_to_deliver(stage_bytes[s], start_s=tt)
+            dl = latency + tt
+            download_done.append(dl)
+            start = max(dl, proc_free)
             proc_free = start + stage_costs[s].total
             result_ready.append(proc_free)
     else:
-        t = link.transfer_time(header_bytes) if header_bytes else link.latency_s
         for s in range(n):
-            t += stage_bytes[s] / link.bandwidth_bytes_per_s
-            download_done.append(t)
-            t += stage_costs[s].total
-            result_ready.append(t)
+            tt = trace.time_to_deliver(stage_bytes[s], start_s=tt)
+            dl = latency + tt
+            download_done.append(dl)
+            ready = dl + stage_costs[s].total
+            result_ready.append(ready)
+            # link idles until this stage's result is shown
+            tt = ready - latency
     return Timeline(download_done=download_done, result_ready=result_ready)
 
 

@@ -1,0 +1,309 @@
+"""Deterministic co-simulation: real bytes, simulated clock.
+
+A :class:`Session` couples the byte clock of a
+:class:`~repro.transmission.simulator.BandwidthTrace` to the *real*
+receive path: the serialized ``wire`` stream is cut into
+transport-sized chunks, each chunk is fed to a real
+:class:`~repro.transmission.client.ProgressiveClient` (which ingests
+planes into the device-resident PlaneStore), and every milestone is
+stamped with the exact time the trace says those bytes landed
+(``time_to_deliver`` — derived, never measured). Processing costs come
+from a supplied cost model, so runs are bit- and time-deterministic on
+any machine.
+
+Two run modes:
+
+* :meth:`Session.run_timeline` — the Fig.-4 schedules *executed*: the
+  real client decodes the stream while a single simulated compute queue
+  charges per-stage costs. Its Timeline must agree with the pure
+  algebra in :mod:`~repro.transmission.scheduler` to <1e-9 s (pinned by
+  tests) — the algebra and the execution can no longer silently
+  diverge.
+* :meth:`Session.run_serving` — the operational path: a real
+  :class:`~repro.serving.engine.ProgressiveServer` sits on the *same*
+  store the client fills (no second ingest) and greedy-decodes real
+  tokens, upgrading precision between steps exactly when the trace
+  delivered each stage.
+
+Every run produces a single auditable event log (bytes fed, header,
+stage completions, upgrades, decode steps, per-step stage) that can be
+dumped as JSONL for CI artifacts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Sequence
+
+from repro.core import wire
+from repro.transmission.client import ProgressiveClient
+from repro.transmission.scheduler import StageCost, Timeline
+from repro.transmission.simulator import BandwidthTrace
+
+DEFAULT_CHUNK_BYTES = 64 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionEvent:
+    """One entry of the audit log. ``data`` is JSON-able."""
+
+    t_s: float
+    kind: str   # chunk | header | stage_complete | result_ready |
+                # cold_start | upgrade | decode_step
+    data: dict
+
+
+@dataclasses.dataclass
+class SessionResult:
+    """Outcome of a session run: milestones + the audit log + the live
+    endpoints (client always; server in serving mode)."""
+
+    events: list[SessionEvent]
+    client: ProgressiveClient
+    timeline: Timeline | None = None
+    server: Any = None
+    tokens: Any = None
+    upgrades: list | None = None      # (decode step, new stage)
+    stage_at_step: list | None = None
+
+    def to_jsonl(self) -> str:
+        return "\n".join(
+            json.dumps({"t_s": e.t_s, "kind": e.kind, **e.data},
+                       sort_keys=True)
+            for e in self.events) + "\n"
+
+    def events_of(self, kind: str) -> list[SessionEvent]:
+        return [e for e in self.events if e.kind == kind]
+
+
+class Session:
+    """Streams a serialized progressive model through a bandwidth trace
+    into the real client, on a deterministic discrete-event clock.
+
+    The stream is cut at transport-chunk boundaries (``chunk_bytes``
+    grid) *and* at header/stage ends, so stage completions are stamped
+    with the exact byte-clock time of their final byte while the client
+    still sees arbitrary mid-plane chunk boundaries in between.
+    """
+
+    def __init__(self, blob: bytes, trace: BandwidthTrace, *,
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 latency_s: float = 0.0, name: str = ""):
+        if chunk_bytes < 1:
+            raise ValueError("chunk_bytes must be >= 1")
+        self.blob = bytes(blob)
+        self.trace = trace
+        self.chunk_bytes = chunk_bytes
+        self.latency_s = latency_s
+        self.name = name or getattr(trace, "name", "")
+        meta, hdr = wire.decode_header(self.blob)
+        self.layout = wire.layout_from_header(meta, hdr)
+        if self.layout.total_bytes != len(self.blob):
+            raise ValueError(
+                f"blob is {len(self.blob)} bytes but header declares "
+                f"{self.layout.total_bytes}")
+        ends = []
+        off = hdr
+        for sb in self.layout.stage_bytes:
+            off += sb
+            ends.append(off)
+        self._stage_ends = ends           # wire offset at each stage's end
+        self._header_end = hdr
+        self._feed_plan_cache: list[tuple[int, int, float]] | None = None
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def from_model(cls, prog, trace: BandwidthTrace, **kw) -> "Session":
+        """Serialize a server-side ProgressiveModel and stream it."""
+        return cls(wire.encode(prog), trace, **kw)
+
+    @classmethod
+    def from_scenario(cls, blob: bytes, scenario, *, seed: int = 0,
+                      **overrides) -> "Session":
+        """Build from a named scenario (see
+        :mod:`repro.transmission.scenarios`): trace, latency and chunk
+        size come from the catalog entry; ``overrides`` win."""
+        kw = dict(chunk_bytes=scenario.chunk_bytes,
+                  latency_s=scenario.latency_s,
+                  name=f"{scenario.name}@{seed}")
+        kw.update(overrides)
+        return cls(blob, scenario.make_trace(seed), **kw)
+
+    @property
+    def n_stages(self) -> int:
+        return len(self._stage_ends)
+
+    # -- byte plan ---------------------------------------------------------
+    def _pieces(self) -> list[tuple[int, int]]:
+        """(start, end) byte ranges: the chunk grid split additionally at
+        the header end and every stage end."""
+        total = len(self.blob)
+        cuts = set(range(self.chunk_bytes, total, self.chunk_bytes))
+        cuts.add(self._header_end)
+        cuts.update(self._stage_ends)
+        cuts.add(total)
+        bounds = sorted(c for c in cuts if 0 < c <= total)
+        pieces, prev = [], 0
+        for b in bounds:
+            if b > prev:
+                pieces.append((prev, b))
+                prev = b
+        return pieces
+
+    def _feed_plan(self) -> list[tuple[int, int, float]]:
+        """(start, end, wall_arrival_s) per piece for a link that never
+        idles (concurrent / serving mode). Chained
+        ``time_to_deliver`` queries, so milestones are exact."""
+        if self._feed_plan_cache is None:
+            tt = 0.0
+            plan = []
+            for a, b in self._pieces():
+                tt = self.trace.time_to_deliver(b - a, start_s=tt)
+                plan.append((a, b, self.latency_s + tt))
+            self._feed_plan_cache = plan
+        return self._feed_plan_cache
+
+    def stage_arrival_times(self) -> list[float]:
+        """Wall time each stage's last byte lands (link never idling) —
+        the same floats the serving run uses for its upgrades."""
+        ends = set(self._stage_ends)
+        return [w for _, b, w in self._feed_plan() if b in ends]
+
+    # -- mode 1: the Fig.-4 schedules, executed ----------------------------
+    def run_timeline(self, stage_costs: Sequence[StageCost], *,
+                     concurrent: bool = True) -> SessionResult:
+        """Execute a progressive transfer end to end: real bytes through
+        the real client, processing charged on a single simulated
+        compute queue (the paper's JS main thread + WebGL).
+
+        w/ concurrency: the link never idles. w/o: the link idles while
+        the compute queue drains, so the next stage's bytes are queried
+        against the trace from the moment processing finished.
+        """
+        if len(stage_costs) != self.n_stages:
+            raise ValueError(
+                f"{len(stage_costs)} costs for {self.n_stages} stages")
+        client = ProgressiveClient()
+        events: list[SessionEvent] = []
+        download_done: list[float] = []
+        result_ready: list[float] = []
+        tt = 0.0          # trace-clock time of last delivered byte
+        proc_free = 0.0   # wall time the compute queue frees up
+        for a, b in self._pieces():
+            if not concurrent and result_ready:
+                # link idles until the previous stage's result is shown
+                tt = max(tt, result_ready[-1] - self.latency_s)
+            tt = self.trace.time_to_deliver(b - a, start_s=tt)
+            wall = self.latency_s + tt
+            before = client.stages_complete
+            had_header = client.header_ready
+            client.feed(self.blob[a:b])
+            events.append(SessionEvent(wall, "chunk",
+                                       {"bytes": b - a, "through": b}))
+            if not had_header and client.header_ready:
+                events.append(SessionEvent(wall, "header",
+                                           {"bytes": self._header_end}))
+            for s in range(before + 1, client.stages_complete + 1):
+                # the co-simulation audit: the real decoder must complete
+                # stage s exactly at the byte the header algebra predicts
+                if b != self._stage_ends[s - 1]:
+                    raise AssertionError(
+                        f"client completed stage {s} at byte {b}, header "
+                        f"layout says {self._stage_ends[s - 1]}")
+                download_done.append(wall)
+                events.append(SessionEvent(
+                    wall, "stage_complete",
+                    {"stage": s, "through": b}))
+                start = max(wall, proc_free)
+                proc_free = start + stage_costs[s - 1].total
+                result_ready.append(proc_free)
+                events.append(SessionEvent(
+                    proc_free, "result_ready",
+                    {"stage": s, "process_start_s": start}))
+        if client.stages_complete != self.n_stages:
+            raise AssertionError(
+                f"stream exhausted at stage {client.stages_complete} "
+                f"of {self.n_stages}")
+        events.sort(key=lambda e: e.t_s)
+        return SessionResult(
+            events=events, client=client,
+            timeline=Timeline(download_done=download_done,
+                              result_ready=result_ready))
+
+    # -- mode 2: the operational serve path --------------------------------
+    def run_serving(self, model, prog, *, decode_steps: int, batch: dict,
+                    step_time_s: float | None = None,
+                    max_len: int | None = None) -> SessionResult:
+        """Drive a real ProgressiveServer from the byte stream: the
+        server sits on the client's PlaneStore (one ingest per stage,
+        one batched Pallas launch per container dtype) and decodes real
+        tokens; the simulated decode clock ticks ``step_time_s`` per
+        step, and upgrades happen between steps exactly when the trace
+        delivered each stage. Tokens, upgrade steps and the event log
+        are bit-deterministic for a fixed (blob, trace, seed).
+        """
+        from repro.serving.engine import ProgressiveServer, WireStoreReceiver
+
+        client = ProgressiveClient()
+        receiver = WireStoreReceiver(client, prog)
+        if max_len is None:
+            max_len = batch["tokens"].shape[1] + decode_steps
+        server = ProgressiveServer(model, prog, max_len=max_len,
+                                   receiver=receiver)
+        events: list[SessionEvent] = []
+        plan = self._feed_plan()
+        arrivals = self.stage_arrival_times()
+        idx = 0
+
+        def feed_until(t_wall: float) -> None:
+            nonlocal idx
+            while idx < len(plan) and plan[idx][2] <= t_wall:
+                a, b, w = plan[idx]
+                before = client.stages_complete
+                had_header = client.header_ready
+                client.feed(self.blob[a:b])
+                events.append(SessionEvent(w, "chunk",
+                                           {"bytes": b - a, "through": b}))
+                if not had_header and client.header_ready:
+                    events.append(SessionEvent(
+                        w, "header", {"bytes": self._header_end}))
+                for s in range(before + 1, client.stages_complete + 1):
+                    events.append(SessionEvent(
+                        w, "stage_complete", {"stage": s, "through": b}))
+                idx += 1
+
+        # cold start: serve as soon as stage 1 is in
+        t_cold = arrivals[0]
+        feed_until(t_cold)
+        if client.stages_complete < 1:
+            raise AssertionError("stage 1 not complete at its arrival time")
+        server.receive_stage()
+        server.start(batch)
+        events.append(SessionEvent(
+            t_cold, "cold_start",
+            {"stage": server.stage, "prompt_len": int(batch["tokens"].shape[1])}))
+
+        if step_time_s is None:
+            # fixed decode cadence spanning the rest of the download
+            step_time_s = max((arrivals[-1] - t_cold) / max(decode_steps, 1),
+                              1e-6)
+
+        def step_wall(i: int) -> float:
+            return t_cold + (i + 1) * step_time_s
+
+        def stage_arrival(i: int) -> bool:
+            feed_until(step_wall(i))
+            return receiver.stages_complete > server.stage
+
+        res = server.decode(decode_steps, stage_arrival=stage_arrival)
+        for i, stage in enumerate(res.stage_at_step):
+            events.append(SessionEvent(
+                step_wall(i), "decode_step", {"step": i, "stage": stage}))
+        for step, stage in res.upgrades:
+            events.append(SessionEvent(
+                step_wall(step), "upgrade", {"step": step, "stage": stage}))
+        events.sort(key=lambda e: e.t_s)
+        return SessionResult(
+            events=events, client=client, server=server,
+            tokens=res.tokens, upgrades=res.upgrades,
+            stage_at_step=res.stage_at_step)

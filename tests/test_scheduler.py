@@ -89,3 +89,68 @@ def test_latency_paid_once():
     ev = simulate_transfer([("a", 1_000_000), ("b", 1_000_000)], link)
     assert ev[0].start_s == pytest.approx(0.2)
     assert ev[1].end_s == pytest.approx(2.2)
+
+
+@pytest.mark.parametrize("concurrent", [True, False])
+@pytest.mark.parametrize("header_bytes", [0, 500_000])
+def test_timeline_latency_paid_exactly_once(concurrent, header_bytes):
+    """ISSUE 2 edge case: latency must shift the whole timeline once —
+    never double-counted, and identically whether header_bytes is 0 or
+    not (the old code special-cased header_bytes=0)."""
+    lat = Link(bandwidth_bytes_per_s=1e6, latency_s=0.3)
+    flat = Link(bandwidth_bytes_per_s=1e6, latency_s=0.0)
+    stage_bytes = [1_000_000] * 3
+    costs = [StageCost(0.0, 0.0, 0.1)] * 3
+    a = progressive_timeline(stage_bytes, lat, costs, concurrent,
+                             header_bytes=header_bytes)
+    b = progressive_timeline(stage_bytes, flat, costs, concurrent,
+                             header_bytes=header_bytes)
+    for x, y in zip(a.download_done, b.download_done):
+        assert x - y == pytest.approx(0.3, abs=1e-12)
+    # first milestone explicitly: latency + header + stage 1, nothing else
+    assert a.download_done[0] == pytest.approx(
+        0.3 + (header_bytes + 1_000_000) / 1e6)
+    single = singleton_timeline(3_000_000, lat, costs[-1])
+    assert single.download_done[0] == pytest.approx(0.3 + 3.0)
+
+
+def test_progressive_timeline_over_variable_trace():
+    """The algebra runs unchanged on a trace-driven link: milestones are
+    exact inverse queries against the piecewise profile."""
+    from repro.transmission.simulator import BandwidthTrace
+
+    trace = BandwidthTrace.steps([(1.0, 1e6), (1.0, 0.5e6)])
+    stage_bytes = [1_000_000, 1_000_000]
+    costs = [StageCost(0, 0, 0)] * 2
+    t = progressive_timeline(stage_bytes, trace, costs, concurrent=True)
+    # stage 1 fills the fast second; stage 2 takes 2s at half rate
+    assert t.download_done == [pytest.approx(1.0), pytest.approx(3.0)]
+
+
+def test_non_concurrent_idle_consumes_trace_wall_time():
+    """w/o concurrency the link idles while the client processes; with a
+    trace the resumed download sees the bandwidth of *that* moment."""
+    from repro.transmission.simulator import BandwidthTrace
+
+    trace = BandwidthTrace.steps([(1.0, 1e6), (9.0, 0.1e6)])
+    stage_bytes = [1_000_000, 100_000]
+    costs = [StageCost(0.0, 0.0, 2.0), StageCost(0.0, 0.0, 0.0)]
+    t = progressive_timeline(stage_bytes, trace, costs, concurrent=False)
+    # stage 1 lands at 1.0, processing until 3.0; stage 2's bytes then
+    # drip at 0.1 MB/s -> 1s more
+    assert t.download_done == [pytest.approx(1.0), pytest.approx(4.0)]
+    assert t.result_ready == [pytest.approx(3.0), pytest.approx(4.0)]
+
+
+def test_timeline_over_stalling_trace_monotone():
+    from repro.transmission.simulator import BandwidthTrace
+
+    trace = BandwidthTrace.constant(1e6).with_outage(1.5, 1.0)
+    stage_bytes = [1_000_000] * 3
+    costs = [StageCost(0.01, 0.01, 0.05)] * 3
+    for concurrent in (True, False):
+        t = progressive_timeline(stage_bytes, trace, costs, concurrent)
+        assert all(a <= b for a, b in zip(t.download_done, t.download_done[1:]))
+        assert all(d <= r for d, r in zip(t.download_done, t.result_ready))
+        # stage 2 must wait out the outage
+        assert t.download_done[1] >= 3.0

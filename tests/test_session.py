@@ -1,0 +1,355 @@
+"""Co-simulation Session: the byte clock coupled to the real
+client/server.
+
+Pins the ISSUE-2 acceptance surface:
+
+* algebra/execution agreement: ``scheduler.progressive_timeline`` and a
+  ``Session`` run agree on download-done and result-ready milestones to
+  <1e-9 s on constant links (both schedules), and the Table-I
+  ``w/ concurrency`` overhead vs singleton is ~0%;
+* the four named scenarios run deterministically from a seed through
+  the real client+server path (identical event logs and tokens);
+* prefix equivalence: after the session delivers a stage prefix, the
+  server's params match ``transmit_reconstruct`` exactly and decode
+  emits the same tokens as a directly-fed server;
+* launch-count regression: a full-model stage upgrade inside a session
+  is exactly one ``plane_or_segments`` launch per container dtype.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import wire
+from repro.core.bitplanes import PlaneSchedule
+from repro.core.policy import DivisionPolicy, TensorPlan
+from repro.core.progressive import divide, transmit_reconstruct
+from repro.kernels import ops
+from repro.models.model import build_model
+from repro.serving.engine import ProgressiveServer
+from repro.transmission import (
+    BandwidthTrace,
+    Link,
+    Session,
+    StageCost,
+    get_scenario,
+    list_scenarios,
+    overhead_pct,
+    progressive_timeline,
+    singleton_timeline,
+)
+
+TOL_S = 1e-9
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    """A small pytree model + its wire stream (no NN needed for the
+    timeline mode — the client is the real consumer either way)."""
+    k = jax.random.PRNGKey(0)
+    params = {
+        "embed": jax.random.normal(k, (40, 12)),
+        "layers": [
+            {"w": jax.random.normal(jax.random.fold_in(k, 1), (16, 16)),
+             "b": jnp.ones((16,))},
+        ],
+        "scale": jnp.float32(2.5),
+    }
+    prog = divide(params)
+    blob = wire.encode(prog)
+    meta, hdr = wire.decode_header(blob)
+    layout = wire.layout_from_header(meta, hdr)
+    return params, prog, blob, layout
+
+
+@pytest.fixture(scope="module")
+def served():
+    """A real (tiny) transformer + server-side artifacts, shared across
+    serving tests so jit compiles once."""
+    cfg = get_config("olmo-1b").reduced(n_layers=2, d_model=64, d_ff=128,
+                                        vocab=128, n_heads=2, n_kv=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prog = divide(params)
+    blob = wire.encode(prog)
+    batch = {"tokens": jax.random.randint(
+        jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab).astype(jnp.int32)}
+    return cfg, model, params, prog, blob, batch
+
+
+# ---------------------------------------------------------------------------
+# acceptance: algebra == execution
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("concurrent", [True, False])
+@pytest.mark.parametrize("latency_s", [0.0, 0.25])
+def test_session_matches_algebra_constant_link(tiny, concurrent, latency_s):
+    """The Fig.-4 timeline algebra and the executed session must agree
+    on every milestone to <1e-9 s — the two can no longer silently
+    diverge."""
+    _, prog, blob, layout = tiny
+    link = Link(bandwidth_bytes_per_s=5e3, latency_s=latency_s)
+    costs = [StageCost(0.001, 0.002, 0.01 * (s + 1))
+             for s in range(prog.n_stages)]
+    session = Session(blob, link.trace(), chunk_bytes=97,
+                      latency_s=link.latency_s)
+    got = session.run_timeline(costs, concurrent=concurrent).timeline
+    want = progressive_timeline(layout.stage_bytes, link, costs,
+                                concurrent=concurrent,
+                                header_bytes=layout.header_bytes)
+    assert len(got.download_done) == prog.n_stages
+    for a, b in zip(got.download_done, want.download_done):
+        assert abs(a - b) < TOL_S
+    for a, b in zip(got.result_ready, want.result_ready):
+        assert abs(a - b) < TOL_S
+
+
+def test_session_matches_algebra_on_trace(tiny):
+    """Same agreement on a fluctuating trace with a stall — the byte
+    clock is the same exact inverse query on both sides."""
+    _, prog, blob, layout = tiny
+    trace = BandwidthTrace.steps([(0.1, 8e3), (0.05, 0.0), (1.0, 3e3)])
+    costs = [StageCost(0, 0, 0.004)] * prog.n_stages
+    session = Session(blob, trace, chunk_bytes=64)
+    got = session.run_timeline(costs).timeline
+    want = progressive_timeline(layout.stage_bytes, trace, costs,
+                                concurrent=True,
+                                header_bytes=layout.header_bytes)
+    for a, b in zip(got.download_done, want.download_done):
+        assert abs(a - b) < TOL_S
+
+
+def test_table1_concurrency_overhead_is_zero(tiny):
+    """Paper Table I, verified by a test on the executed path: when each
+    stage's processing fits inside the next stage's download window,
+    progressive w/ concurrency costs the same as the singleton
+    download."""
+    _, prog, blob, layout = tiny
+    # 1 kB/s: every stage downloads for >= 0.05 s; keep costs well under
+    per_stage_dl = min(layout.stage_bytes) / 1e3
+    costs = [StageCost(0.0, 0.0, 0.2 * per_stage_dl)] * prog.n_stages
+    session = Session(blob, BandwidthTrace.constant(1e3), chunk_bytes=128)
+    prog_t = session.run_timeline(costs, concurrent=True).timeline
+    single = singleton_timeline(layout.total_bytes,
+                                Link(bandwidth_bytes_per_s=1e3), costs[-1])
+    assert overhead_pct(prog_t, single) == pytest.approx(0.0, abs=1e-9)
+    # and w/o concurrency pays the paper's serial penalty
+    serial = session.run_timeline(costs, concurrent=False).timeline
+    assert overhead_pct(serial, single) > 5.0
+
+
+def test_event_log_is_audit_complete(tiny):
+    _, prog, blob, layout = tiny
+    costs = [StageCost(0, 0, 0.001)] * prog.n_stages
+    session = Session(blob, BandwidthTrace.constant(1e4), chunk_bytes=100)
+    res = session.run_timeline(costs)
+    kinds = {e.kind for e in res.events}
+    assert {"chunk", "header", "stage_complete", "result_ready"} <= kinds
+    fed = sum(e.data["bytes"] for e in res.events_of("chunk"))
+    assert fed == len(blob) == res.client.bytes_fed
+    assert [e.data["stage"] for e in res.events_of("stage_complete")] == \
+        list(range(1, prog.n_stages + 1))
+    # times are non-decreasing and jsonl round-trips
+    ts = [e.t_s for e in res.events]
+    assert ts == sorted(ts)
+    import json
+    lines = res.to_jsonl().strip().splitlines()
+    assert len(lines) == len(res.events)
+    assert all(isinstance(json.loads(l), dict) for l in lines)
+
+
+def test_session_rejects_mismatched_costs(tiny):
+    _, prog, blob, _ = tiny
+    session = Session(blob, BandwidthTrace.constant(1e4))
+    with pytest.raises(ValueError, match="costs"):
+        session.run_timeline([StageCost(0, 0, 0)])
+
+
+# ---------------------------------------------------------------------------
+# acceptance: named scenarios, deterministic, through client+server
+# ---------------------------------------------------------------------------
+
+def test_scenario_catalog_has_required_coverage():
+    names = list_scenarios()
+    assert len(names) >= 4
+    assert {"browser-3g", "browser-lte-handoff", "edge-stall",
+            "pod-coldstart"} <= set(names)
+    # at least one stall/outage scenario and one variable-rate trace
+    stall = get_scenario("edge-stall").make_trace(0)
+    assert any(r == 0.0 for _, r in stall.segments)
+    var = get_scenario("browser-3g").make_trace(0)
+    assert len({r for _, r in var.segments}) > 10
+
+
+@pytest.mark.parametrize("name", ["browser-3g", "browser-lte-handoff",
+                                  "edge-stall", "pod-coldstart"])
+def test_scenarios_deterministic_through_real_client_and_server(served, name):
+    """Each named scenario, run twice from the same seed, produces
+    bit-identical event logs, upgrade schedules and generated tokens —
+    real bytes, real PlaneStore, real decode."""
+    cfg, model, params, prog, blob, batch = served
+    scenario = get_scenario(name)
+
+    def go():
+        session = Session.from_scenario(blob, scenario, seed=3)
+        return session.run_serving(model, prog, decode_steps=6, batch=batch)
+
+    a, b = go(), go()
+    assert a.events == b.events
+    assert a.upgrades == b.upgrades
+    assert a.stage_at_step == b.stage_at_step
+    np.testing.assert_array_equal(np.asarray(a.tokens), np.asarray(b.tokens))
+    # a different seed gives a different bandwidth realization for the
+    # jittered families (the catalog is a family, not one trace)
+    if name in ("browser-3g", "browser-lte-handoff", "edge-stall"):
+        assert scenario.make_trace(3).segments != scenario.make_trace(4).segments
+    # and some tokens were actually produced at reduced precision
+    assert a.stage_at_step[0] >= 1
+    assert a.server.stage >= 1
+
+
+def test_scenario_with_stall_delays_stage(tiny):
+    """The outage visibly shapes the timeline: stages due mid-stall wait
+    for the window to close."""
+    _, prog, blob, layout = tiny
+    base = BandwidthTrace.constant(1e3)
+    stalled = base.with_outage(0.5, 2.0)
+    costs = [StageCost(0, 0, 0)] * prog.n_stages
+    t_base = Session(blob, base, chunk_bytes=128).run_timeline(costs).timeline
+    t_stall = Session(blob, stalled, chunk_bytes=128).run_timeline(costs).timeline
+    assert t_stall.total_s == pytest.approx(t_base.total_s + 2.0, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: prefix equivalence through the serving path
+# ---------------------------------------------------------------------------
+
+def test_prefix_equivalence_per_stage(served):
+    """After the session delivers stage s, the server's params equal
+    ``transmit_reconstruct`` at stage s exactly — per tensor, original
+    dtypes — all the way up the schedule."""
+    cfg, model, params, prog, blob, batch = served
+    session = Session(blob, BandwidthTrace.constant(50e3), chunk_bytes=4096)
+    # long decode with a cadence that crosses every stage boundary
+    res = session.run_serving(model, prog, decode_steps=2 * prog.n_stages,
+                              batch=batch)
+    checked = set()
+    # replay: re-run and snapshot params at every upgrade via the events
+    client_stages = [e.data["stage"] for e in res.events_of("upgrade")]
+    assert res.server.stage == prog.n_stages
+    for stage in [1] + client_stages:
+        if stage in checked:
+            continue
+        checked.add(stage)
+        want = transmit_reconstruct(params, upto_stage=stage)
+        # rebuild what the receiver served at that stage from a fresh
+        # prefix-fed client
+        prefix_session = Session(blob, BandwidthTrace.constant(50e3),
+                                 chunk_bytes=4096)
+        layout = prefix_session.layout
+        upto = layout.header_bytes + sum(layout.stage_bytes[:stage])
+        from repro.serving.engine import WireStoreReceiver
+        from repro.transmission.client import ProgressiveClient
+        client = ProgressiveClient()
+        client.feed(blob[:upto])
+        assert client.stages_complete == stage
+        got = WireStoreReceiver(client, prog).materialize()
+        fw, _ = jax.tree_util.tree_flatten_with_path(want)
+        fg, _ = jax.tree_util.tree_flatten_with_path(got)
+        for (pa, a), (pb, b) in zip(fg, fw):
+            assert pa == pb
+            assert np.asarray(a).dtype == np.asarray(b).dtype
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=str(pa))
+
+
+def test_session_tokens_match_directly_fed_server(served):
+    """Decode through the session (wire bytes -> client store -> server)
+    emits the same tokens as a server fed the same stages directly from
+    the in-memory planes at the same decode steps."""
+    cfg, model, params, prog, blob, batch = served
+    steps = 10
+    session = Session.from_scenario(blob, get_scenario("edge-stall"), seed=0)
+    res = session.run_serving(model, prog, decode_steps=steps, batch=batch)
+
+    ref = ProgressiveServer(model, prog, max_len=batch["tokens"].shape[1] + steps)
+    ref.receive_stage()
+    ref.start(batch)
+    toks = []
+    for i in range(steps):
+        while ref.stage < res.stage_at_step[i]:
+            ref.receive_stage()
+        r = ref.decode(1)
+        toks.append(np.asarray(r.tokens))
+    ref_tokens = np.concatenate(toks, axis=1)
+    np.testing.assert_array_equal(np.asarray(res.tokens), ref_tokens)
+
+
+def test_mid_stage_bytes_do_not_leak_into_served_params(served):
+    """The server must serve exact stage prefixes: pending planes of a
+    partially-received stage stay out of its params until the stage
+    completes."""
+    cfg, model, params, prog, blob, batch = served
+    from repro.serving.engine import WireStoreReceiver
+    from repro.transmission.client import ProgressiveClient
+    layout = Session(blob, BandwidthTrace.constant(1e6)).layout
+    upto = layout.header_bytes + layout.stage_bytes[0] \
+        + layout.stage_bytes[1] // 2
+    client = ProgressiveClient()
+    client.feed(blob[:upto])
+    assert client.stages_complete == 1
+    got = WireStoreReceiver(client, prog).materialize()
+    want = transmit_reconstruct(params, upto_stage=1)
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# acceptance: O(1)-launch upgrades inside a session (PR-1 invariant)
+# ---------------------------------------------------------------------------
+
+class MixedBitsPolicy(DivisionPolicy):
+    """uint8 container for small tensors, uint16 for matrices."""
+
+    def plan(self, path, shape, dtype, slice_idx=None):
+        if len(shape) < 2:
+            return TensorPlan(schedule=PlaneSchedule(bits=8, widths=(2, 2, 4)))
+        return TensorPlan(schedule=PlaneSchedule(bits=16, widths=(2,) * 8))
+
+    @property
+    def n_stages(self):
+        return 8
+
+
+def test_stage_upgrade_in_session_is_one_launch_per_dtype(tiny):
+    """Regression guard on PR 1's O(1)-launch invariant, now measured
+    through the full co-simulation path: every full-model stage
+    upgrade inside a session is exactly one ``plane_or_segments``
+    launch per container dtype present in that stage — never one per
+    tensor, and never a duplicate ingest from the serving side."""
+    params, _, _, _ = tiny
+    mixed = divide(params, MixedBitsPolicy())
+    blob = wire.encode(mixed)
+    session = Session(blob, BandwidthTrace.constant(1e5), chunk_bytes=256)
+    costs = [StageCost(0, 0, 0)] * mixed.n_stages
+    ops.reset_launch_counts()
+    session.run_timeline(costs)
+    # stages 1..3 carry uint8+uint16 planes (2 launches); 4..8 uint16 only
+    expected = 3 * 2 + 5 * 1
+    assert ops.LAUNCH_COUNTS["plane_or_segments"] == expected
+    assert ops.LAUNCH_COUNTS["plane_or"] == 0
+
+
+def test_serving_session_upgrades_do_not_double_ingest(served):
+    """The server decodes from the client's store: a stage upgrade in
+    serving mode costs the client's single batched launch and nothing
+    more."""
+    cfg, model, params, prog, blob, batch = served
+    session = Session(blob, BandwidthTrace.constant(1e6), chunk_bytes=8192)
+    ops.reset_launch_counts()
+    session.run_serving(model, prog, decode_steps=2 * prog.n_stages,
+                        batch=batch)
+    # one container dtype in this model -> exactly n_stages launches
+    assert ops.LAUNCH_COUNTS["plane_or_segments"] == prog.n_stages
+    assert ops.LAUNCH_COUNTS["plane_or"] == 0

@@ -1,0 +1,185 @@
+"""BandwidthTrace: exact inverse queries over piecewise profiles, and
+the simulator edge cases pinned by ISSUE 2 (zero-length payloads,
+boundary truncation, latency accounting)."""
+import numpy as np
+import pytest
+
+from repro.transmission.simulator import (
+    BandwidthTrace,
+    Link,
+    as_trace,
+    bytes_available,
+    simulate_transfer,
+)
+
+
+# ---------------------------------------------------------------------------
+# constant traces == the old Link algebra
+# ---------------------------------------------------------------------------
+
+def test_constant_matches_link():
+    tr = BandwidthTrace.constant(1e6)
+    assert tr.bytes_available(2.5) == pytest.approx(2.5e6)
+    assert tr.time_to_deliver(2_500_000) == pytest.approx(2.5)
+    # chained queries == one big query
+    t1 = tr.time_to_deliver(1_000_000)
+    t2 = tr.time_to_deliver(1_500_000, start_s=t1)
+    assert t2 == pytest.approx(tr.time_to_deliver(2_500_000), abs=1e-12)
+
+
+def test_as_trace_normalizes():
+    tr, lat = as_trace(Link(bandwidth_bytes_per_s=2e6, latency_s=0.3))
+    assert lat == 0.3
+    assert tr.time_to_deliver(2e6) == pytest.approx(1.0)
+    tr2, lat2 = as_trace(BandwidthTrace.constant(1.0))
+    assert lat2 == 0.0 and tr2.time_to_deliver(1.0) == pytest.approx(1.0)
+    with pytest.raises(TypeError):
+        as_trace(1e6)
+
+
+# ---------------------------------------------------------------------------
+# piecewise profiles: steps, ramps, stalls
+# ---------------------------------------------------------------------------
+
+def test_steps_exact_piecewise():
+    tr = BandwidthTrace.steps([(1.0, 1e6), (1.0, 0.5e6)])
+    assert tr.bytes_available(0.5) == pytest.approx(0.5e6)
+    assert tr.bytes_available(1.5) == pytest.approx(1.25e6)
+    # past the end the last rate is held
+    assert tr.bytes_available(3.0) == pytest.approx(2.0e6)
+    assert tr.time_to_deliver(1.25e6) == pytest.approx(1.5)
+    assert tr.time_to_deliver(2.0e6) == pytest.approx(3.0)
+    # inverse round trip at a rate change
+    assert tr.time_to_deliver(tr.bytes_available(1.0)) == pytest.approx(1.0)
+
+
+def test_time_to_deliver_with_start_offset():
+    tr = BandwidthTrace.steps([(1.0, 1e6), (1.0, 0.5e6)])
+    # 0.75 MB starting at t=0.5: 0.5 MB by t=1.0, then 0.25 MB at 0.5 MB/s
+    assert tr.time_to_deliver(0.75e6, start_s=0.5) == pytest.approx(1.5)
+
+
+def test_zero_byte_payload_is_instant():
+    tr = BandwidthTrace.steps([(1.0, 1e6), (2.0, 0.0)])
+    assert tr.time_to_deliver(0) == 0.0
+    assert tr.time_to_deliver(0, start_s=1.7) == 1.7  # even inside a stall
+
+
+def test_stall_delivery_jumps_the_outage():
+    tr = BandwidthTrace.constant(1e6).with_outage(1.0, 2.0)
+    # first MB ends exactly when the outage begins — earliest time wins
+    assert tr.time_to_deliver(1e6) == pytest.approx(1.0)
+    # one more byte must wait out the stall
+    assert tr.time_to_deliver(1e6 + 1) == pytest.approx(3.0 + 1e-6)
+    # bytes_available is flat across the window
+    assert tr.bytes_available(1.0) == tr.bytes_available(2.9) == pytest.approx(1e6)
+    # profile resumes in absolute time after the window
+    assert tr.bytes_available(4.0) == pytest.approx(2e6)
+
+
+def test_zero_rate_tail_raises():
+    tr = BandwidthTrace.steps([(1.0, 1e3), (1.0, 0.0)])
+    assert tr.time_to_deliver(1e3) == pytest.approx(1.0)
+    with pytest.raises(ValueError, match="zero-rate tail"):
+        tr.time_to_deliver(1e3 + 1)
+
+
+def test_ramp_is_monotone_between_endpoints():
+    tr = BandwidthTrace.ramp(2e6, 0.5e6, 1.0, steps=10)
+    rates = [r for _, r in tr.segments]
+    assert all(a > b for a, b in zip(rates, rates[1:]))
+    assert rates[0] < 2e6 and rates[-1] > 0.5e6  # midpoint samples
+
+
+def test_validation():
+    with pytest.raises(ValueError):
+        BandwidthTrace([])
+    with pytest.raises(ValueError):
+        BandwidthTrace([(0.0, 1e6)])
+    with pytest.raises(ValueError):
+        BandwidthTrace([(1.0, -5.0)])
+    with pytest.raises(ValueError):
+        BandwidthTrace.jittered(1e6, 1.5, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# seeded jitter: deterministic per seed
+# ---------------------------------------------------------------------------
+
+def test_jitter_deterministic_in_seed():
+    a = BandwidthTrace.jittered(1e6, 0.5, seed=7)
+    b = BandwidthTrace.jittered(1e6, 0.5, seed=7)
+    c = BandwidthTrace.jittered(1e6, 0.5, seed=8)
+    assert a.segments == b.segments
+    assert a.segments != c.segments
+    rates = np.array([r for _, r in a.segments])
+    assert rates.min() >= 0.5e6 and rates.max() <= 1.5e6
+
+
+# ---------------------------------------------------------------------------
+# CSV traces
+# ---------------------------------------------------------------------------
+
+def test_from_csv(tmp_path):
+    p = tmp_path / "trace.csv"
+    p.write_text("# comment\ntime_s,bytes_per_s\n0,1000\n2,500\n3,0\n")
+    tr = BandwidthTrace.from_csv(p)
+    assert tr.bytes_available(1.0) == pytest.approx(1000)
+    assert tr.bytes_available(2.5) == pytest.approx(2250)
+    assert tr.bytes_available(10.0) == pytest.approx(2500)  # 0-rate tail held
+    with pytest.raises(ValueError, match="zero-rate tail"):
+        tr.time_to_deliver(2501)
+
+
+def test_from_csv_checked_in_trace():
+    tr = BandwidthTrace.from_csv("benchmarks/traces/lte_drive.csv")
+    assert tr.duration_s >= 60.0
+    # the tunnel outage at t=35..39 delivers nothing
+    assert tr.bytes_available(39.0) == pytest.approx(tr.bytes_available(35.0))
+    assert tr.bytes_available(60.0) > 50e6  # ~2 MB/s for a minute
+
+
+def test_from_csv_rejects_bad_rows(tmp_path):
+    p = tmp_path / "bad.csv"
+    p.write_text("0,100\n0.5,abc\n")
+    with pytest.raises(ValueError):
+        BandwidthTrace.from_csv(p)
+    p.write_text("1,100\n2,200\n")
+    with pytest.raises(ValueError, match="start at time 0"):
+        BandwidthTrace.from_csv(p)
+    p.write_text("0,100\n2,200\n2,300\n")
+    with pytest.raises(ValueError, match="strictly increase"):
+        BandwidthTrace.from_csv(p)
+
+
+# ---------------------------------------------------------------------------
+# legacy event API: edge cases pinned
+# ---------------------------------------------------------------------------
+
+LINK = Link(bandwidth_bytes_per_s=1e6)
+
+
+def test_zero_length_payload_zero_duration_event():
+    ev = simulate_transfer([("hdr", 0), ("a", 1_000_000), ("empty", 0)], LINK)
+    assert ev[0].start_s == ev[0].end_s == 0.0
+    assert ev[1].end_s == pytest.approx(1.0)
+    assert ev[2].start_s == ev[2].end_s == pytest.approx(1.0)
+    # no ZeroDivisionError, no phantom bytes, at any time
+    for t in (0.0, 0.5, 1.0, 2.0):
+        assert bytes_available(ev, t) == min(int(1e6 * t), 1_000_000)
+
+
+def test_bytes_available_exact_at_event_boundaries():
+    ev = simulate_transfer([("a", 999_999), ("b", 1)], LINK)
+    # full payload counts exactly at its end; truncation can't lose or
+    # invent a byte at the boundary
+    assert bytes_available(ev, ev[0].end_s) == 999_999
+    assert bytes_available(ev, np.nextafter(ev[0].end_s, 0.0)) <= 999_999
+    assert bytes_available(ev, ev[1].end_s) == 1_000_000
+    assert bytes_available(ev, ev[1].end_s + 1.0) == 1_000_000
+
+
+def test_simulate_transfer_over_trace_with_stall():
+    tr = BandwidthTrace.constant(1e6).with_outage(0.5, 1.0)
+    ev = simulate_transfer([("a", 1_000_000)], tr)
+    assert ev[0].end_s == pytest.approx(2.0)  # 0.5s + 1s stall + 0.5s

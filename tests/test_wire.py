@@ -103,3 +103,100 @@ def test_bad_magic():
     client = ProgressiveClient()
     with pytest.raises(ValueError):
         client.feed(b"XXXX" + b"\0" * 100)
+
+
+# ---------------------------------------------------------------------------
+# property-based chunk-boundary equivalence (ISSUE 2 satellite): for
+# random models and random byte splits of the same wire stream, the
+# client must reach bit-identical PlaneStore state and materialize()
+# output — including splits inside the header, mid-plane, and 1-byte
+# feeds.
+# ---------------------------------------------------------------------------
+
+def _random_params(seed: int, n_tensors: int, dims):
+    k = jax.random.PRNGKey(seed)
+    params = {}
+    for i in range(n_tensors):
+        k, sub = jax.random.split(k)
+        shape = tuple(dims[(i + j) % len(dims)] for j in range(1 + i % 2))
+        params[f"t{i}"] = jax.random.normal(sub, shape) * (1 + i)
+    return params
+
+
+def _feed_in_pieces(blob: bytes, cuts: list[int]) -> ProgressiveClient:
+    client = ProgressiveClient()
+    prev = 0
+    for c in sorted(set(cuts)) + [len(blob)]:
+        if prev < c:
+            client.feed(blob[prev:c])
+            prev = c
+    return client
+
+
+def _assert_stores_bit_identical(a: ProgressiveClient, b: ProgressiveClient):
+    assert a.stages_complete == b.stages_complete
+    assert set(a.store.buffers) == set(b.store.buffers)
+    for dt, buf in a.store.buffers.items():
+        np.testing.assert_array_equal(np.asarray(buf),
+                                      np.asarray(b.store.buffers[dt]),
+                                      err_msg=f"buffer {dt}")
+    assert a.store.received == b.store.received
+    got_a, got_b = a.materialize(), b.materialize()
+    assert set(got_a) == set(got_b)
+    for key in got_a:
+        assert got_a[key].dtype == got_b[key].dtype
+        np.testing.assert_array_equal(np.asarray(got_a[key]),
+                                      np.asarray(got_b[key]), err_msg=key)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_random_splits_reach_bit_identical_state(data):
+    seed = data.draw(st.integers(0, 7), label="model_seed")
+    n_tensors = data.draw(st.integers(1, 3), label="n_tensors")
+    dims = data.draw(st.lists(st.integers(1, 9), min_size=1, max_size=3),
+                     label="dims")
+    params = _random_params(seed, n_tensors, dims)
+    blob = wire.encode(divide(params))
+
+    cuts = data.draw(
+        st.lists(st.integers(1, len(blob) - 1), max_size=24, unique=True),
+        label="cuts")
+    whole = _feed_in_pieces(blob, [])
+    split = _feed_in_pieces(blob, cuts)
+    _assert_stores_bit_identical(whole, split)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 3))
+def test_splits_inside_header_and_mid_plane(seed):
+    """Adversarial cut placement: inside the 12-byte magic/length
+    prefix, inside the JSON header, and one byte into every plane
+    payload."""
+    params = _random_params(seed, 2, [5, 3])
+    model = divide(params)
+    blob = wire.encode(model)
+    meta, hdr = wire.decode_header(blob)
+    layout = wire.layout_from_header(meta, hdr)
+    cuts = [1, 4, 11, hdr - 1, hdr + 1]
+    off = hdr
+    for stage in layout.stages:
+        for (_, _, nbytes, _) in stage:
+            cuts.append(off + 1)            # 1 byte into the plane
+            cuts.append(off + nbytes // 2)  # mid-plane
+            off += nbytes
+    cuts = [c for c in cuts if 0 < c < len(blob)]
+    whole = _feed_in_pieces(blob, [])
+    split = _feed_in_pieces(blob, cuts)
+    _assert_stores_bit_identical(whole, split)
+
+
+def test_one_byte_feeds_entire_stream():
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (6, 3)),
+              "b": jnp.ones((3,))}
+    model = divide(params)
+    blob = wire.encode(model)
+    whole = _feed_in_pieces(blob, [])
+    split = _feed_in_pieces(blob, list(range(1, len(blob))))
+    assert split.stages_complete == model.n_stages
+    _assert_stores_bit_identical(whole, split)
