@@ -1,0 +1,148 @@
+"""Resident-serving benchmark: fp-materialized vs quantized-resident.
+
+Measures, per precision stage, the three quantities the quantized-
+resident refactor is about:
+
+* **resident weight HBM bytes** — what the live param pytree pins:
+  fp mode = float leaves (the re-materialized model) *plus* the uint
+  accumulators it keeps underneath; quantized mode = the uint
+  accumulator views plus the tiny fp remainder (norms/gates) and the
+  (1,1)-ish affine metadata.
+* **upgrade latency** — ``receive_stage()`` wall time: fp pays ingest +
+  model-wide incremental dequantize; quantized pays ingest + metadata
+  refresh only.
+* **per-step decode time** — greedy decode through the jitted step at
+  the final stage (plus the compiled-executable count, which must be 1
+  for the quantized server across every upgrade).
+
+Emits ``artifacts/bench/BENCH_resident_serving.json`` — the first
+datapoint of the perf trajectory. On this CPU container the Pallas
+dequant-matmul runs *interpreted*, so quantized decode steps carry a
+large constant interpreter overhead that a real TPU does not have; the
+bytes and upgrade-latency columns are the portable signal here.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.bitplanes import PlaneSchedule
+from repro.core.policy import UniformPolicy
+from repro.core.progressive import divide
+from repro.models.model import build_model
+from repro.serving.engine import ProgressiveServer, resident_report
+
+OUT_PATH = "artifacts/bench/BENCH_resident_serving.json"
+
+
+def _fp_weight_bytes(params) -> int:
+    return sum(np.size(l) * jnp.asarray(l).dtype.itemsize
+               for l in jax.tree.leaves(params))
+
+
+def _resident_bytes(server: ProgressiveServer) -> dict:
+    """Device bytes the live server pins for weights. Both modes keep
+    the flat uint accumulators (upgrades OR into them). On top of that,
+    fp mode holds the full float materialization, while quantized mode
+    holds the *uint* leaf views (slicing a buffer outside jit copies —
+    the honest cost of view-shaped params) plus the tiny fp remainder
+    and affine metadata. No fp weight buffer exists in quantized mode;
+    the uint views are k-bit, so the total is (2k)/(k+32) of fp mode."""
+    rep = server.resident_report()
+    store = (server._receiver.store if server._receiver is not None
+             else server.state.store)
+    if server.resident == "fp":
+        return {"weights": rep["fp_bytes"],
+                "accumulators": store.resident_bytes(),
+                "total": rep["fp_bytes"] + store.resident_bytes()}
+    total = (store.resident_bytes() + rep["quantized_bytes"]
+             + rep["fp_bytes"] + rep["metadata_bytes"])
+    return {"weights": rep["quantized_bytes"],
+            "accumulators": store.resident_bytes(),
+            "fp_remainder": rep["fp_bytes"],
+            "metadata": rep["metadata_bytes"],
+            "total": total}
+
+
+def bench(arch: str = "olmo-1b", *, stages: int = 4, decode_steps: int = 8,
+          prompt_len: int = 8, batch: int = 2, seed: int = 0) -> dict:
+    widths = tuple([16 // stages] * stages)
+    schedule = PlaneSchedule(bits=16, widths=widths)
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    prog = divide(params, UniformPolicy(schedule=schedule))
+    tokens = jax.random.randint(jax.random.PRNGKey(seed + 1),
+                                (batch, prompt_len), 0, cfg.vocab
+                                ).astype(jnp.int32)
+    max_len = prompt_len + decode_steps
+
+    servers = {m: ProgressiveServer(model, prog, max_len=max_len, resident=m)
+               for m in ("fp", "quantized")}
+    per_stage = []
+    for s in range(1, prog.n_stages + 1):
+        row = {"stage": s, "bits": schedule.cumulative_bits[s - 1]}
+        for mode, srv in servers.items():
+            t0 = time.perf_counter()
+            srv.receive_stage()
+            jax.block_until_ready(jax.tree.leaves(srv.params))
+            row[f"{mode}_upgrade_s"] = time.perf_counter() - t0
+            row[f"{mode}_resident_bytes"] = _resident_bytes(srv)
+        per_stage.append(row)
+
+    decode = {}
+    for mode, srv in servers.items():
+        srv.start({"tokens": tokens})
+        srv.decode(2)  # warm the compiled step
+        srv.start({"tokens": tokens})
+        res = srv.decode(decode_steps)
+        decode[mode] = {
+            "per_step_s": float(np.mean(res.per_step_s)),
+            "decode_cache_size": srv.decode_cache_size(),
+        }
+    return {
+        "bench": "resident_serving",
+        "arch": arch,
+        "schedule": {"bits": 16, "widths": list(widths)},
+        "backend": jax.default_backend(),
+        "interpret_kernels": jax.default_backend() != "tpu",
+        "fp_model_bytes": _fp_weight_bytes(params),
+        "stages": per_stage,
+        "decode": decode,
+    }
+
+
+def main(quick: bool = False, out: str = OUT_PATH) -> None:
+    result = bench(decode_steps=4 if quick else 8)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+
+    print(f"\n== resident serving: fp vs quantized ({result['arch']}) ==")
+    print(f"{'stage':>5} {'bits':>4} {'fp bytes':>12} {'quant bytes':>12} "
+          f"{'fp upg':>9} {'quant upg':>9}")
+    for r in result["stages"]:
+        print(f"{r['stage']:5d} {r['bits']:4d} "
+              f"{r['fp_resident_bytes']['total']:12d} "
+              f"{r['quantized_resident_bytes']['total']:12d} "
+              f"{r['fp_upgrade_s']*1e3:7.1f}ms "
+              f"{r['quantized_upgrade_s']*1e3:7.1f}ms")
+    d = result["decode"]
+    print(f"decode per step: fp {d['fp']['per_step_s']*1e3:.1f}ms, "
+          f"quantized {d['quantized']['per_step_s']*1e3:.1f}ms "
+          f"(interpreted kernels: {result['interpret_kernels']}); "
+          f"quantized decode executables: "
+          f"{d['quantized']['decode_cache_size']}")
+    assert d["quantized"]["decode_cache_size"] == 1, \
+        "quantized-resident decode must never recompile across upgrades"
+    print(f"-> {out}")
+
+
+if __name__ == "__main__":
+    main()

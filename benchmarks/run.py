@@ -15,11 +15,11 @@ def main() -> None:
                     help="reduced training steps / fewer archs")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table1,table2,table3,"
-                         "roofline,upgrade_latency")
+                         "roofline,upgrade_latency,resident_serving")
     args = ap.parse_args()
 
     from benchmarks import table1_execution_time, table2_accuracy, table3_ttfi
-    from benchmarks import roofline, upgrade_latency
+    from benchmarks import resident_serving, roofline, upgrade_latency
 
     benches = {
         "table1": table1_execution_time,
@@ -27,6 +27,7 @@ def main() -> None:
         "table3": table3_ttfi,
         "roofline": roofline,
         "upgrade_latency": upgrade_latency,
+        "resident_serving": resident_serving,
     }
     selected = (args.only.split(",") if args.only else list(benches))
 

@@ -12,6 +12,14 @@ same event log — on any machine.
         [--arch mixtral-8x22b] [--scenario browser-lte-handoff] [--seed 0]
     PYTHONPATH=src python examples/progressive_serving.py \
         --bandwidth-mbps 2.5   # constant link instead of a scenario
+    PYTHONPATH=src python examples/progressive_serving.py \
+        --resident quantized   # decode straight from the uint accumulators
+
+``--resident quantized`` serves the whole model from the PlaneStore's
+uint accumulators: every matmul runs the fused dequant kernel, no fp
+copy of the weights exists in HBM, and each precision upgrade is a
+metadata refresh that re-uses the single compiled decode step (the
+token stream is identical to --resident fp at every stage).
 """
 import argparse
 from pathlib import Path
@@ -35,6 +43,10 @@ def main():
                     help="use a constant link instead of --scenario")
     ap.add_argument("--decode-steps", type=int, default=24)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--resident", default="fp", choices=["fp", "quantized"],
+                    help="'quantized' serves from the uint plane "
+                         "accumulators: no fp weight copy, zero-recompile "
+                         "upgrades, identical tokens")
     ap.add_argument("--event-log", default=None,
                     help="write the session audit log (JSONL) here")
     args = ap.parse_args()
@@ -59,15 +71,23 @@ def main():
     B, S = 2, 16
     batch = build_batch(cfg, B, S, seed=1)
 
-    print(f"cold start at t={arrivals[0]:.2f}s with 2-bit weights; decoding...")
+    print(f"cold start at t={arrivals[0]:.2f}s with 2-bit weights "
+          f"({args.resident}-resident); decoding...")
     res = session.run_serving(model, prog, decode_steps=args.decode_steps,
-                              batch=batch, max_len=S + args.decode_steps)
+                              batch=batch, max_len=S + args.decode_steps,
+                              resident=args.resident)
     print("decode-step : " + " ".join(f"{i:3d}" for i in range(args.decode_steps)))
     print("bits/weight : " + " ".join(f"{2 * s:3d}" for s in res.stage_at_step))
     print("tokens[0]   : " + " ".join(f"{int(t):3d}" for t in res.tokens[0]))
     print(f"\n{len(res.upgrades)} in-place upgrades during generation; "
           f"final precision {2 * res.server.stage} bits — no recompile, "
           f"no KV loss; {len(res.events)} audited events")
+    if args.resident == "quantized":
+        rep = res.server.resident_report()
+        print(f"resident weights: {rep['quantized_leaves']} quantized leaves "
+              f"({rep['quantized_bytes']} uint bytes), {rep['fp_leaves']} fp "
+              f"leaves ({rep['fp_bytes']} bytes, non-matmul remainder); "
+              f"decode executables compiled: {res.server.decode_cache_size()}")
     if args.event_log:
         path = Path(args.event_log)
         path.parent.mkdir(parents=True, exist_ok=True)

@@ -42,7 +42,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bitplanes import PlaneSchedule
-from repro.core.quantize import QuantizedTensor, container_dtype, dequantize
+from repro.core.quantize import (QuantizedTensor, container_dtype,
+                                 dequant_affine, dequantize)
 from repro.kernels import ops
 
 # One grid step of plane_or_segments: 8 sublanes x 128 lanes.
@@ -121,6 +122,7 @@ class PlaneStore:
             self.buffers[dt] = jnp.zeros((n,), dtype=np.dtype(dt))
         self._dirty: set[int] = set(range(len(slots)))
         self._leaf_cache: dict[Any, jax.Array] = {}
+        self._qleaf_cache: dict[Any, QuantizedTensor] = {}
         self._acc_cache: dict[int, jax.Array] = {}
 
     # -- construction ------------------------------------------------------
@@ -197,6 +199,7 @@ class PlaneStore:
         new.buffers = dict(self.buffers)
         new._dirty = set(self._dirty)
         new._leaf_cache = dict(self._leaf_cache)
+        new._qleaf_cache = dict(self._qleaf_cache)
         new._acc_cache = dict(self._acc_cache)
         return new
 
@@ -352,35 +355,127 @@ class PlaneStore:
             self._dirty.add(idx)
             self._acc_cache.pop(idx, None)
             self._leaf_cache.pop(self.slots[idx].key, None)
+            self._qleaf_cache.pop(self.slots[idx].key, None)
 
     # -- eq. (5): incremental materialization ------------------------------
+    def _by_key(self) -> dict[Any, list[int]]:
+        by_key: dict[Any, list[int]] = {}
+        for i, t in enumerate(self.slots):
+            by_key.setdefault(t.key, []).append(i)
+        return by_key
+
+    def _fp_leaf(self, key: Any, idxs: list[int]) -> jax.Array:
+        """One dequantized float leaf (sliced tensors restacked), served
+        from the leaf cache when untouched since the last rebuild —
+        ``ingest`` pops touched keys, so cache presence means fresh."""
+        cached = self._leaf_cache.get(key)
+        if cached is not None and not any(i in self._dirty for i in idxs):
+            return cached
+        parts = []
+        for i in idxs:
+            val = dequantize(self.quantized(i),
+                             received_bits=self.effective_bits(i))
+            parts.append((self.slots[i].slice_idx,
+                          self.slots[i].slice_axis, val))
+        if len(parts) == 1 and parts[0][1] is None:
+            leaf = parts[0][2]
+        else:
+            axis = parts[0][1]
+            parts.sort(key=lambda x: x[0])
+            leaf = jnp.stack([v for _, _, v in parts], axis=axis)
+        self._leaf_cache[key] = leaf
+        return leaf
+
     def materialize_leaves(self) -> dict[Any, jax.Array]:
         """Dequantize into ``{key: array}``, restacking sliced tensors
         along their slice axis. Only keys touched since the last call
         are recomputed; the rest are served from the leaf cache."""
-        by_key: dict[Any, list[int]] = {}
-        for i, t in enumerate(self.slots):
-            by_key.setdefault(t.key, []).append(i)
-        out = {}
-        for key, idxs in by_key.items():
-            cached = self._leaf_cache.get(key)
-            if cached is not None and not any(i in self._dirty for i in idxs):
-                out[key] = cached
-                continue
-            parts = []
-            for i in idxs:
-                val = dequantize(self.quantized(i),
-                                 received_bits=self.effective_bits(i))
-                parts.append((self.slots[i].slice_idx,
-                              self.slots[i].slice_axis, val))
-            if len(parts) == 1 and parts[0][1] is None:
-                leaf = parts[0][2]
-            else:
-                axis = parts[0][1]
-                parts.sort(key=lambda x: x[0])
-                leaf = jnp.stack([v for _, _, v in parts], axis=axis)
-            self._leaf_cache[key] = leaf
-            out[key] = leaf
+        out = {key: self._fp_leaf(key, idxs)
+               for key, idxs in self._by_key().items()}
+        self._dirty.clear()
+        return out
+
+    # -- quantized-resident views ------------------------------------------
+    def _quantized_leaf(self, key: Any, idxs: list[int]
+                        ) -> QuantizedTensor | None:
+        """One leaf as a live :class:`QuantizedTensor`: ``q`` is the
+        accumulator (a view into the flat buffer; sliced tensors restack
+        their *uint* segments — still no float copy), and the eq.-(5)
+        affine rides along as traced arrays shaped
+        ``q.shape[:-2] + (1, 1)`` — exactly what ``lax.scan`` slices to
+        the per-layer ``(1, 1)`` kernel operands. Returns None when the
+        leaf can't feed a dequant matmul (ndim < 2, or slices along one
+        of the two contracting dims)."""
+        slots = [self.slots[i] for i in idxs]
+        if len({s.bits for s in slots}) != 1:
+            return None
+        if len(idxs) == 1 and slots[0].slice_axis is None:
+            q = self._slice_acc(idxs[0])
+            if q.ndim < 2:
+                return None
+            order = [(idxs[0], slots[0])]
+            ax = None
+        else:
+            ax = slots[0].slice_axis
+            if ax is None or any(s.slice_axis != ax for s in slots):
+                return None
+            stacked_ndim = len(slots[0].shape) + 1
+            if ax >= stacked_ndim - 2:
+                return None
+            order = sorted(zip(idxs, slots), key=lambda p: p[1].slice_idx)
+            q = jnp.stack([self._slice_acc(i) for i, _ in order], axis=ax)
+        meta_shape = q.shape[:-2] + (1, 1)
+
+        def place(vals, dtype) -> jax.Array:
+            """Per-slice scalars -> broadcastable metadata: values vary
+            along the slice axis, broadcast everywhere else."""
+            a = jnp.asarray(vals, dtype)
+            if ax is not None:
+                shp = [1] * q.ndim
+                shp[ax] = len(order)
+                a = a.reshape(tuple(shp))
+            return jnp.broadcast_to(a, meta_shape)
+
+        ms = [received_bits(s.schedule, self.received[i]) for i, s in order]
+        affines = [dequant_affine(s.lo, s.hi, s.bits, m)
+                   for (_, s), m in zip(order, ms)]
+        return QuantizedTensor(
+            q=q,
+            lo=place([s.lo for _, s in order], jnp.float32),
+            hi=place([s.hi for _, s in order], jnp.float32),
+            bits=slots[0].bits,
+            orig_dtype=slots[0].orig_dtype,
+            scale=place([a[0] for a in affines], jnp.float32),
+            offset=place([a[1] for a in affines], jnp.float32),
+            received_bits=place(ms, jnp.int32),
+        )
+
+    def quantized_leaves(self, eligible=None) -> dict[Any, Any]:
+        """The param pytree's leaves with weight tensors as *live*
+        :class:`QuantizedTensor` views over the flat accumulators —
+        the quantized-resident serving surface. ``eligible`` is an
+        optional ``key -> bool`` predicate restricting which leaves go
+        quantized (e.g. matmul weights only); everything else — and any
+        leaf a dequant matmul can't consume — falls back to the same
+        incremental float materialization ``materialize_leaves`` uses.
+
+        Like ``materialize_leaves`` this is incremental: clean keys come
+        out of a cache as the *same* leaf objects, so a jitted consumer
+        sees identical buffers for untouched weights. After an
+        ``ingest``, only touched keys rebuild — a precision upgrade is
+        the ingest plus this metadata refresh, no ``materialize()``."""
+        out: dict[Any, Any] = {}
+        for key, idxs in self._by_key().items():
+            if eligible is None or eligible(key):
+                got = self._qleaf_cache.get(key)
+                if got is None:
+                    got = self._quantized_leaf(key, idxs)
+                    if got is not None:
+                        self._qleaf_cache[key] = got
+                if got is not None:
+                    out[key] = got
+                    continue
+            out[key] = self._fp_leaf(key, idxs)
         self._dirty.clear()
         return out
 

@@ -42,8 +42,18 @@ class QuantizedTensor:
     """A k-bit floor-quantized tensor plus its dequantization range.
 
     ``q`` holds unsigned integers in [0, 2^k); ``lo``/``hi`` are the
-    original per-tensor min/max (scalar float32 arrays), ``bits`` the
+    original per-tensor min/max (float32 arrays), ``bits`` the
     quantization width k (static).
+
+    As a registered pytree node this doubles as a *live parameter leaf*
+    for quantized-resident serving: ``q`` is then a view into the
+    PlaneStore's flat accumulator and ``scale``/``offset`` carry the
+    eq.-(5) affine (:func:`dequant_affine`) as traced arrays of shape
+    ``q.shape[:-2] + (1, 1)``, with ``received_bits`` riding along as
+    traced metadata. Everything that changes across a precision upgrade
+    (q values, scale, offset, received_bits) is a pytree *child*, and
+    everything static (bits, orig_dtype) is aux data — so a jitted
+    consumer keeps one cache entry across every upgrade.
     """
 
     q: jax.Array
@@ -51,20 +61,39 @@ class QuantizedTensor:
     hi: jax.Array
     bits: int
     orig_dtype: Any = jnp.float32
+    scale: jax.Array | None = None      # traced eq.-(5) slope
+    offset: jax.Array | None = None     # traced eq.-(5) intercept
+    received_bits: jax.Array | None = None  # traced effective precision m
 
     # -- pytree protocol ---------------------------------------------------
     def tree_flatten(self):
-        return (self.q, self.lo, self.hi), (self.bits, self.orig_dtype)
+        return ((self.q, self.lo, self.hi, self.scale, self.offset,
+                 self.received_bits),
+                (self.bits, self.orig_dtype))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        q, lo, hi = children
+        q, lo, hi, scale, offset, received_bits = children
         bits, orig_dtype = aux
-        return cls(q=q, lo=lo, hi=hi, bits=bits, orig_dtype=orig_dtype)
+        return cls(q=q, lo=lo, hi=hi, bits=bits, orig_dtype=orig_dtype,
+                   scale=scale, offset=offset, received_bits=received_bits)
 
     @property
     def shape(self):
         return self.q.shape
+
+    @property
+    def ndim(self) -> int:
+        return self.q.ndim
+
+    @property
+    def T(self) -> "QuantizedTensor":
+        """Transposed view (2-D only): ``q`` transposes, the per-tensor
+        affine is invariant. Lets ``x @ embed.T`` (tied unembedding)
+        ride the same dequant-matmul dispatch."""
+        if self.q.ndim != 2:
+            raise ValueError(f"T needs a 2-D tensor, got shape {self.shape}")
+        return dataclasses.replace(self, q=self.q.T)
 
     @property
     def nbytes_payload(self) -> int:
@@ -106,31 +135,56 @@ def quantize(x: jax.Array, bits: int) -> QuantizedTensor:
     )
 
 
+def dequant_affine(lo: jax.Array, hi: jax.Array, bits: int,
+                   received_bits: int | None = None
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Eq. (5) as an affine map: ``w = scale * q + offset``.
+
+    THE one place the dequantization slope/intercept (and its ε-widened
+    span — the same :func:`_range_eps` eq. (2) uses) is computed.
+    ``quantize.dequantize``, the fused ``kernels/dequant_matmul``
+    wrapper, and the ``kernels/ref`` oracles all call this, so the
+    half-LSB revision factor cannot drift between the materialized and
+    the fused path.
+
+    ``received_bits`` is the effective precision m = Σ b_i of the planes
+    OR-ed in so far; the revision factor is half *that* LSB, which is
+    what makes truncated models unbiased. With m == 0 the offset is the
+    range centre (q is all-zero, so ``scale`` is moot).
+
+    Returns float32 arrays shaped like ``lo``/``hi`` (broadcastable
+    against ``q``). Callers that feed the Pallas kernel reshape them to
+    the traced ``(1, 1)`` operands it expects.
+    """
+    k = bits
+    m = k if received_bits is None else received_bits
+    if not (0 <= m <= k):
+        raise ValueError(f"received_bits={m} outside [0, {k}]")
+    lo = jnp.asarray(lo, jnp.float32)
+    hi = jnp.asarray(hi, jnp.float32)
+    span = hi - lo + _range_eps(lo, hi)
+    scale = span * (0.5 ** k)
+    if m > 0:
+        offset = lo + span * (0.5 ** (m + 1))
+    else:
+        # Nothing received: centre of the whole range.
+        offset = lo + span * 0.5
+    return scale, offset
+
+
 def dequantize(qt: QuantizedTensor, received_bits: int | None = None) -> jax.Array:
     """Eq. (5): M' = (max-min) * q'/2^k + min + 1/2^{k+1} * (max-min).
 
     The paper writes the revision factor as ``1/2^{k+1}``; dimensional
     consistency (and the reference implementation) put it in the *value*
     domain, i.e. scaled by the range — half an LSB of the received
-    precision. ``received_bits`` is the effective precision m = Σ b_i of
-    the planes OR-ed in so far; the revision factor must be half *that*
-    LSB, which is what makes truncated models unbiased.
+    precision. Computed as ``scale * q + offset`` via
+    :func:`dequant_affine` — the *same* expression, evaluated in the
+    same order, as the fused dequant-matmul kernel, so the materialized
+    and the quantized-resident serving paths see bit-identical weights.
     """
-    k = qt.bits
-    m = k if received_bits is None else received_bits
-    if not (0 <= m <= k):
-        raise ValueError(f"received_bits={m} outside [0, {k}]")
-    # Use the same effective span as eq. (2) (incl. ε) so dequantization
-    # exactly inverts the quantizer grid; the deviation from the paper's
-    # literal (max - min) is 1e-6 relative and makes the half-LSB error
-    # bound hold exactly.
-    span = qt.hi - qt.lo + _range_eps(qt.lo, qt.hi)
-    val = span * (qt.q.astype(jnp.float32) / (2.0**k)) + qt.lo
-    if m > 0:
-        val = val + span * (0.5 ** (m + 1))
-    else:
-        # Nothing received: centre of the whole range.
-        val = qt.lo + span * 0.5 + jnp.zeros_like(val)
+    scale, offset = dequant_affine(qt.lo, qt.hi, qt.bits, received_bits)
+    val = qt.q.astype(jnp.float32) * scale + offset
     return val.astype(qt.orig_dtype)
 
 

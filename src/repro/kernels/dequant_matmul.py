@@ -10,8 +10,11 @@ is applied *in VMEM, per tile, on the way into the MXU*:
 So the model is never materialized in floating point in HBM: resident
 weight bytes are ``k/16``x smaller than bf16 and a precision upgrade
 (another plane OR-ed into ``q``) changes *values only* — same buffer,
-same executable. ``scale``/``offset`` are per-tensor scalars computed on
-the host from (lo, hi, bits, received_bits).
+same executable. ``scale``/``offset`` are *traced* (1, 1) operands
+(computed outside by :func:`repro.core.quantize.dequant_affine` from
+(lo, hi, bits, received_bits)); nothing about the received precision is
+baked into the executable, so a consumer jitted around this call keeps
+exactly one compilation across every precision upgrade.
 
 Tiling: grid (M/bm, N/bn, K/bk) with K innermost; a fp32 accumulator
 tile lives in VMEM scratch across the K sweep. Block shapes default to
@@ -52,35 +55,32 @@ def _kernel(x_ref, q_ref, scale_ref, off_ref, o_ref, acc_ref, *, n_k: int):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bits", "received_bits", "bm", "bn", "bk", "interpret", "out_dtype"),
+    static_argnames=("bm", "bn", "bk", "interpret", "out_dtype"),
 )
 def dequant_matmul(
     x: jax.Array,            # (M, K) float
     q: jax.Array,            # (K, N) uint8/uint16/uint32
-    lo: jax.Array,           # scalar f32
-    hi: jax.Array,           # scalar f32
+    scale: jax.Array,        # traced eq.-(5) slope; scalar or (1, 1) f32
+    offset: jax.Array,       # traced eq.-(5) intercept; scalar or (1, 1) f32
     *,
-    bits: int,
-    received_bits: int | None = None,
     bm: int = 128,
     bn: int = 128,
     bk: int = 512,
     interpret: bool = False,
     out_dtype=jnp.float32,
 ) -> jax.Array:
-    """y = x @ dequantize(q, lo, hi) without materializing the fp weight."""
+    """y = x @ (scale * q + offset) without materializing the fp weight.
+
+    ``scale``/``offset`` come from
+    :func:`repro.core.quantize.dequant_affine` — they are plain traced
+    operands, NOT static arguments, so a precision upgrade (new
+    received_bits -> new affine values) re-runs the same executable.
+    """
     M, K = x.shape
     K2, N = q.shape
     assert K == K2, (x.shape, q.shape)
-    m = bits if received_bits is None else received_bits
-
-    span = hi - lo + (hi - lo) * 1e-6 + 1e-12
-    scale = (span / (2.0 ** bits)).reshape(1, 1).astype(jnp.float32)
-    if m > 0:
-        off = (lo + span * (0.5 ** (m + 1))).reshape(1, 1).astype(jnp.float32)
-    else:
-        # degenerate zero-planes case: w == centre of range, q is all-zero
-        off = (lo + span * 0.5).reshape(1, 1).astype(jnp.float32)
+    scale = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    off = jnp.asarray(offset, jnp.float32).reshape(1, 1)
 
     bm = min(bm, M)
     bn = min(bn, N)

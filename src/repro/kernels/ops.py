@@ -35,12 +35,13 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def dequant_matmul(x, q, lo, hi, *, bits, received_bits=None, **kw):
+def dequant_matmul(x, q, scale, offset, **kw):
+    """y = x @ (scale * q + offset); the eq.-(5) affine rides in as
+    traced (1, 1) operands (see ``repro.core.quantize.dequant_affine``),
+    so precision upgrades never recompile a jitted consumer."""
     LAUNCH_COUNTS["dequant_matmul"] += 1
     kw.setdefault("interpret", _interpret_default())
-    return _dqm.dequant_matmul(
-        x, q, lo, hi, bits=bits, received_bits=received_bits, **kw
-    )
+    return _dqm.dequant_matmul(x, q, scale, offset, **kw)
 
 
 def plane_or(acc, plane, *, shift, **kw):

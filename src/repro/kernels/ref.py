@@ -9,28 +9,27 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantize import dequant_affine
+
 NEG_INF = -1e30
 
 
 def dequant_ref(q: jax.Array, lo: jax.Array, hi: jax.Array, bits: int,
-                received_bits: int | None = None,
-                eps_rel: float = 1e-6, eps_abs: float = 1e-12) -> jax.Array:
-    """Eq. (5) with the same effective span as repro.core.quantize."""
-    m = bits if received_bits is None else received_bits
-    span = hi - lo + (hi - lo) * eps_rel + eps_abs
-    val = span * (q.astype(jnp.float32) / (2.0 ** bits)) + lo
-    if m > 0:
-        val = val + span * (0.5 ** (m + 1))
-    else:
-        val = lo + span * 0.5 + jnp.zeros_like(val)
-    return val
+                received_bits: int | None = None) -> jax.Array:
+    """Eq. (5) via the one shared affine helper — the ε-widened span is
+    defined in ``repro.core.quantize.dequant_affine`` and nowhere else,
+    so kernel, oracle and materialization cannot drift."""
+    scale, offset = dequant_affine(lo, hi, bits, received_bits)
+    return q.astype(jnp.float32) * scale + offset
 
 
-def dequant_matmul_ref(x: jax.Array, q: jax.Array, lo: jax.Array,
-                       hi: jax.Array, bits: int,
-                       received_bits: int | None = None) -> jax.Array:
-    """y = x @ dequantize(q).  x: (M, K) float; q: (K, N) uint."""
-    w = dequant_ref(q, lo, hi, bits, received_bits)
+def dequant_matmul_ref(x: jax.Array, q: jax.Array, scale: jax.Array,
+                       offset: jax.Array) -> jax.Array:
+    """y = x @ (scale * q + offset).  x: (M, K) float; q: (K, N) uint.
+    Mirrors the kernel's operands: the affine comes precomputed (from
+    ``dequant_affine``), exactly like the traced (1, 1) kernel inputs."""
+    w = q.astype(jnp.float32) * jnp.asarray(scale, jnp.float32) \
+        + jnp.asarray(offset, jnp.float32)
     return x.astype(jnp.float32) @ w
 
 

@@ -56,6 +56,11 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--resident", default="fp", choices=["fp", "quantized"],
+                    help="weight residency: 'fp' re-materializes float "
+                         "weights per upgrade; 'quantized' decodes straight "
+                         "from the uint plane accumulators (no fp weight "
+                         "copy in HBM, recompile-free upgrades)")
     ap.add_argument("--event-log", default=None,
                     help="write the session's audit log (JSONL) here")
     args = ap.parse_args()
@@ -86,8 +91,14 @@ def main() -> None:
     batch = build_batch(cfg, args.batch, args.prompt_len, seed=1)
     result = session.run_serving(
         model, prog, decode_steps=args.decode_steps, batch=batch,
-        max_len=args.prompt_len + args.decode_steps)
+        max_len=args.prompt_len + args.decode_steps, resident=args.resident)
     server = result.server
+    if args.resident == "quantized":
+        rep = server.resident_report()
+        print(f"quantized-resident: {rep['quantized_leaves']} weight leaves "
+              f"on {rep['quantized_bytes']} uint bytes, "
+              f"{rep['fp_bytes']} fp bytes (non-matmul remainder); "
+              f"decode executables compiled: {server.decode_cache_size()}")
     print("upgrades (decode step -> stage):", result.upgrades)
     print("stage per step:", result.stage_at_step)
     print("tokens[0]:", [int(t) for t in result.tokens[0][:16]], "...")

@@ -14,7 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.models.common import ArchConfig, apply_norm, norm_init, activation, dense_init
+from repro.models.common import (ArchConfig, apply_norm, norm_init,
+                                 activation, dense, dense_init)
 
 NEG_INF = -1e30
 
@@ -148,8 +149,9 @@ def mlp_init(cfg: ArchConfig, key):
 
 def mlp_apply(cfg: ArchConfig, p, x: jax.Array) -> jax.Array:
     dt = cfg.dtype
-    h = activation(cfg, x @ p["wi_gate"].astype(dt)) * (x @ p["wi_up"].astype(dt))
-    return h @ p["wo"].astype(dt)
+    h = activation(cfg, dense(x, p["wi_gate"], dtype=dt)) \
+        * dense(x, p["wi_up"], dtype=dt)
+    return dense(h, p["wo"], dtype=dt)
 
 
 def attn_init(cfg: ArchConfig, key, *, cross: bool = False):
@@ -177,9 +179,9 @@ def project_qkv(cfg: ArchConfig, p, x: jax.Array, kv_src: jax.Array):
     dt = cfg.dtype
     B, Tq, _ = x.shape
     Tk = kv_src.shape[1]
-    q = (x @ p["wq"].astype(dt)).reshape(B, Tq, cfg.n_heads, cfg.hd)
-    k = (kv_src @ p["wk"].astype(dt)).reshape(B, Tk, cfg.n_kv, cfg.hd)
-    v = (kv_src @ p["wv"].astype(dt)).reshape(B, Tk, cfg.n_kv, cfg.hd)
+    q = dense(x, p["wq"], dtype=dt).reshape(B, Tq, cfg.n_heads, cfg.hd)
+    k = dense(kv_src, p["wk"], dtype=dt).reshape(B, Tk, cfg.n_kv, cfg.hd)
+    v = dense(kv_src, p["wv"], dtype=dt).reshape(B, Tk, cfg.n_kv, cfg.hd)
     if cfg.qk_norm:
         q = _qk_norm(q, p["q_norm"])
         k = _qk_norm(k, p["k_norm"])
@@ -243,7 +245,7 @@ def self_attention(
             unroll=cfg.costing,
         )
         new_cache = {"k": k_cache, "v": v_cache}
-    return (out.reshape(B, Tq, -1) @ p["wo"].astype(cfg.dtype)), new_cache
+    return dense(out.reshape(B, Tq, -1), p["wo"], dtype=cfg.dtype), new_cache
 
 
 def cross_attention(cfg: ArchConfig, p, x: jax.Array, enc_kv):
@@ -251,7 +253,7 @@ def cross_attention(cfg: ArchConfig, p, x: jax.Array, enc_kv):
     vision projector — computed once at prefill, static afterwards."""
     dt = cfg.dtype
     B, Tq, _ = x.shape
-    q = (x @ p["wq"].astype(dt)).reshape(B, Tq, cfg.n_heads, cfg.hd)
+    q = dense(x, p["wq"], dtype=dt).reshape(B, Tq, cfg.n_heads, cfg.hd)
     if cfg.qk_norm:
         q = _qk_norm(q, p["q_norm"])
     Tv = enc_kv["k"].shape[1]
@@ -261,15 +263,15 @@ def cross_attention(cfg: ArchConfig, p, x: jax.Array, enc_kv):
         q, enc_kv["k"], enc_kv["v"], q_pos, k_pos, causal=False, window=0,
         chunk=cfg.attn_chunk, unroll=cfg.costing,
     )
-    return out.reshape(B, Tq, -1) @ p["wo"].astype(dt)
+    return dense(out.reshape(B, Tq, -1), p["wo"], dtype=dt)
 
 
 def cross_kv(cfg: ArchConfig, p, enc_out: jax.Array):
     """Project encoder/vision states to this block's K/V once."""
     dt = cfg.dtype
     B, Tv, _ = enc_out.shape
-    k = (enc_out @ p["wk"].astype(dt)).reshape(B, Tv, cfg.n_kv, cfg.hd)
-    v = (enc_out @ p["wv"].astype(dt)).reshape(B, Tv, cfg.n_kv, cfg.hd)
+    k = dense(enc_out, p["wk"], dtype=dt).reshape(B, Tv, cfg.n_kv, cfg.hd)
+    v = dense(enc_out, p["wv"], dtype=dt).reshape(B, Tv, cfg.n_kv, cfg.hd)
     if cfg.qk_norm:
         k = _qk_norm(k, p["k_norm"])
     return {"k": k, "v": v}

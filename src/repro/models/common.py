@@ -1,4 +1,6 @@
-"""Shared model plumbing: config dataclass, norms, activations, init."""
+"""Shared model plumbing: config dataclass, norms, activations, init —
+and the ONE dense-apply dispatch point of quantized-resident serving
+(:func:`dense` / :func:`expert_dense` / :func:`embed_lookup`)."""
 from __future__ import annotations
 
 import dataclasses
@@ -6,6 +8,9 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.quantize import QuantizedTensor
+from repro.kernels import ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,8 +74,9 @@ class ArchConfig:
     dtype: Any = jnp.bfloat16
     # storage dtype for parameters. fp32 = training default (master
     # weights); bf16 halves the resident weight bytes + HBM traffic for
-    # serving (§Perf iteration; the int-plane resident path in
-    # serving/quantized.py goes further, to k/16 of bf16)
+    # serving (§Perf iteration; quantized-resident serving
+    # (ProgressiveServer(resident="quantized")) goes further, to k/16
+    # of bf16, with no fp copy at all)
     param_dtype: Any = jnp.float32
     # rematerialize cycle bodies in the training forward (memory/compute
     # trade; §Perf iterates on this)
@@ -187,6 +193,87 @@ def activation(cfg: ArchConfig, x: jax.Array) -> jax.Array:
 def dense_init(key, d_in: int, d_out: int) -> jax.Array:
     scale = (2.0 / (d_in + d_out)) ** 0.5
     return scale * jax.random.normal(key, (d_in, d_out), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Quantized-resident dispatch
+#
+# Every matmul in transformer.py / attention.py / moe.py / model.py goes
+# through one of these three helpers. A parameter leaf is either a plain
+# float array (materialized path: cast + matmul, exactly the old code)
+# or a live QuantizedTensor riding the PlaneStore accumulator, in which
+# case eq. (5) is fused into the MXU feed via ops.dequant_matmul — the
+# fp weight never exists outside a VMEM tile. Call sites never branch;
+# this is the single dispatch point.
+# ---------------------------------------------------------------------------
+
+# Leaf basenames that are consumed exclusively through the dispatch
+# helpers below and may therefore stay quantized in HBM. (Norm/gate
+# vectors, conv kernels and recurrence matrices keep the materialized
+# path — they're tiny and not matmul-shaped.)
+QUANTIZED_RESIDENT_LEAVES = frozenset({
+    "wq", "wk", "wv", "wo", "wi_gate", "wi_up",          # attention + GLU MLP
+    "router", "we_gate", "we_up", "we_down",             # MoE
+    "embed", "lm_head", "vision_proj",                   # I/O surfaces
+    "in_proj", "out_proj", "up_proj", "down_proj",       # SSM/xLSTM projections
+    "w_in", "w_if",
+})
+
+
+def leaf_basename(key) -> str:
+    """Last component of a PlaneStore leaf key — a jax tree path tuple
+    (pull-mode stores) or a 'a/b/c' path string (wire-fed stores)."""
+    if isinstance(key, str):
+        return key.rsplit("/", 1)[-1]
+    last = key[-1]
+    for attr in ("key", "idx", "name"):
+        if hasattr(last, attr):
+            return str(getattr(last, attr))
+    return str(last)
+
+
+def quantized_resident_eligible(key) -> bool:
+    """The default ``eligible`` predicate for
+    :meth:`~repro.core.plane_store.PlaneStore.quantized_leaves`."""
+    return leaf_basename(key) in QUANTIZED_RESIDENT_LEAVES
+
+
+def dense(x: jax.Array, w, *, dtype) -> jax.Array:
+    """``x @ w`` with ``w`` either a float array (cast to ``dtype``,
+    plain matmul) or a QuantizedTensor (fused dequant-matmul; f32
+    accumulation, output cast to ``dtype``). x: (..., K); w: (K, N)."""
+    if isinstance(w, QuantizedTensor):
+        lead = x.shape[:-1]
+        y = ops.dequant_matmul(x.reshape(-1, x.shape[-1]), w.q,
+                               w.scale, w.offset)
+        return y.reshape(*lead, w.q.shape[-1]).astype(dtype)
+    return x @ w.astype(dtype)
+
+
+def expert_dense(x: jax.Array, w, *, dtype) -> jax.Array:
+    """Per-expert matmul ``einsum('becd,edf->becf')``. Quantized path:
+    one fused dequant-matmul per expert (E is static and small), each
+    fed its own (1, 1) affine slice — expert banks sliced per expert by
+    the division policy keep their per-slice quantization ranges."""
+    if isinstance(w, QuantizedTensor):
+        B, E, C, d = x.shape
+        outs = []
+        for e in range(E):
+            ye = ops.dequant_matmul(x[:, e].reshape(B * C, d), w.q[e],
+                                    w.scale[e], w.offset[e])
+            outs.append(ye.reshape(B, C, -1))
+        return jnp.stack(outs, axis=1).astype(dtype)
+    return jnp.einsum("becd,edf->becf", x, w.astype(dtype))
+
+
+def embed_lookup(w, tokens: jax.Array) -> jax.Array:
+    """Embedding-row gather. Quantized path gathers the *uint* rows and
+    applies the eq.-(5) affine to just those rows — the fp table never
+    materializes. Returns float32 rows (callers cast)."""
+    if isinstance(w, QuantizedTensor):
+        rows = w.q[tokens].astype(jnp.float32)
+        return rows * w.scale.reshape(()) + w.offset.reshape(())
+    return w[tokens].astype(jnp.float32)
 
 
 def softcap(x: jax.Array, cap: float) -> jax.Array:

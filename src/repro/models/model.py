@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.models.common import ArchConfig, apply_norm, norm_init, dense_init, softcap
+from repro.models.common import (ArchConfig, apply_norm, dense, embed_lookup,
+                                 norm_init, dense_init, softcap)
 from repro.models import transformer as tfm
 
 
@@ -77,18 +78,18 @@ class Model:
             return apply_norm(cfg, params["encoder"]["final_norm"], x)
         if cfg.vision_tokens:
             v = batch["vision_embeds"].astype(cfg.dtype)
-            return v @ params["vision_proj"].astype(cfg.dtype)
+            return dense(v, params["vision_proj"], dtype=cfg.dtype)
         return None
 
     def _embed(self, params, tokens):
         cfg = self.cfg
-        x = params["embed"][tokens].astype(cfg.dtype)
+        x = embed_lookup(params["embed"], tokens).astype(cfg.dtype)
         return x * jnp.asarray(cfg.d_model**0.5, cfg.dtype)
 
     def _unembed(self, params, x):
         cfg = self.cfg
         w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-        logits = x.astype(jnp.float32) @ w.astype(jnp.float32)
+        logits = dense(x.astype(jnp.float32), w, dtype=jnp.float32)
         return softcap(logits, cfg.logit_softcap)
 
     # -- entry points --------------------------------------------------------

@@ -12,7 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import ArchConfig, activation, dense_init
+from repro.models.common import (ArchConfig, activation, dense, dense_init,
+                                 expert_dense)
 
 
 def moe_init(cfg: ArchConfig, key):
@@ -41,7 +42,7 @@ def moe_apply(cfg: ArchConfig, p, x: jax.Array):
     E, K = cfg.n_experts, cfg.top_k
     C = capacity(cfg, T)
 
-    logits = (x @ p["router"].astype(dt)).astype(jnp.float32)  # (B,T,E)
+    logits = dense(x, p["router"], dtype=dt).astype(jnp.float32)  # (B,T,E)
     probs = jax.nn.softmax(logits, axis=-1)
     gate_vals, gate_idx = jax.lax.top_k(probs, K)  # (B,T,K)
     gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
@@ -60,9 +61,9 @@ def moe_apply(cfg: ArchConfig, p, x: jax.Array):
     combine = jnp.einsum("btke,btkc,btk->btec", onehot, pos_oh, gate_vals)
 
     xin = jnp.einsum("btec,btd->becd", dispatch.astype(dt), x)  # (B,E,C,d)
-    h = activation(cfg, jnp.einsum("becd,edf->becf", xin, p["we_gate"].astype(dt)))
-    h = h * jnp.einsum("becd,edf->becf", xin, p["we_up"].astype(dt))
-    out = jnp.einsum("becf,efd->becd", h, p["we_down"].astype(dt))
+    h = activation(cfg, expert_dense(xin, p["we_gate"], dtype=dt))
+    h = h * expert_dense(xin, p["we_up"], dtype=dt)
+    out = expert_dense(h, p["we_down"], dtype=dt)
     y = jnp.einsum("btec,becd->btd", combine.astype(dt), out)
 
     # Switch-transformer load-balance loss

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.models.common import ArchConfig, dense_init
+from repro.models.common import ArchConfig, dense, dense_init
 
 # ---------------------------------------------------------------------------
 # Mamba-2
@@ -56,7 +56,7 @@ def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
 
 def _split_proj(cfg: ArchConfig, p, u: jax.Array):
     d_inner, H, hd, N = mamba2_dims(cfg)
-    zxbcdt = u @ p["in_proj"].astype(u.dtype)
+    zxbcdt = dense(u, p["in_proj"], dtype=u.dtype)
     z, x, Bm, Cm, dt = jnp.split(
         zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1
     )
@@ -137,7 +137,7 @@ def mamba2_forward(cfg: ArchConfig, p, u: jax.Array, state=None, return_state=Fa
     y = jnp.moveaxis(ys, 0, 1).reshape(B_, Tp, H, hd)[:, :T]
     y = y + x[:, :T].reshape(B_, T, H, hd).astype(jnp.float32) * p["D"][None, None, :, None]
     y = y.reshape(B_, T, d_inner).astype(dtype)
-    out = _gated_norm(y, z, p["out_norm"]) @ p["out_proj"].astype(dtype)
+    out = dense(_gated_norm(y, z, p["out_norm"]), p["out_proj"], dtype=dtype)
     if return_state:
         return out, S_fin
     return out
@@ -184,7 +184,7 @@ def mamba2_step(cfg: ArchConfig, p, u: jax.Array, cache):
     )
     y = jnp.einsum("bn,bhnd->bhd", Cv, S) + xh * p["D"][None, :, None]
     y = y.reshape(-1, 1, d_inner).astype(dtype)
-    out = _gated_norm(y, z, p["out_norm"]) @ p["out_proj"].astype(dtype)
+    out = dense(_gated_norm(y, z, p["out_norm"]), p["out_proj"], dtype=dtype)
     return out, {"state": S, "conv": conv_in[:, 1:, :]}
 
 
@@ -216,13 +216,13 @@ def mlstm_init(cfg: ArchConfig, key):
 def _mlstm_qkvif(cfg, p, u):
     d_inner, H, hd = mlstm_dims(cfg)
     dt = u.dtype
-    xz = u @ p["up_proj"].astype(dt)
+    xz = dense(u, p["up_proj"], dtype=dt)
     x_in, z = jnp.split(xz, 2, axis=-1)
     B_, T, _ = x_in.shape
-    q = (x_in @ p["wq"].astype(dt)).reshape(B_, T, H, hd)
-    k = (x_in @ p["wk"].astype(dt)).reshape(B_, T, H, hd) * (hd**-0.5)
-    v = (x_in @ p["wv"].astype(dt)).reshape(B_, T, H, hd)
-    i_f = (x_in @ p["w_if"].astype(dt)).astype(jnp.float32) + p["b_if"]
+    q = dense(x_in, p["wq"], dtype=dt).reshape(B_, T, H, hd)
+    k = dense(x_in, p["wk"], dtype=dt).reshape(B_, T, H, hd) * (hd**-0.5)
+    v = dense(x_in, p["wv"], dtype=dt).reshape(B_, T, H, hd)
+    i_f = dense(x_in, p["w_if"], dtype=dt).astype(jnp.float32) + p["b_if"]
     i_raw, f_raw = jnp.split(i_f, 2, axis=-1)  # (B,T,H)
     return x_in, z, q, k, v, i_raw, f_raw
 
@@ -265,7 +265,7 @@ def mlstm_forward(cfg: ArchConfig, p, u: jax.Array, cache=None, return_cache=Fal
     h = jnp.moveaxis(hs, 0, 1).reshape(B_, T, d_inner).astype(u.dtype)
     from repro.models.ssm import _gated_norm  # self-import for clarity
 
-    out = _gated_norm(h, z, p["out_norm"]) @ p["down_proj"].astype(u.dtype)
+    out = dense(_gated_norm(h, z, p["out_norm"]), p["down_proj"], dtype=u.dtype)
     if return_cache:
         return out, {"C": C, "n": n, "m": m}
     return out
@@ -334,7 +334,7 @@ def _slstm_cell(p_r, carry, x_t):
 def slstm_forward(cfg: ArchConfig, p, u: jax.Array, cache=None, return_cache=False):
     d_inner, H, hd = slstm_dims(cfg)
     B_, T, _ = u.shape
-    x_pre = (u @ p["w_in"].astype(u.dtype)).astype(jnp.float32) + p["b"]
+    x_pre = dense(u, p["w_in"], dtype=u.dtype).astype(jnp.float32) + p["b"]
     if cache is None:
         zeros = jnp.zeros((B_, d_inner), jnp.float32)
         carry = (zeros, zeros, zeros, jnp.zeros((B_, H), jnp.float32))
@@ -345,7 +345,8 @@ def slstm_forward(cfg: ArchConfig, p, u: jax.Array, cache=None, return_cache=Fal
     y = jnp.moveaxis(hs, 0, 1).astype(u.dtype)  # (B,T,d_inner)
     yf = y.astype(jnp.float32)
     y = (yf * lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6) * p["out_norm"]).astype(u.dtype)
-    out = jax.nn.gelu(y @ p["up_proj"].astype(u.dtype)) @ p["down_proj"].astype(u.dtype)
+    out = dense(jax.nn.gelu(dense(y, p["up_proj"], dtype=u.dtype)),
+                p["down_proj"], dtype=u.dtype)
     if return_cache:
         return out, {"c": c, "n": n, "h": h, "m": m}
     return out

@@ -23,7 +23,7 @@ from jax import lax
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import ssm
-from repro.models.common import ArchConfig, apply_norm, norm_init, dense_init
+from repro.models.common import ArchConfig, apply_norm, dense, norm_init, dense_init
 
 ZERO_AUX = lambda: {"balance_loss": jnp.float32(0.0), "dropped_frac": jnp.float32(0.0)}
 
@@ -105,7 +105,8 @@ def block_apply(cfg: ArchConfig, kind: str, p, x, *, mode: str, cache, pos, enc_
                 q, k, v, qpos, qpos, causal=False, window=0,
                 chunk=cfg.attn_chunk, unroll=cfg.costing,
             )
-            a_out = o.reshape(*h.shape[:2], -1) @ p["attn"]["wo"].astype(cfg.dtype)
+            a_out = dense(o.reshape(*h.shape[:2], -1), p["attn"]["wo"],
+                          dtype=cfg.dtype)
             new_cache = None
         else:
             a_out, new_cache = attn.self_attention(

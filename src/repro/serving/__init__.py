@@ -1,3 +1,5 @@
-from repro.serving.engine import ProgressiveServer, GenerationResult
+from repro.serving.engine import (GenerationResult, ProgressiveServer,
+                                  WireStoreReceiver, resident_report)
 
-__all__ = ["ProgressiveServer", "GenerationResult"]
+__all__ = ["ProgressiveServer", "GenerationResult", "WireStoreReceiver",
+           "resident_report"]

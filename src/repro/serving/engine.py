@@ -9,10 +9,20 @@ OR + dequantize — no recompilation, no cache invalidation, no request
 draining. That is the TPU-serving analogue of the paper's Fig. 4
 concurrent download/inference timeline.
 
-The accumulators live in the shared PlaneStore (via ``ReceiverState``):
-a stage upgrade is one batched integer Pallas launch over the flat
-buffer, and re-dequantization touches only the tensors that actually
-received planes.
+The accumulators live in the shared PlaneStore: a stage upgrade is one
+batched integer Pallas launch over the flat buffer. What the decode
+step *sees* is governed by ``resident``:
+
+* ``resident="fp"`` (paper): each upgrade re-dequantizes the dirty
+  tensors into float leaves (incremental eq. 5) — a full fp copy of the
+  model lives in HBM next to the accumulators.
+* ``resident="quantized"`` (SLIDE-style): the live param pytree holds
+  :class:`~repro.core.quantize.QuantizedTensor` *views* over the
+  accumulators; eq. (5) runs fused into every matmul
+  (``kernels/dequant_matmul``) and no fp weight buffer ever exists. An
+  upgrade is the store ingest plus a metadata refresh (new traced
+  scale/offset values) — the jitted ``decode_step`` keeps exactly one
+  cache entry across every upgrade, because nothing static changes.
 """
 from __future__ import annotations
 
@@ -22,10 +32,15 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import wire
 from repro.core.progressive import ProgressiveModel, ReceiverState, rebuild_params
+from repro.core.quantize import QuantizedTensor
+from repro.models.common import quantized_resident_eligible
 from repro.models.model import Model
+
+RESIDENT_MODES = ("fp", "quantized")
 
 
 @dataclasses.dataclass
@@ -36,6 +51,33 @@ class GenerationResult:
     per_step_s: list
 
 
+def resident_report(params) -> dict:
+    """Leaf-type audit of a live param pytree: how many leaves are
+    quantized-resident vs float, and the HBM bytes each side holds.
+    ``quantized_bytes`` counts the uint accumulator views (what a
+    quantized-resident server actually keeps for its weights);
+    ``fp_bytes`` counts float leaves — for ``resident='quantized'``
+    that is only the small non-matmul remainder (norms, gates, conv
+    kernels), and the audit is exactly the acceptance check that no fp
+    weight buffer exists."""
+    leaves = jax.tree.leaves(params, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    n_q = n_fp = q_bytes = fp_bytes = meta_bytes = 0
+    for leaf in leaves:
+        if isinstance(leaf, QuantizedTensor):
+            n_q += 1
+            q_bytes += leaf.q.size * leaf.q.dtype.itemsize
+            for m in (leaf.lo, leaf.hi, leaf.scale, leaf.offset,
+                      leaf.received_bits):
+                if m is not None:
+                    meta_bytes += np.size(m) * m.dtype.itemsize
+        else:
+            n_fp += 1
+            fp_bytes += np.size(leaf) * jnp.asarray(leaf).dtype.itemsize
+    return {"quantized_leaves": n_q, "fp_leaves": n_fp,
+            "quantized_bytes": q_bytes, "fp_bytes": fp_bytes,
+            "metadata_bytes": meta_bytes}
+
+
 class WireStoreReceiver:
     """Adapts a wire-fed :class:`~repro.transmission.client.ProgressiveClient`
     as a server's parameter source, so the *same* device-resident
@@ -43,9 +85,9 @@ class WireStoreReceiver:
     from — no second ingest, no second set of Pallas launches.
 
     ``materialize`` reads only *completed* stages: it goes straight to
-    ``store.materialize_leaves()`` without flushing the client's pending
-    partial-stage planes, so the served params are exactly the stage
-    prefix (bit-identical to ``transmit_reconstruct`` at that stage) —
+    the store without flushing the client's pending partial-stage
+    planes, so the served params are exactly the stage prefix
+    (bit-identical to ``transmit_reconstruct`` at that stage) —
     mid-stage planes land with their stage's completion flush.
     """
 
@@ -57,10 +99,24 @@ class WireStoreReceiver:
     def stages_complete(self) -> int:
         return self.client.stages_complete
 
+    @property
+    def store(self):
+        return self.client.store
+
     def materialize(self):
         if self.client.store is None:
             raise RuntimeError("wire header not received yet")
         leaves = self.client.store.materialize_leaves()
+        return rebuild_params(self.prog, leaves, key_fn=wire.path_str)
+
+    def materialize_resident(self, eligible=quantized_resident_eligible):
+        """Quantized-resident view over the client's store: weight
+        leaves stay QuantizedTensor accumulator views; this is the
+        'metadata refresh' of an upgrade — no ``materialize()`` at
+        all for the weights."""
+        if self.client.store is None:
+            raise RuntimeError("wire header not received yet")
+        leaves = self.client.store.quantized_leaves(eligible=eligible)
         return rebuild_params(self.prog, leaves, key_fn=wire.path_str)
 
 
@@ -75,20 +131,30 @@ class ProgressiveServer:
     * receiver: constructed with ``receiver=`` (e.g.
       :class:`WireStoreReceiver` over the wire client's store) the
       server holds no accumulators of its own — ``receive_stage()``
-      re-materializes from the externally-fed store. This is what the
+      refreshes params from the externally-fed store. This is what the
       co-simulation :class:`~repro.transmission.session.Session` uses:
       bytes are ingested once, by the client.
+
+    And two residency modes (``resident="fp" | "quantized"``), see the
+    module docstring. Both serve the identical token stream — pinned by
+    tests — but quantized residency allocates no fp weight buffers and
+    upgrades without touching eq. (5) for the weights.
     """
 
     def __init__(self, model: Model, prog: ProgressiveModel, max_len: int,
-                 receiver: WireStoreReceiver | None = None):
+                 receiver: WireStoreReceiver | None = None,
+                 resident: str = "fp"):
+        if resident not in RESIDENT_MODES:
+            raise ValueError(
+                f"resident must be one of {RESIDENT_MODES}, got {resident!r}")
         self.model = model
         self.prog = prog
         self.max_len = max_len
+        self.resident = resident
         self._receiver = receiver
         self.state = None if receiver is not None else ReceiverState.init(prog)
         self._consumed = 0  # receiver mode: stages reflected in params
-        self.params = None  # materialized at current precision
+        self.params = None  # live param pytree at current precision
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
         self.caches = None
@@ -108,6 +174,32 @@ class ProgressiveServer:
             return self._receiver.stages_complete
         return self.prog.n_stages
 
+    def decode_cache_size(self) -> int:
+        """Compiled-executable count of the jitted decode step. The
+        zero-recompile guarantee of quantized residency is exactly
+        'this stays 1 across every upgrade'."""
+        return self._decode._cache_size()
+
+    def _refresh_params(self) -> None:
+        """Rebuild the live param pytree from the current accumulators
+        at the current residency."""
+        if self._receiver is not None:
+            self.params = (self._receiver.materialize_resident()
+                           if self.resident == "quantized"
+                           else self._receiver.materialize())
+        else:
+            self.params = (self.state.materialize_resident(
+                quantized_resident_eligible)
+                if self.resident == "quantized"
+                else self.state.materialize())
+
+    def resident_report(self) -> dict:
+        """Leaf-type audit of the *live* params (see
+        :func:`resident_report`)."""
+        if self.params is None:
+            raise RuntimeError("no planes received yet")
+        return resident_report(self.params)
+
     def receive_stage(self) -> None:
         """Pull the next stage's planes (server-push in a real
         deployment; here the planes live in ``self.prog``), or — in
@@ -115,11 +207,11 @@ class ProgressiveServer:
         catching up to every stage the receiver has completed.
 
         The OR is one batched ``plane_or_segments`` launch over the
-        store's flat buffer, and the materialize is incremental: only
-        tensors whose accumulator changed are re-dequantized — tensors
-        whose schedule is exhausted (or that missed this shipment) come
-        back as the *same* cached array objects, so the jitted decode
-        sees an unchanged buffer for them."""
+        store's flat buffer. With ``resident="fp"`` the refresh is the
+        store's incremental eq.-(5) materialize (only dirty tensors
+        re-dequantize); with ``resident="quantized"`` it is a metadata
+        refresh — new accumulator views + new traced scale/offset
+        values, no weight dequantization anywhere."""
         if self._receiver is not None:
             avail = self._receiver.stages_complete
             if avail <= self._consumed:
@@ -127,11 +219,11 @@ class ProgressiveServer:
                     f"receiver has no new stage (at {avail}, "
                     f"served {self._consumed})")
             self._consumed = avail
-            self.params = self._receiver.materialize()
+            self._refresh_params()
             return
         s = self.state.received_stages + 1
         self.state = self.state.receive(self.prog.stage(s))
-        self.params = self.state.materialize()
+        self._refresh_params()
 
     # -- serving ---------------------------------------------------------------
     def start(self, batch: dict) -> None:

@@ -1,21 +1,24 @@
-"""Quantized-resident serving path (beyond-paper, TPU-native).
+"""Single-tensor view of the quantized-resident serving path.
 
-The paper's client materializes fp32 weights after each concatenation.
-On a TPU pod that wastes HBM (16 GiB/chip) and bandwidth: a 90B-param
-fp32 materialization is 360 GB, but the 16-bit accumulators are 180 GB
-and an 8-bit prefix is 90 GB. This module keeps weights *quantized in
-HBM* and fuses eq. (4)+(5) into the consumer matmul via the Pallas
-kernel (`kernels/dequant_matmul`):
+Historically this module was the proof-of-concept fork: one weight
+matrix held as a PlaneStore view, with its own upgrade/matmul plumbing.
+The whole-model path now lives in the engine —
+``ProgressiveServer(resident="quantized")`` decodes every matmul of the
+transformer straight from the accumulators via the leaf dispatch in
+``models/common`` — and this module is reduced to a thin *view* helper
+kept for microbenchmarks and tensor-level tests.
 
-    y = x @ dequant(acc)      # dequant runs in VMEM, per tile
+Two deliberate changes from the old fork:
 
-The accumulators themselves live in a shared
-:class:`~repro.core.plane_store.PlaneStore` — the same runtime the
-pytree receiver and the byte-stream client use — so an upgrade is the
-store's batched `plane_or_segments` (pure integer VPU) and a
-`QuantizedLinearState` is a zero-copy *view* of one tensor's segment:
-no fp copy of the model ever exists, and no OR/shift arithmetic is
-re-derived here.
+* ``upgrade()`` ingests **in place**. The old implementation snapshotted
+  the *entire* flat store buffer (``store.copy()``) per single plane —
+  on a shared whole-model store that pinned a second copy of every
+  accumulator per upgrade. Shared-store deployments push planes through
+  ``store.ingest`` once; every view sees them immediately.
+* ``matmul`` feeds the kernel the traced eq.-(5) affine from the one
+  shared :func:`~repro.core.quantize.dequant_affine` helper — the same
+  numbers the engine's dispatch uses, so this view cannot drift from
+  the serving path.
 """
 from __future__ import annotations
 
@@ -27,6 +30,7 @@ import numpy as np
 from repro.core.bitplanes import PlaneSchedule
 from repro.core.plane_store import PlaneStore
 from repro.core.progressive import ProgressiveModel
+from repro.core.quantize import dequant_affine
 from repro.kernels import ops
 
 
@@ -68,19 +72,20 @@ class QuantizedLinearState:
         return self.store.effective_bits(self.idx)
 
     def upgrade(self, plane: jax.Array) -> "QuantizedLinearState":
-        """OR the next plane into the resident store (eq. 4) — one
-        batched integer launch, shift arithmetic owned by the store."""
-        store = self.store.copy()
-        store.ingest([(self.idx, plane)])
-        return dataclasses.replace(self, store=store)
+        """OR the next plane into the resident store (eq. 4), *in
+        place*: shared-store deployments must see one ingest, not a
+        forked snapshot — the old per-plane ``store.copy()`` pinned a
+        second copy of the whole flat buffer. Returns ``self`` so
+        chained call sites keep reading naturally."""
+        self.store.ingest([(self.idx, plane)])
+        return self
 
     def matmul(self, x: jax.Array, **kw) -> jax.Array:
         """x @ dequant(acc) without materializing the fp weight (eq. 5
-        fused into the MXU feed)."""
-        return ops.dequant_matmul(
-            x, self.acc, self.lo, self.hi,
-            bits=self.schedule.bits, received_bits=self.received_bits, **kw
-        )
+        fused into the MXU feed, affine from the shared helper)."""
+        scale, offset = dequant_affine(
+            self.lo, self.hi, self.schedule.bits, self.received_bits)
+        return ops.dequant_matmul(x, self.acc, scale, offset, **kw)
 
     @property
     def resident_bytes(self) -> int:
@@ -97,11 +102,8 @@ def from_progressive(model: ProgressiveModel, tensor_idx: int,
     state. Pass an existing ``store`` to share residency with other
     consumers (engine, client); ``planes_upto`` planes are then ingested
     into that store (visible to every consumer — the view never forks).
-    Note ``upgrade()`` on the returned state IS functional and snapshots
-    the store, so shared-store deployments should keep pushing planes
-    through ``store.ingest`` and treat the state as a read view. Without
-    ``store``, a private single-tensor store is built (one tensor's
-    buffer, not the whole model's)."""
+    Without ``store``, a private single-tensor store is built (one
+    tensor's buffer, not the whole model's)."""
     t = model.tensors[tensor_idx]
     if store is None:
         store = PlaneStore.from_model(model, indices=[tensor_idx])

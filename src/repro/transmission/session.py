@@ -233,7 +233,8 @@ class Session:
     # -- mode 2: the operational serve path --------------------------------
     def run_serving(self, model, prog, *, decode_steps: int, batch: dict,
                     step_time_s: float | None = None,
-                    max_len: int | None = None) -> SessionResult:
+                    max_len: int | None = None,
+                    resident: str = "fp") -> SessionResult:
         """Drive a real ProgressiveServer from the byte stream: the
         server sits on the client's PlaneStore (one ingest per stage,
         one batched Pallas launch per container dtype) and decodes real
@@ -241,6 +242,12 @@ class Session:
         step, and upgrades happen between steps exactly when the trace
         delivered each stage. Tokens, upgrade steps and the event log
         are bit-deterministic for a fixed (blob, trace, seed).
+
+        ``resident`` selects the server's weight residency: ``"fp"``
+        re-materializes float weights per upgrade (the paper's client);
+        ``"quantized"`` decodes straight from the client's uint
+        accumulators (no fp weight copy, upgrades are metadata-only —
+        see :class:`~repro.serving.engine.ProgressiveServer`).
         """
         from repro.serving.engine import ProgressiveServer, WireStoreReceiver
 
@@ -249,7 +256,7 @@ class Session:
         if max_len is None:
             max_len = batch["tokens"].shape[1] + decode_steps
         server = ProgressiveServer(model, prog, max_len=max_len,
-                                   receiver=receiver)
+                                   receiver=receiver, resident=resident)
         events: list[SessionEvent] = []
         plan = self._feed_plan()
         arrivals = self.stage_arrival_times()

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import bitplanes
-from repro.core.quantize import quantize, container_dtype
+from repro.core.quantize import dequant_affine, quantize, container_dtype
 from repro.kernels import ref
 from repro.kernels.bitplane import plane_extract, plane_or
 from repro.kernels.decode_attention import flash_decode
@@ -15,7 +15,8 @@ from repro.kernels.dequant_matmul import dequant_matmul
 
 
 # ---------------------------------------------------------------------------
-# dequant_matmul
+# dequant_matmul — the eq.-(5) affine rides in as traced operands from
+# the one shared dequant_affine helper (never recomputed per call site)
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("M,K,N", [(8, 16, 8), (96, 200, 130), (128, 128, 128),
@@ -26,9 +27,10 @@ def test_dequant_matmul_shapes_bits(M, K, N, bits):
     x = jax.random.normal(kx, (M, K), jnp.float32)
     w = jax.random.normal(kw, (K, N), jnp.float32) * 3.0 + 0.5
     qt = quantize(w, bits)
-    y = dequant_matmul(x, qt.q, qt.lo, qt.hi, bits=bits,
+    scale, offset = dequant_affine(qt.lo, qt.hi, bits)
+    y = dequant_matmul(x, qt.q, scale, offset,
                        bm=32, bn=64, bk=64, interpret=True)
-    yr = ref.dequant_matmul_ref(x, qt.q, qt.lo, qt.hi, bits)
+    yr = ref.dequant_matmul_ref(x, qt.q, scale, offset)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
                                rtol=3e-5, atol=3e-4)
 
@@ -38,9 +40,10 @@ def test_dequant_matmul_input_dtypes(x_dtype):
     x = jax.random.normal(jax.random.PRNGKey(0), (32, 64)).astype(x_dtype)
     w = jax.random.normal(jax.random.PRNGKey(1), (64, 48))
     qt = quantize(w, 16)
-    y = dequant_matmul(x, qt.q, qt.lo, qt.hi, bits=16, bm=16, bn=16, bk=32,
+    scale, offset = dequant_affine(qt.lo, qt.hi, 16)
+    y = dequant_matmul(x, qt.q, scale, offset, bm=16, bn=16, bk=32,
                        interpret=True)
-    yr = ref.dequant_matmul_ref(x.astype(jnp.float32), qt.q, qt.lo, qt.hi, 16)
+    yr = ref.dequant_matmul_ref(x.astype(jnp.float32), qt.q, scale, offset)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-2, atol=2e-2)
 
 
@@ -53,9 +56,10 @@ def test_dequant_matmul_partial_precision(received):
     x = jax.random.normal(jax.random.PRNGKey(2), (16, 40))
     w = jax.random.normal(jax.random.PRNGKey(3), (40, 24))
     qt = truncate(quantize(w, 16), received)
-    y = dequant_matmul(x, qt.q, qt.lo, qt.hi, bits=16, received_bits=received,
+    scale, offset = dequant_affine(qt.lo, qt.hi, 16, received_bits=received)
+    y = dequant_matmul(x, qt.q, scale, offset,
                        bm=16, bn=16, bk=16, interpret=True)
-    yr = ref.dequant_matmul_ref(x, qt.q, qt.lo, qt.hi, 16, received_bits=received)
+    yr = ref.dequant_matmul_ref(x, qt.q, scale, offset)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=3e-5, atol=3e-4)
 
 
@@ -63,9 +67,27 @@ def test_dequant_matmul_zero_received_uses_range_centre():
     x = jnp.ones((4, 8))
     q = jnp.zeros((8, 4), jnp.uint16)
     lo, hi = jnp.float32(-1.0), jnp.float32(3.0)
-    y = dequant_matmul(x, q, lo, hi, bits=16, received_bits=0,
+    scale, offset = dequant_affine(lo, hi, 16, received_bits=0)
+    y = dequant_matmul(x, q, scale, offset,
                        bm=4, bn=4, bk=8, interpret=True)
     np.testing.assert_allclose(np.asarray(y), 8 * 1.0, rtol=1e-5)
+
+
+def test_dequant_matmul_upgrade_changes_values_not_executables():
+    """received_bits is NOT a static argument: sweeping it must reuse
+    one compiled executable (the zero-recompile upgrade contract)."""
+    x = jax.random.normal(jax.random.PRNGKey(4), (16, 32))
+    w = jax.random.normal(jax.random.PRNGKey(5), (32, 16))
+    qt = quantize(w, 16)
+    before = dequant_matmul._cache_size()
+    outs = []
+    for m in (2, 4, 8, 16):
+        scale, offset = dequant_affine(qt.lo, qt.hi, 16, received_bits=m)
+        outs.append(dequant_matmul(x, qt.q, scale, offset,
+                                   bm=16, bn=16, bk=32, interpret=True))
+    assert dequant_matmul._cache_size() - before <= 1
+    # sanity: different precisions produce different numbers
+    assert not np.allclose(np.asarray(outs[0]), np.asarray(outs[-1]))
 
 
 # ---------------------------------------------------------------------------

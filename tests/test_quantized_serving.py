@@ -1,16 +1,17 @@
-"""Quantized-resident serving path: plane_or upgrades + fused
-dequant-matmul must equal the materialized reference at every stage."""
+"""Single-tensor quantized-resident view: plane_or upgrades + fused
+dequant-matmul must equal the materialized reference at every stage.
+(The whole-model quantized-resident path is covered by
+tests/test_resident_serving.py.)"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.progressive import divide, ReceiverState
-from repro.core import wire
 from repro.serving.quantized import QuantizedLinearState, from_progressive
 
 
-@pytest.fixture(scope="module")
+@pytest.fixture()
 def setup():
     k = jax.random.PRNGKey(0)
     w = jax.random.normal(k, (96, 64)) * 2.0
@@ -54,6 +55,19 @@ def test_resident_bytes_stay_constant(setup):
     st0 = from_progressive(prog, 0, planes_upto=1)
     st1 = st0.upgrade(prog.tensors[0].planes[1])
     assert st0.resident_bytes == st1.resident_bytes == w.size * 2  # uint16
+
+
+def test_upgrade_is_in_place_on_the_shared_store(setup):
+    """No per-plane snapshot of the flat buffer: upgrading through the
+    view is the store's own ingest, visible to every other consumer of
+    the same store (the old copying path forked a whole-buffer copy)."""
+    _, prog = setup
+    st = from_progressive(prog, 0, planes_upto=1)
+    store = st.store
+    st2 = st.upgrade(prog.tensors[0].planes[1])
+    assert st2.store is store              # same store object, no fork
+    assert store.received[0] == 2          # the shared store advanced
+    assert st2.received_bits == 4
 
 
 def test_too_many_upgrades_raise(setup):

@@ -1,0 +1,220 @@
+"""Whole-model quantized-resident serving: decode straight from the
+PlaneStore accumulators.
+
+Pins the three contracts of ``ProgressiveServer(resident="quantized")``:
+
+1. Token parity: greedy decode is identical to the fp-materialized
+   path at *every* precision stage, for every container dtype
+   (uint8/16/32), including upgrades landing mid-generation.
+2. No fp weight buffers: the live param pytree holds QuantizedTensor
+   accumulator views for every matmul weight leaf (leaf-type audit).
+3. Zero recompilation: the jitted decode_step keeps exactly one cache
+   entry across N in-place upgrades (received_bits is traced, never
+   static).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.bitplanes import PlaneSchedule
+from repro.core.plane_store import PlaneStore
+from repro.core.policy import ExpertPopularityPolicy, UniformPolicy
+from repro.core.progressive import ReceiverState, divide
+from repro.core.quantize import QuantizedTensor
+from repro.models.common import QUANTIZED_RESIDENT_LEAVES, leaf_basename
+from repro.models.model import build_model
+from repro.serving.engine import ProgressiveServer
+
+# One schedule per container dtype, 4 stages each.
+SCHEDULES = {
+    "uint8": PlaneSchedule(bits=8, widths=(2, 2, 2, 2)),
+    "uint16": PlaneSchedule(bits=16, widths=(4, 4, 4, 4)),
+    "uint32": PlaneSchedule(bits=20, widths=(5, 5, 5, 5)),
+}
+
+
+def _setup(schedule):
+    cfg = get_config("olmo-1b").reduced(n_layers=2, d_model=64, d_ff=128,
+                                        vocab=128, n_heads=2, n_kv=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prog = divide(params, UniformPolicy(schedule=schedule))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab
+                                ).astype(jnp.int32)
+    return cfg, model, prog, tokens
+
+
+@pytest.mark.parametrize("container", sorted(SCHEDULES))
+def test_stage_by_stage_token_parity(container):
+    """At every stage, a fresh greedy decode from the quantized-resident
+    server matches the fp-materialized server token for token — and the
+    quantized decode executable is compiled exactly once across all
+    stages (containers verified via the accumulator dtype)."""
+    schedule = SCHEDULES[container]
+    cfg, model, prog, tokens = _setup(schedule)
+    steps = 4
+    sq = ProgressiveServer(model, prog, max_len=8 + steps, resident="quantized")
+    sf = ProgressiveServer(model, prog, max_len=8 + steps, resident="fp")
+    for s in range(1, prog.n_stages + 1):
+        for srv in (sq, sf):
+            srv.receive_stage()
+            srv.start({"tokens": tokens})
+        rq = sq.decode(steps)
+        rf = sf.decode(steps)
+        np.testing.assert_array_equal(
+            np.asarray(rq.tokens), np.asarray(rf.tokens),
+            err_msg=f"stage {s} ({container})")
+    # the accumulators really live in the claimed container dtype
+    leaves = [l for l in jax.tree.leaves(
+        sq.params, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+        if isinstance(l, QuantizedTensor)]
+    assert leaves and all(str(l.q.dtype) == container for l in leaves)
+    assert sq.decode_cache_size() == 1
+
+
+def test_mid_session_upgrade_token_parity():
+    """Upgrades landing between decode steps (KV cache alive) produce
+    the same tokens and the same upgrade schedule in both residencies."""
+    cfg, model, prog, tokens = _setup(SCHEDULES["uint16"])
+    steps = 2 * prog.n_stages + 2
+    arrival = lambda i: i % 2 == 0  # a stage lands every other step
+    sq = ProgressiveServer(model, prog, max_len=8 + steps, resident="quantized")
+    sf = ProgressiveServer(model, prog, max_len=8 + steps, resident="fp")
+    for srv in (sq, sf):
+        srv.receive_stage()
+        srv.start({"tokens": tokens})
+    rq = sq.decode(steps, stage_arrival=arrival)
+    rf = sf.decode(steps, stage_arrival=arrival)
+    assert rq.upgrades == rf.upgrades and len(rq.upgrades) == prog.n_stages - 1
+    assert rq.stage_at_step == rf.stage_at_step
+    np.testing.assert_array_equal(np.asarray(rq.tokens), np.asarray(rf.tokens))
+
+
+def test_no_fp_weight_buffers_leaf_audit():
+    """Every matmul weight leaf of the live pytree is a QuantizedTensor
+    accumulator view; no float leaf carries a quantizable name. (olmo's
+    non-parametric LN means the fp remainder is empty here.)"""
+    cfg, model, prog, tokens = _setup(SCHEDULES["uint16"])
+    srv = ProgressiveServer(model, prog, max_len=16, resident="quantized")
+    srv.receive_stage()
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        srv.params, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    assert flat
+    for path, leaf in flat:
+        name = leaf_basename(path)
+        if name in QUANTIZED_RESIDENT_LEAVES:
+            assert isinstance(leaf, QuantizedTensor), f"fp leaf: {path}"
+        else:
+            assert not isinstance(leaf, QuantizedTensor)
+    rep = srv.resident_report()
+    assert rep["fp_leaves"] == 0 and rep["fp_bytes"] == 0
+    assert rep["quantized_leaves"] == len(flat)
+
+
+def test_zero_recompile_across_upgrades():
+    """N in-place upgrades -> exactly one decode_step executable. The
+    upgrade changes traced values only (q, scale, offset,
+    received_bits); nothing static moves."""
+    cfg, model, prog, tokens = _setup(SCHEDULES["uint8"])
+    srv = ProgressiveServer(model, prog, max_len=8 + 2 * prog.n_stages,
+                            resident="quantized")
+    srv.receive_stage()
+    srv.start({"tokens": tokens})
+    srv.decode(2)
+    assert srv.decode_cache_size() == 1
+    for _ in range(prog.n_stages - 1):
+        srv.receive_stage()
+        srv.decode(2)
+        assert srv.decode_cache_size() == 1
+    assert srv.stage == prog.n_stages
+
+
+def test_quantized_refresh_reuses_clean_leaves():
+    """The quantized-leaf cache is incremental like the fp one: a
+    refresh with no intervening ingest hands back the *same* leaf
+    objects (same buffers for the jitted consumer)."""
+    cfg, model, prog, tokens = _setup(SCHEDULES["uint16"])
+    st = ReceiverState.init(prog).receive(prog.stage(1))
+    a = st.store.quantized_leaves()
+    b = st.store.quantized_leaves()
+    assert all(a[k] is b[k] for k in a)
+    st2 = st.receive(prog.stage(2))
+    c = st2.store.quantized_leaves()
+    assert all(c[k] is not a[k] for k in a)  # every tensor got a plane
+
+
+def test_moe_expert_dispatch_parity():
+    """The per-expert fused dequant path (expert_dense) matches the fp
+    einsum path token for token."""
+    cfg = get_config("mixtral-8x22b").reduced(
+        n_layers=2, d_model=32, d_ff=64, vocab=64, n_heads=2, n_kv=2,
+        n_experts=2, top_k=1, window=8)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prog = divide(params, UniformPolicy(schedule=SCHEDULES["uint8"]))
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (1, 8), 0, cfg.vocab
+                                ).astype(jnp.int32)
+    steps = 4
+    res = {}
+    for mode in ("quantized", "fp"):
+        srv = ProgressiveServer(model, prog, max_len=8 + steps, resident=mode)
+        for _ in range(prog.n_stages):
+            srv.receive_stage()
+        srv.start({"tokens": tokens})
+        res[mode] = srv.decode(steps)
+    np.testing.assert_array_equal(np.asarray(res["quantized"].tokens),
+                                  np.asarray(res["fp"].tokens))
+
+
+def test_session_receiver_mode_parity():
+    """The wire-fed path (Session -> client store, keys are path
+    strings, no second ingest): quantized-resident serving produces
+    the same tokens and upgrade schedule as fp, and its live pytree
+    passes the no-fp-weights audit."""
+    from repro.core import wire
+    from repro.transmission import BandwidthTrace, Session
+
+    cfg, model, prog, tokens = _setup(SCHEDULES["uint16"])
+    blob = wire.encode(prog)
+    steps = 8
+    res = {}
+    for mode in ("quantized", "fp"):
+        session = Session(blob, BandwidthTrace.constant(1e6))
+        res[mode] = session.run_serving(
+            model, prog, decode_steps=steps, batch={"tokens": tokens},
+            max_len=8 + steps, resident=mode)
+    np.testing.assert_array_equal(np.asarray(res["quantized"].tokens),
+                                  np.asarray(res["fp"].tokens))
+    assert res["quantized"].upgrades == res["fp"].upgrades
+    rep = res["quantized"].server.resident_report()
+    assert rep["fp_bytes"] == 0
+    assert res["quantized"].server.decode_cache_size() == 1
+
+
+def test_sliced_expert_bank_quantized_leaf():
+    """Per-expert sliced banks (ExpertPopularityPolicy) restack as one
+    QuantizedTensor whose affine varies along the expert axis — and its
+    dequantization equals the materialized leaf exactly."""
+    E, d, f = 3, 8, 16
+    w = jax.random.normal(jax.random.PRNGKey(3), (E, d, f)) \
+        * jnp.arange(1, E + 1, dtype=jnp.float32)[:, None, None]
+    prog = divide({"we_gate": w},
+                  ExpertPopularityPolicy(schedule=SCHEDULES["uint8"],
+                                         n_experts=E))
+    store = PlaneStore.from_model(prog)
+    for s in range(1, prog.n_stages + 1):
+        store.ingest(prog.stage(s))
+    leaves = store.quantized_leaves()
+    qt = leaves[prog.tensors[0].path]
+    assert isinstance(qt, QuantizedTensor)
+    assert qt.q.shape == (E, d, f)
+    assert qt.scale.shape == (E, 1, 1)
+    # per-expert ranges really differ (the point of slicing)
+    assert len(set(np.asarray(qt.scale).ravel().tolist())) == E
+    want = store.materialize_leaves()[prog.tensors[0].path]
+    got = qt.q.astype(jnp.float32) * qt.scale + qt.offset
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=1e-7)
+    assert np.asarray(qt.received_bits).ravel().tolist() == [8] * E
