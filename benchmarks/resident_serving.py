@@ -101,7 +101,10 @@ def bench(arch: str = "olmo-1b", *, stages: int = 4, decode_steps: int = 8,
         srv.start({"tokens": tokens})
         srv.decode(2)  # warm the compiled step
         srv.start({"tokens": tokens})
-        res = srv.decode(decode_steps)
+        # sync mode: honest *per-token* dispatch+wait, comparable with
+        # the pre-continuous-batching numbers (async windows live in
+        # benchmarks/serving_throughput.py)
+        res = srv.decode(decode_steps, sync=True)
         decode[mode] = {
             "per_step_s": float(np.mean(res.per_step_s)),
             "decode_cache_size": srv.decode_cache_size(),

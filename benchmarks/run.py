@@ -15,11 +15,13 @@ def main() -> None:
                     help="reduced training steps / fewer archs")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table1,table2,table3,"
-                         "roofline,upgrade_latency,resident_serving")
+                         "roofline,upgrade_latency,resident_serving,"
+                         "serving_throughput")
     args = ap.parse_args()
 
     from benchmarks import table1_execution_time, table2_accuracy, table3_ttfi
-    from benchmarks import resident_serving, roofline, upgrade_latency
+    from benchmarks import resident_serving, roofline, serving_throughput
+    from benchmarks import upgrade_latency
 
     benches = {
         "table1": table1_execution_time,
@@ -28,6 +30,7 @@ def main() -> None:
         "roofline": roofline,
         "upgrade_latency": upgrade_latency,
         "resident_serving": resident_serving,
+        "serving_throughput": serving_throughput,
     }
     selected = (args.only.split(",") if args.only else list(benches))
 

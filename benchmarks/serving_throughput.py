@@ -1,0 +1,188 @@
+"""Continuous-batching serving throughput: the slot pool under load.
+
+Measures, per pool size (batch 1 / 4 / 16), the quantities the
+ISSUE-4 continuous-batching refactor is about:
+
+* **aggregate tokens/s** — total tokens emitted over honest wall-clock
+  across flushed dispatch windows (warm executable; compile excluded).
+  The acceptance floor on the reduced config is batch-16 >= 4x batch-1:
+  the batched ragged decode step amortizes dispatch overhead across
+  slots instead of serializing lock-stepped streams.
+* **per-token latency p50/p99** — derived from each flushed window's
+  wall time / steps (the honest async-dispatch semantics; pass
+  ``--sync`` for the old block-per-token measurement).
+* **upgrade-stall ms** — wall time the serving loop spends applying
+  precision upgrades between batched steps (one PlaneStore ingest +
+  param refresh per stage), measured in a separate cold-start phase
+  that upgrades mid-generation.
+* **decode-cache-size** — must be exactly 1 executable per pool across
+  all admissions, evictions and N upgrades (asserted).
+
+Emits ``artifacts/bench/BENCH_serving_throughput.json`` — the first
+serving datapoint of the bench trajectory.
+
+    PYTHONPATH=src python -m benchmarks.serving_throughput [--quick] [--sync]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.progressive import divide
+from repro.models.model import build_model
+from repro.serving.engine import PoolRequest, SlotPoolEngine
+
+OUT_PATH = "artifacts/bench/BENCH_serving_throughput.json"
+BATCH_SIZES = (1, 4, 16)
+THROUGHPUT_FLOOR_16_VS_1 = 4.0
+
+
+def _prompt(cfg, i: int, prompt_len: int):
+    return jax.random.randint(jax.random.PRNGKey(100 + i), (prompt_len,),
+                              0, cfg.vocab).astype(jnp.int32)
+
+
+def _drain_sync(pool: SlotPoolEngine) -> None:
+    """--sync mode: flush after every step (old per-token semantics)."""
+    while any(not s.free for s in pool.slots) or pool.queue:
+        pool.step()
+        pool.flush()
+        pool._admit_from_queue()
+
+
+def bench_pool(model, prog, cfg, *, n_slots: int, decode_steps: int,
+               prompt_len: int, dispatch_window: int, sync: bool,
+               warmup_steps: int = 8) -> dict:
+    pool = SlotPoolEngine(model, prog, n_slots=n_slots,
+                          max_len=prompt_len + warmup_steps + decode_steps,
+                          dispatch_window=dispatch_window)
+    for _ in range(prog.n_stages):
+        pool.receive_stage()
+    for i in range(n_slots):
+        pool.submit(PoolRequest(rid=i, prompt=_prompt(cfg, i, prompt_len),
+                                max_new_tokens=warmup_steps + decode_steps))
+    for _ in range(warmup_steps):          # compile + warm caches
+        pool.step()
+    pool.flush()
+    pool.window_stats.clear()
+    if sync:
+        _drain_sync(pool)
+    else:
+        pool.run()
+    assert pool.decode_cache_size() == 1, \
+        "slot pool must keep exactly one decode executable"
+    wall = sum(w.wall_s for w in pool.window_stats)
+    tokens = sum(w.tokens_emitted for w in pool.window_stats)
+    per_token = np.concatenate([
+        np.full(w.steps, w.wall_s / w.steps) for w in pool.window_stats])
+    return {
+        "n_slots": n_slots,
+        "tokens": int(tokens),
+        "wall_s": wall,
+        "tokens_per_s": tokens / wall if wall else 0.0,
+        "per_token_p50_ms": float(np.percentile(per_token, 50) * 1e3),
+        "per_token_p99_ms": float(np.percentile(per_token, 99) * 1e3),
+        "decode_cache_size": pool.decode_cache_size(),
+        "windows": len(pool.window_stats),
+    }
+
+
+def bench_upgrade_stall(model, prog, cfg, *, n_slots: int, prompt_len: int,
+                        dispatch_window: int) -> dict:
+    """Cold-start at stage 1, upgrade between windows while the pool is
+    saturated; report how long dispatch stalled on upgrades."""
+    steps = 2 * prog.n_stages * dispatch_window
+    pool = SlotPoolEngine(model, prog, n_slots=n_slots,
+                          max_len=prompt_len + steps,
+                          dispatch_window=dispatch_window)
+    pool.receive_stage()
+    for i in range(n_slots):
+        pool.submit(PoolRequest(rid=i, prompt=_prompt(cfg, i, prompt_len),
+                                max_new_tokens=steps))
+    pool.run(on_window=lambda _: pool.upgrade_if_available())
+    assert pool.stage == prog.n_stages
+    assert pool.decode_cache_size() == 1, \
+        "upgrades must not recompile the pool's decode executable"
+    return {
+        "n_slots": n_slots,
+        "n_upgrades": len(pool.upgrades),
+        "upgrade_stall_ms_total": pool.upgrade_stall_s * 1e3,
+        "upgrade_stall_ms_mean": (pool.upgrade_stall_s * 1e3
+                                  / max(len(pool.upgrades), 1)),
+        "decode_cache_size": pool.decode_cache_size(),
+    }
+
+
+def bench(arch: str = "olmo-1b", *, decode_steps: int = 40,
+          prompt_len: int = 8, dispatch_window: int = 8,
+          sync: bool = False) -> dict:
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prog = divide(params)
+    t0 = time.time()
+    rows = [bench_pool(model, prog, cfg, n_slots=b,
+                       decode_steps=decode_steps, prompt_len=prompt_len,
+                       dispatch_window=dispatch_window, sync=sync)
+            for b in BATCH_SIZES]
+    stall = bench_upgrade_stall(model, prog, cfg, n_slots=BATCH_SIZES[-1],
+                                prompt_len=prompt_len,
+                                dispatch_window=dispatch_window)
+    return {
+        "bench": "serving_throughput",
+        "arch": arch,
+        "backend": jax.default_backend(),
+        "mode": "sync" if sync else "async",
+        "dispatch_window": dispatch_window,
+        "decode_steps": decode_steps,
+        "batches": rows,
+        "upgrade_stall": stall,
+        "total_bench_s": time.time() - t0,
+    }
+
+
+def main(quick: bool = False, out: str = OUT_PATH,
+         sync: bool = False) -> None:
+    result = bench(decode_steps=16 if quick else 40, sync=sync)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+
+    print(f"\n== serving throughput: slot pool ({result['arch']}, "
+          f"{result['mode']} dispatch) ==")
+    print(f"{'slots':>6} {'tok/s':>10} {'p50 ms':>8} {'p99 ms':>8} "
+          f"{'execs':>6}")
+    for r in result["batches"]:
+        print(f"{r['n_slots']:6d} {r['tokens_per_s']:10,.0f} "
+              f"{r['per_token_p50_ms']:8.2f} {r['per_token_p99_ms']:8.2f} "
+              f"{r['decode_cache_size']:6d}")
+    st = result["upgrade_stall"]
+    print(f"upgrade stall: {st['n_upgrades']} upgrades, "
+          f"{st['upgrade_stall_ms_mean']:.1f} ms mean "
+          f"({st['upgrade_stall_ms_total']:.1f} ms total) at "
+          f"{st['n_slots']} slots; executables: {st['decode_cache_size']}")
+    by_slots = {r["n_slots"]: r["tokens_per_s"] for r in result["batches"]}
+    ratio = by_slots[16] / max(by_slots[1], 1e-9)
+    print(f"batch-16 / batch-1 aggregate throughput: {ratio:.2f}x "
+          f"(floor {THROUGHPUT_FLOOR_16_VS_1:.0f}x)")
+    assert ratio >= THROUGHPUT_FLOOR_16_VS_1, (
+        f"continuous batching regressed: batch-16 is only {ratio:.2f}x "
+        f"batch-1 aggregate tokens/s (floor {THROUGHPUT_FLOOR_16_VS_1}x)")
+    print(f"-> {out}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--sync", action="store_true",
+                    help="block per token (old timing semantics; "
+                         "comparable to pre-ISSUE-4 numbers)")
+    args = ap.parse_args()
+    main(quick=args.quick, sync=args.sync)

@@ -14,22 +14,31 @@ same event log — on any machine.
         --bandwidth-mbps 2.5   # constant link instead of a scenario
     PYTHONPATH=src python examples/progressive_serving.py \
         --resident quantized   # decode straight from the uint accumulators
+    PYTHONPATH=src python examples/progressive_serving.py \
+        --flash-crowd 6        # continuous batching: 6 clients, one pool
 
 ``--resident quantized`` serves the whole model from the PlaneStore's
 uint accumulators: every matmul runs the fused dequant kernel, no fp
 copy of the weights exists in HBM, and each precision upgrade is a
 metadata refresh that re-uses the single compiled decode step (the
 token stream is identical to --resident fp at every stage).
+
+``--flash-crowd N`` swaps the lock-stepped stream for the slot-pool
+engine: N clients join mid-download at staggered times, each is
+admitted into a free slot (its prompt prefilled straight into the
+slot's cache region), and every decode step is ONE batched ragged
+kernel launch — per-slot positions, per-slot windows, one compiled
+executable across all admissions, evictions and precision upgrades.
 """
 import argparse
-from pathlib import Path
 
 import jax
+import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import wire
 from repro.core.progressive import divide
-from repro.launch.serve import build_batch
+from repro.launch.serve import _write_event_log, build_batch
 from repro.models.model import build_model
 from repro.transmission import BandwidthTrace, Session, get_scenario, list_scenarios
 
@@ -47,6 +56,10 @@ def main():
                     help="'quantized' serves from the uint plane "
                          "accumulators: no fp weight copy, zero-recompile "
                          "upgrades, identical tokens")
+    ap.add_argument("--flash-crowd", type=int, default=0, metavar="N",
+                    help="> 0: serve N staggered clients through the "
+                         "continuous-batching slot pool instead of one "
+                         "lock-stepped stream")
     ap.add_argument("--event-log", default=None,
                     help="write the session audit log (JSONL) here")
     args = ap.parse_args()
@@ -71,6 +84,33 @@ def main():
     B, S = 2, 16
     batch = build_batch(cfg, B, S, seed=1)
 
+    if args.flash_crowd > 0:
+        from repro.transmission import flash_crowd_arrivals
+
+        n = args.flash_crowd
+        prompts = [jax.random.randint(
+            jax.random.PRNGKey(100 + i), (S,), 0, cfg.vocab
+        ).astype(jnp.int32) for i in range(n)]
+        offs = flash_crowd_arrivals(args.seed, n, span_s=1.0)
+        res = session.run_serving_pool(
+            model, prog, prompts=prompts, arrival_offsets_s=offs,
+            max_new_tokens=args.decode_steps, n_slots=min(4, n),
+            resident=args.resident)
+        print(f"flash crowd: {n} clients admitted at "
+              f"{[round(t, 2) for t, _ in res.admissions]}s "
+              f"into {min(4, n)} slots")
+        for rid in sorted(res.tokens):
+            stages = res.server.stage_log[rid]
+            print(f"client {rid}: bits "
+                  + " ".join(f"{2 * s:2d}" for s in stages)
+                  + " | tokens " + " ".join(f"{t:3d}" for t in res.tokens[rid]))
+        print(f"\n{len(res.upgrades)} in-place upgrades while the pool was "
+              f"live; {res.server.decode_cache_size()} decode executable "
+              f"across every admission/eviction/upgrade; "
+              f"{len(res.events)} audited events")
+        _write_event_log(res, args.event_log)
+        return
+
     print(f"cold start at t={arrivals[0]:.2f}s with 2-bit weights "
           f"({args.resident}-resident); decoding...")
     res = session.run_serving(model, prog, decode_steps=args.decode_steps,
@@ -88,11 +128,7 @@ def main():
               f"({rep['quantized_bytes']} uint bytes), {rep['fp_leaves']} fp "
               f"leaves ({rep['fp_bytes']} bytes, non-matmul remainder); "
               f"decode executables compiled: {res.server.decode_cache_size()}")
-    if args.event_log:
-        path = Path(args.event_log)
-        path.parent.mkdir(parents=True, exist_ok=True)
-        path.write_text(res.to_jsonl())
-        print(f"event log -> {path}")
+    _write_event_log(res, args.event_log)
 
 
 if __name__ == "__main__":

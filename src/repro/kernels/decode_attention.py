@@ -1,21 +1,34 @@
-"""Flash decode-attention Pallas TPU kernel (single new token vs a long
-KV cache).
+"""Ragged batched flash decode-attention Pallas TPU kernel (one new
+token per slot vs a long KV cache).
 
 Decode at 32k–500k context is memory-bound: the whole KV cache crosses
 HBM once per token while the MXU does a rank-1 sliver of work. The
 kernel therefore optimizes for exactly one pass over K and V:
 
-  grid = (B, Kh, S/bs); for each KV-head and cache chunk, compute the
-  (G, bs) score tile (G = query heads per KV head, padded to the 8-row
-  sublane), run the online-softmax update against VMEM scratch carries
-  (m, l, acc), and emit the normalized (G, hd) output on the last chunk.
+  grid = (B, Kh, S/bs); for each slot, KV-head and cache chunk, compute
+  the (G, bs) score tile (G = query heads per KV head, padded to the
+  8-row sublane), run the online-softmax update against VMEM scratch
+  carries (m, l, acc), and emit the normalized (G, hd) output on the
+  last chunk.
 
-Masking uses the chunk's position vector (ring buffers pass their slot
-positions), so full caches, partially-filled caches, and sliding-window
-ring caches all use the same kernel. This is the TPU analogue of the
-paper's "inference while bits stream in": combined with the dequant
-matmul, a pod serves long-context decode from int-plane weights with
-bf16-identical results at 16 received bits.
+The batch is *ragged*: every slot carries its own query position
+(``q_pos`` is ``(B,)``) and its own per-slot cache position vector
+(``k_pos`` is ``(B, S)``; ring buffers pass their slot positions,
+negative marks an empty/unwritten slot, and a fully negative row marks
+a free slot of a continuous-batching pool). Full caches,
+partially-filled caches, sliding-window ring caches and empty pool
+slots all use the same kernel — which is what lets a slot-pool serving
+engine run requests at wildly different positions in ONE launch.
+
+K and V arrive in the kernel's native ``(B, Kh, S, hd)`` layout — the
+same layout the model's KV caches are stored in — so the wrapper
+performs no transpose and, for any reasonably-sized cache, no
+sequence-axis padding: the hot decode loop touches each cache byte
+exactly once. (When S doesn't divide by the block size the block
+shrinks to a divisor; only a divisor-hostile S — prime-ish lengths —
+falls back to padding the tail block with masked keys. Keep cache
+lengths multiples of the block size — 512 by default — for peak TPU
+efficiency.)
 """
 from __future__ import annotations
 
@@ -27,6 +40,19 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+
+
+def _pick_block(S: int, bs: int) -> int:
+    """Choose a sequence block size for a cache of length S: S itself
+    when it fits in one block, else the largest *sublane-aligned*
+    (multiple-of-8) divisor of S that is <= bs. Returns 0 when no
+    aligned divisor of useful size exists (caller pads instead)."""
+    if S <= bs:
+        return S
+    for d in range(bs - bs % 8, 7, -8):
+        if S % d == 0:
+            return d if d >= bs // 2 else 0
+    return 0
 
 
 def _kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
@@ -42,8 +68,8 @@ def _kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
     q = q_ref[0, 0].astype(jnp.float32)          # (G, hd), pre-scaled
     k = k_ref[0, 0].astype(jnp.float32)          # (bs, hd)
     v = v_ref[0, 0].astype(jnp.float32)          # (bs, hd)
-    kpos = pos_ref[...]                        # (1, bs) int32
-    qpos = qpos_ref[0, 0]
+    kpos = pos_ref[...]                          # (1, bs) int32, this slot
+    qpos = qpos_ref[0, 0]                        # scalar, this slot
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # (G, bs)
@@ -73,11 +99,11 @@ def _kernel(qpos_ref, q_ref, k_ref, v_ref, pos_ref, o_ref,
     jax.jit, static_argnames=("window", "softcap", "bs", "interpret")
 )
 def flash_decode(
-    q: jax.Array,        # (B, H, hd) one new token's queries
-    k: jax.Array,        # (B, S, Kh, hd) cache
-    v: jax.Array,        # (B, S, Kh, hd)
-    k_pos: jax.Array,    # (S,) int32; negative = empty slot
-    q_pos: jax.Array,    # scalar int32
+    q: jax.Array,        # (B, H, hd) one new token's queries per slot
+    k: jax.Array,        # (B, Kh, S, hd) cache, native layout
+    v: jax.Array,        # (B, Kh, S, hd)
+    k_pos: jax.Array,    # (B, S) int32; negative = empty slot
+    q_pos: jax.Array,    # (B,) int32; negative = free pool slot
     *,
     window: int = 0,
     softcap: float = 0.0,
@@ -85,37 +111,41 @@ def flash_decode(
     interpret: bool = False,
 ) -> jax.Array:
     B, H, hd = q.shape
-    S, Kh = k.shape[1], k.shape[2]
+    Kh, S = k.shape[1], k.shape[2]
     G = H // Kh
 
-    bs = min(bs, S)
-    pad_s = (-S) % bs
-    if pad_s:
-        k = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
-        k_pos = jnp.pad(k_pos, (0, pad_s), constant_values=-1)
-    Sp = S + pad_s
-    n_s = Sp // bs
+    # prefer shrinking the block to a sublane-aligned divisor of S (no
+    # padding, no copies); if S is divisor-hostile (prime-ish, or only
+    # misaligned/tiny divisors) fall back to padding the tail block —
+    # keys padded with k_pos = -1 are masked exactly like empty slots
+    d = _pick_block(S, bs)
+    if d:
+        bs = d
+    else:
+        pad_s = (-S) % bs
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad_s)), constant_values=-1)
+        S = S + pad_s
+    n_s = S // bs
 
     # pad G to the 8-row sublane so the score tile is vreg-aligned
     Gp = max(8, G)
     qg = q.reshape(B, Kh, G, hd) * (hd ** -0.5)
     if Gp != G:
         qg = jnp.pad(qg, ((0, 0), (0, 0), (0, Gp - G), (0, 0)))
-    kk = jnp.swapaxes(k, 1, 2)  # (B, Kh, Sp, hd)
-    vv = jnp.swapaxes(v, 1, 2)
-    pos2 = k_pos.reshape(1, Sp)
-    qpos2 = q_pos.reshape(1, 1).astype(jnp.int32)
+    pos2 = k_pos.reshape(B, S).astype(jnp.int32)
+    qpos2 = q_pos.reshape(B, 1).astype(jnp.int32)
 
     out = pl.pallas_call(
         functools.partial(_kernel, n_s=n_s, window=window, softcap=softcap),
         grid=(B, Kh, n_s),
         in_specs=[
-            pl.BlockSpec((1, 1), lambda b, h, s: (0, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, s: (b, 0)),
             pl.BlockSpec((1, 1, Gp, hd), lambda b, h, s: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, bs, hd), lambda b, h, s: (b, h, s, 0)),
             pl.BlockSpec((1, 1, bs, hd), lambda b, h, s: (b, h, s, 0)),
-            pl.BlockSpec((1, bs), lambda b, h, s: (0, s)),
+            pl.BlockSpec((1, bs), lambda b, h, s: (b, s)),
         ],
         out_specs=pl.BlockSpec((1, 1, Gp, hd), lambda b, h, s: (b, h, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, Kh, Gp, hd), q.dtype),
@@ -125,5 +155,5 @@ def flash_decode(
             pltpu.VMEM((Gp, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(qpos2, qg, kk, vv, pos2)
+    )(qpos2, qg, k, v, pos2)
     return out[:, :, :G, :].reshape(B, H, hd)

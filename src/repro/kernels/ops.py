@@ -63,11 +63,37 @@ def plane_extract(q, *, bits, before, width, **kw):
 
 
 def flash_decode(q, k, v, k_pos, q_pos, *, window=0, softcap=0.0, **kw):
+    """Ragged batched decode attention: q (B, H, hd); k/v in the native
+    (B, Kh, S, hd) cache layout; k_pos (B, S); q_pos (B,)."""
     LAUNCH_COUNTS["flash_decode"] += 1
     kw.setdefault("interpret", _interpret_default())
     return _da.flash_decode(
         q, k, v, k_pos, q_pos, window=window, softcap=softcap, **kw
     )
+
+
+def decode_attention(q, k, v, k_pos, q_pos, *, window=0, softcap=0.0):
+    """The model's per-step decode-attention entry point (same ragged
+    operands as :func:`flash_decode`). On TPU this is the Pallas flash
+    kernel; elsewhere it is the vectorized jnp oracle — interpret-mode
+    Pallas unrolls the (B, Kh, S/bs) grid into the jaxpr, which turns a
+    batched decode step into O(B) staged kernel bodies and defeats the
+    whole point of continuous batching on CPU CI. Both consume the
+    native (B, Kh, S, hd) cache layout with no transpose; parity is
+    pinned by tests/test_kernels.py. (No pass-through kwargs: kernel
+    tuning knobs like ``bs`` belong to :func:`flash_decode` callers,
+    and the two backends must accept identical calls.)"""
+    LAUNCH_COUNTS["decode_attention"] += 1
+    if jax.default_backend() == "tpu":
+        return _da.flash_decode(
+            q, k, v, k_pos, q_pos, window=window, softcap=softcap,
+            interpret=False
+        )
+    from repro.kernels import ref as _ref
+
+    return _ref.flash_decode_ref(
+        q, k, v, k_pos, q_pos, window=window, softcap=softcap
+    ).astype(q.dtype)
 
 
 # The old pytree-level ``receiver_or`` convenience (one plane_or per

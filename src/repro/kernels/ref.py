@@ -41,23 +41,26 @@ def plane_or_ref(acc: jax.Array, plane: jax.Array, shift: int) -> jax.Array:
 def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                      k_pos: jax.Array, q_pos: jax.Array,
                      *, window: int = 0, softcap: float = 0.0) -> jax.Array:
-    """Single-token GQA decode attention.
+    """Ragged batched single-token GQA decode attention.
 
-    q: (B, H, hd); k/v: (B, S, Kh, hd); k_pos: (S,) int32 (negative =
-    empty slot); q_pos: scalar int32 current position.
+    q: (B, H, hd); k/v: (B, Kh, S, hd) native cache layout;
+    k_pos: (B, S) int32 per-slot cache positions (negative = empty
+    slot); q_pos: (B,) int32 per-slot query position (negative = free
+    pool slot: every key is masked and the output row is meaningless).
     Returns (B, H, hd).
     """
     B, H, hd = q.shape
-    S, Kh = k.shape[1], k.shape[2]
+    Kh, S = k.shape[1], k.shape[2]
     G = H // Kh
     qf = q.reshape(B, Kh, G, hd).astype(jnp.float32) * (hd ** -0.5)
-    s = jnp.einsum("bkgd,bskd->bkgs", qf, k.astype(jnp.float32))
+    s = jnp.einsum("bkgd,bksd->bkgs", qf, k.astype(jnp.float32))
     if softcap:
         s = jnp.tanh(s / softcap) * softcap
-    valid = (k_pos >= 0) & (k_pos <= q_pos)
+    qp = q_pos.reshape(B, 1)
+    valid = (k_pos >= 0) & (k_pos <= qp)          # (B, S)
     if window:
-        valid = valid & (k_pos > q_pos - window)
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        valid = valid & (k_pos > qp - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    o = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
     return o.reshape(B, H, hd)

@@ -29,6 +29,15 @@ from repro.transmission import Session, get_scenario, list_scenarios
 from repro.transmission.simulator import BandwidthTrace
 
 
+def _write_event_log(result, event_log: str | None) -> None:
+    if not event_log:
+        return
+    path = Path(event_log)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(result.to_jsonl())
+    print(f"event log -> {path}")
+
+
 def build_batch(cfg, batch: int, prompt_len: int, seed: int) -> dict:
     out = {"tokens": jax.random.randint(
         jax.random.PRNGKey(seed), (batch, prompt_len), 0, cfg.vocab
@@ -61,6 +70,16 @@ def main() -> None:
                          "weights per upgrade; 'quantized' decodes straight "
                          "from the uint plane accumulators (no fp weight "
                          "copy in HBM, recompile-free upgrades)")
+    ap.add_argument("--pool-clients", type=int, default=0,
+                    help="> 0: continuous-batching mode — this many "
+                         "clients join mid-download (flash crowd) and are "
+                         "served by one slot pool instead of a single "
+                         "lock-stepped stream")
+    ap.add_argument("--pool-slots", type=int, default=4,
+                    help="slot-pool size for --pool-clients")
+    ap.add_argument("--crowd-span-s", type=float, default=1.0,
+                    help="window after cold start over which the crowd "
+                         "arrives")
     ap.add_argument("--event-log", default=None,
                     help="write the session's audit log (JSONL) here")
     args = ap.parse_args()
@@ -88,6 +107,33 @@ def main() -> None:
     print(f"model bytes={len(blob)}  stages={prog.n_stages}  "
           f"arrivals={[round(a, 2) for a in arrivals]}s over {link_desc}")
 
+    if args.pool_clients > 0:
+        from repro.transmission import flash_crowd_arrivals
+
+        prompts = [jax.random.randint(
+            jax.random.PRNGKey(1000 + i), (args.prompt_len,), 0, cfg.vocab
+        ).astype(jnp.int32) for i in range(args.pool_clients)]
+        offs = flash_crowd_arrivals(args.seed, args.pool_clients,
+                                    span_s=args.crowd_span_s)
+        result = session.run_serving_pool(
+            model, prog, prompts=prompts, arrival_offsets_s=offs,
+            max_new_tokens=args.decode_steps, n_slots=args.pool_slots,
+            resident=args.resident)
+        pool = result.server
+        print(f"flash crowd: {args.pool_clients} clients over "
+              f"{args.crowd_span_s}s into {args.pool_slots} slots; "
+              f"admissions at "
+              f"{[round(t, 2) for t, _ in result.admissions]}s")
+        print(f"upgrades (batched step -> stage): {result.upgrades}")
+        for rid in sorted(result.tokens):
+            print(f"client {rid}: tokens {result.tokens[rid]}")
+        print(f"served {sum(len(v) for v in result.tokens.values())} tokens "
+              f"across {pool.stage} precision stages with "
+              f"{pool.decode_cache_size()} decode executable(s); "
+              f"{len(result.events)} audited session events")
+        _write_event_log(result, args.event_log)
+        return
+
     batch = build_batch(cfg, args.batch, args.prompt_len, seed=1)
     result = session.run_serving(
         model, prog, decode_steps=args.decode_steps, batch=batch,
@@ -104,11 +150,7 @@ def main() -> None:
     print("tokens[0]:", [int(t) for t in result.tokens[0][:16]], "...")
     print(f"served {args.decode_steps} steps across {server.stage} precision "
           f"stages; {len(result.events)} audited session events")
-    if args.event_log:
-        path = Path(args.event_log)
-        path.parent.mkdir(parents=True, exist_ok=True)
-        path.write_text(result.to_jsonl())
-        print(f"event log -> {path}")
+    _write_event_log(result, args.event_log)
 
 
 if __name__ == "__main__":

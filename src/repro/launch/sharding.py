@@ -161,8 +161,8 @@ def batch_shardings(batch_shape_tree, mesh: Mesh):
 def cache_shardings(cache_shape_tree, mesh: Mesh, *, batch: int):
     """Decode caches. Layout per leaf kind:
 
-    stacked KV:   (R, B, S, K, hd)
-    tail KV:      (B, S, K, hd)
+    stacked KV:   (R, B, K, S, hd)   (native decode-kernel layout)
+    tail KV:      (B, K, S, hd)
     mamba state:  (R?, B, H, N, hd)
     mlstm C:      (R?, B, H, hd, hd);  n: (R?, B, H, hd);  m: (R?, B, H)
     slstm states: (R?, B, d_inner) / (R?, B, H)

@@ -1,12 +1,20 @@
 """Attention: RoPE, chunked online-softmax (flash-style) attention, and
 the attention-family block (full / sliding-window / cross / enc-dec).
 
-The chunked attention is the load-bearing piece for this box: it scans
-over KV chunks with a running (max, denominator, accumulator) triple, so
-neither the 32k-prefill compile nor the 500k-decode compile ever
-materializes a (Tq, Tk) score matrix. The same structure is what the
-Pallas flash kernel implements on real TPUs (``kernels/decode_attention``);
-this module is its jnp oracle.
+The chunked attention is the load-bearing piece for prefill/training:
+it scans over KV chunks with a running (max, denominator, accumulator)
+triple, so neither the 32k-prefill compile nor the 500k-decode compile
+ever materializes a (Tq, Tk) score matrix.
+
+The per-token decode path is different: KV caches are stored in the
+flash kernel's **native** ``(B, Kh, S, hd)`` layout from prefill
+onwards, each decode step writes one token per slot at its own
+position (``pos`` may be a ``(B,)`` vector — ragged continuous
+batching), and attention runs through
+:func:`repro.kernels.ops.decode_attention` (the Pallas flash kernel on
+TPU, its vectorized jnp oracle elsewhere). No transpose and no
+sequence-axis padding of the cache ever happens inside the hot loop —
+each cache byte crosses HBM exactly once per token.
 """
 from __future__ import annotations
 
@@ -14,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.kernels import ops
 from repro.models.common import (ArchConfig, apply_norm, norm_init,
                                  activation, dense, dense_init)
 
@@ -25,13 +34,17 @@ NEG_INF = -1e30
 # ---------------------------------------------------------------------------
 
 def rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
-    """x: (B, T, H, hd); pos: (T,) int32 positions."""
+    """x: (B, T, H, hd); pos: (T,) shared or (B, T) per-slot int32
+    positions (ragged decode batches rotate every slot at its own
+    position)."""
     hd = x.shape[-1]
     half = hd // 2
     freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
-    angles = pos.astype(jnp.float32)[:, None] * freqs[None, :]  # (T, half)
-    cos = jnp.cos(angles)[None, :, None, :]
-    sin = jnp.sin(angles)[None, :, None, :]
+    angles = pos.astype(jnp.float32)[..., None] * freqs  # (..., T, half)
+    if angles.ndim == 2:
+        angles = angles[None]                            # (1|B, T, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
     x1, x2 = x[..., :half], x[..., half:]
     out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
     return out.astype(x.dtype)
@@ -113,25 +126,41 @@ def chunked_attention(
 
 
 # ---------------------------------------------------------------------------
-# KV cache helpers
+# KV cache helpers (native (B, K, S, hd) layout)
 # ---------------------------------------------------------------------------
 
 def make_ring_cache(k: jax.Array, v: jax.Array, window: int):
     """Prefill -> ring cache holding the last `window` positions at slot
-    p % window. k/v: (B, S, K, hd)."""
+    p % window. k/v: (B, S, K, hd) in; caches come out in the native
+    (B, K, window, hd) layout."""
     B, S, K, hd = k.shape
     W = min(window, S)
     slots = jnp.arange(S - W, S) % window
-    ring_k = jnp.zeros((B, window, K, hd), k.dtype).at[:, slots].set(k[:, S - W :])
-    ring_v = jnp.zeros((B, window, K, hd), v.dtype).at[:, slots].set(v[:, S - W :])
+    kn = jnp.swapaxes(k, 1, 2)  # one transpose at prefill, never per step
+    vn = jnp.swapaxes(v, 1, 2)
+    ring_k = jnp.zeros((B, K, window, hd), k.dtype).at[:, :, slots].set(kn[:, :, S - W :])
+    ring_v = jnp.zeros((B, K, window, hd), v.dtype).at[:, :, slots].set(vn[:, :, S - W :])
     return ring_k, ring_v
 
 
 def ring_positions(window: int, pos: jax.Array) -> jax.Array:
     """Position stored at each ring slot after a write at ``pos``;
-    negative for not-yet-filled slots."""
+    negative for not-yet-filled slots. ``pos`` scalar -> (window,);
+    ``pos`` (B,) -> (B, window) per-slot position maps."""
     i = jnp.arange(window)
-    return pos - ((pos - i) % window)
+    p = jnp.asarray(pos)[..., None]   # () -> (1,); (B,) -> (B, 1)
+    return p - ((p - i) % window)     # (window,) or (B, window)
+
+
+def write_kv_slot(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write one token's K or V into the native cache at each slot's own
+    position. cache: (B, K, S, hd); new: (B, K, 1, hd); pos: (B,) int32
+    (clamped into range, so a free slot's ``-1`` writes harmlessly at
+    0 — its row is fully masked anyway)."""
+    def upd(c, u, p):
+        return lax.dynamic_update_slice(c, u.astype(c.dtype), (0, p, 0))
+
+    return jax.vmap(upd)(cache, new, pos)
 
 
 # ---------------------------------------------------------------------------
@@ -188,6 +217,13 @@ def project_qkv(cfg: ArchConfig, p, x: jax.Array, kv_src: jax.Array):
     return q, k, v
 
 
+def decode_pos_vector(pos, batch: int) -> jax.Array:
+    """Normalize a decode position argument — scalar (lock-stepped
+    stream) or (B,) vector (ragged slot pool) — to a (B,) int32."""
+    p = jnp.asarray(pos, jnp.int32)
+    return jnp.broadcast_to(p, (batch,)) if p.ndim == 0 else p
+
+
 def self_attention(
     cfg: ArchConfig,
     p,
@@ -195,8 +231,8 @@ def self_attention(
     *,
     mode: str,  # full | prefill | decode
     window: int,
-    cache,  # {"k","v"} or None
-    pos,  # decode: scalar int32; else None
+    cache,  # {"k","v"} native (B, K, S|W, hd) or None
+    pos,  # decode: scalar or (B,) int32 per-slot positions; else None
     rope_theta: float | None = None,
 ):
     """Returns (attn_out, new_cache)."""
@@ -217,57 +253,73 @@ def self_attention(
                 rk, rv = make_ring_cache(k, v, window)
                 new_cache = {"k": rk, "v": rv}
             else:
-                new_cache = {"k": k, "v": v}
-    else:  # decode
+                # one transpose at prefill; decode never transposes
+                new_cache = {"k": jnp.swapaxes(k, 1, 2),
+                             "v": jnp.swapaxes(v, 1, 2)}
+    else:  # decode: ragged, native-layout, one batched kernel call
         q, k_new, v_new = project_qkv(cfg, p, x, x)
-        pos_arr = jnp.full((Tq,), pos, jnp.int32)
-        q = rope(q, pos_arr, theta)
-        k_new = rope(k_new, pos_arr, theta)
+        pos_vec = decode_pos_vector(pos, B)                    # (B,)
+        q = rope(q, pos_vec[:, None], theta)
+        k_new = rope(k_new, pos_vec[:, None], theta)
+        kn = jnp.swapaxes(k_new, 1, 2)                         # (B, K, 1, hd)
+        vn = jnp.swapaxes(v_new, 1, 2)
         if window:
-            slot = pos % window
-            k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=1)
-            v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=1)
-            k_pos = ring_positions(window, pos)
+            slot = pos_vec % window
+            k_cache = write_kv_slot(cache["k"], kn, slot)
+            v_cache = write_kv_slot(cache["v"], vn, slot)
+            k_pos = ring_positions(window, pos_vec)            # (B, W)
         else:
-            k_cache = lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos, axis=1)
-            v_cache = lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos, axis=1)
-            S = k_cache.shape[1]
-            k_pos = jnp.where(jnp.arange(S) <= pos, jnp.arange(S), -1)
-        out = chunked_attention(
-            q,
-            k_cache,
-            v_cache,
-            pos_arr,
-            k_pos.astype(jnp.int32),
-            causal=True,
+            k_cache = write_kv_slot(cache["k"], kn, pos_vec)
+            v_cache = write_kv_slot(cache["v"], vn, pos_vec)
+            S = k_cache.shape[2]
+            # the kernel masks k_pos > q_pos per slot; stale entries
+            # beyond each slot's position never contribute
+            k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        out = ops.decode_attention(
+            q[:, 0], k_cache, v_cache, k_pos.astype(jnp.int32), pos_vec,
             window=window,
-            chunk=cfg.attn_chunk,
-            unroll=cfg.costing,
-        )
+        )[:, None]                                             # (B, 1, H, hd)
         new_cache = {"k": k_cache, "v": v_cache}
     return dense(out.reshape(B, Tq, -1), p["wo"], dtype=cfg.dtype), new_cache
 
 
-def cross_attention(cfg: ArchConfig, p, x: jax.Array, enc_kv):
-    """enc_kv: precomputed {"k","v"} (B, Tv, K, hd) from the encoder or
-    vision projector — computed once at prefill, static afterwards."""
+def cross_attention(cfg: ArchConfig, p, x: jax.Array, enc_kv, *,
+                    native: bool = False):
+    """enc_kv: precomputed {"k","v"} from the encoder or vision
+    projector — computed once at prefill, static afterwards. With
+    ``native=False`` (prefill/full) the memory is (B, Tv, K, hd) and
+    attention runs chunked; with ``native=True`` (decode, Tq == 1) the
+    memory is the cached native (B, K, Tv, hd) layout and attention
+    runs through the ragged decode kernel with every memory slot
+    valid — no per-step transpose of the cross cache."""
     dt = cfg.dtype
     B, Tq, _ = x.shape
     q = dense(x, p["wq"], dtype=dt).reshape(B, Tq, cfg.n_heads, cfg.hd)
     if cfg.qk_norm:
         q = _qk_norm(q, p["q_norm"])
-    Tv = enc_kv["k"].shape[1]
-    k_pos = jnp.arange(Tv, dtype=jnp.int32)
-    q_pos = jnp.zeros((Tq,), jnp.int32)  # no causality vs. memory tokens
-    out = chunked_attention(
-        q, enc_kv["k"], enc_kv["v"], q_pos, k_pos, causal=False, window=0,
-        chunk=cfg.attn_chunk, unroll=cfg.costing,
-    )
+    if native:
+        Tv = enc_kv["k"].shape[2]
+        k_pos = jnp.broadcast_to(jnp.arange(Tv, dtype=jnp.int32), (B, Tv))
+        # non-causal: q_pos = Tv admits every memory slot for every slot
+        q_pos = jnp.full((B,), Tv, jnp.int32)
+        out = ops.decode_attention(
+            q[:, 0], enc_kv["k"], enc_kv["v"], k_pos, q_pos, window=0,
+        )[:, None]
+    else:
+        Tv = enc_kv["k"].shape[1]
+        k_pos = jnp.arange(Tv, dtype=jnp.int32)
+        q_pos = jnp.zeros((Tq,), jnp.int32)  # no causality vs. memory tokens
+        out = chunked_attention(
+            q, enc_kv["k"], enc_kv["v"], q_pos, k_pos, causal=False, window=0,
+            chunk=cfg.attn_chunk, unroll=cfg.costing,
+        )
     return dense(out.reshape(B, Tq, -1), p["wo"], dtype=dt)
 
 
 def cross_kv(cfg: ArchConfig, p, enc_out: jax.Array):
-    """Project encoder/vision states to this block's K/V once."""
+    """Project encoder/vision states to this block's K/V once.
+    Returns the sequence-major (B, Tv, K, hd) layout used by the
+    chunked prefill path; cache it with :func:`to_native_kv`."""
     dt = cfg.dtype
     B, Tv, _ = enc_out.shape
     k = dense(enc_out, p["wk"], dtype=dt).reshape(B, Tv, cfg.n_kv, cfg.hd)
@@ -275,3 +327,9 @@ def cross_kv(cfg: ArchConfig, p, enc_out: jax.Array):
     if cfg.qk_norm:
         k = _qk_norm(k, p["k_norm"])
     return {"k": k, "v": v}
+
+
+def to_native_kv(kv):
+    """(B, Tv, K, hd) -> native (B, K, Tv, hd); one transpose at
+    prefill so decode steps read the cache as-is."""
+    return {"k": jnp.swapaxes(kv["k"], 1, 2), "v": jnp.swapaxes(kv["v"], 1, 2)}

@@ -162,7 +162,10 @@ class Model:
         return self._unembed(params, x)[:, 0, :], caches
 
     def decode_step(self, params, caches, tokens, pos):
-        """tokens: (B, 1) int32; pos: scalar int32 (write position)."""
+        """tokens: (B, 1) int32; pos: scalar int32 (lock-stepped write
+        position) or (B,) int32 per-slot positions (ragged continuous
+        batching — each slot decodes at its own depth; negative marks a
+        free pool slot whose output is meaningless)."""
         cfg = self.cfg
         x = self._embed(params, tokens)
         x, caches, _ = tfm.run_stack(
@@ -242,7 +245,8 @@ class Model:
 
 
 def _pad_kv(c, max_len: int, stacked: bool):
-    ax = 2 if stacked else 1
+    # native layout: (B, K, S, hd) / stacked (R, B, K, S, hd)
+    ax = 3 if stacked else 2
     S = c["k"].shape[ax]
     if S >= max_len:
         return c

@@ -145,12 +145,13 @@ def block_apply(cfg: ArchConfig, kind: str, p, x, *, mode: str, cache, pos, enc_
     if kind == "cross":
         h = apply_norm(cfg, p["norm1"], x)
         if mode == "decode":
-            kv = cache
-            new_cache = cache  # static after prefill
+            # cache holds the native (B, K, Tv, hd) layout, static
+            a_out = attn.cross_attention(cfg, p["attn"], h, cache, native=True)
+            new_cache = cache
         else:
             kv = attn.cross_kv(cfg, p["attn"], enc_out)
-            new_cache = kv if mode == "prefill" else None
-        a_out = attn.cross_attention(cfg, p["attn"], h, kv)
+            new_cache = attn.to_native_kv(kv) if mode == "prefill" else None
+            a_out = attn.cross_attention(cfg, p["attn"], h, kv)
         x = x + jnp.tanh(p["gate_attn"]).astype(cfg.dtype) * a_out
         h2 = apply_norm(cfg, p["norm2"], x)
         x = x + jnp.tanh(p["gate_mlp"]).astype(cfg.dtype) * attn.mlp_apply(cfg, p["mlp"], h2)
@@ -165,12 +166,13 @@ def block_apply(cfg: ArchConfig, kind: str, p, x, *, mode: str, cache, pos, enc_
         x = x + a_out
         hx = apply_norm(cfg, p["norm_x"], x)
         if mode == "decode":
-            kv = cache["cross"]
-            new_cross = kv
+            new_cross = cache["cross"]  # native layout, static
+            x = x + attn.cross_attention(cfg, p["cross_attn"], hx,
+                                         cache["cross"], native=True)
         else:
             kv = attn.cross_kv(cfg, p["cross_attn"], enc_out)
-            new_cross = kv if mode == "prefill" else None
-        x = x + attn.cross_attention(cfg, p["cross_attn"], hx, kv)
+            new_cross = attn.to_native_kv(kv) if mode == "prefill" else None
+            x = x + attn.cross_attention(cfg, p["cross_attn"], hx, kv)
         h2 = apply_norm(cfg, p["norm2"], x)
         x = x + attn.mlp_apply(cfg, p["mlp"], h2)
         new_cache = None
@@ -210,37 +212,34 @@ def block_apply(cfg: ArchConfig, kind: str, p, x, *, mode: str, cache, pos, enc_
 # ---------------------------------------------------------------------------
 
 def block_init_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int, enc_len: int):
+    # KV caches use the decode kernel's native (B, K, S, hd) layout so
+    # the per-token hot loop never transposes or pads the cache
     dt = cfg.dtype
-    if kind in ("attn", "global", "moe"):
+    if kind in ("attn", "global", "moe", "shared_attn"):
         return {
-            "k": jnp.zeros((batch, max_len, cfg.n_kv, cfg.hd), dt),
-            "v": jnp.zeros((batch, max_len, cfg.n_kv, cfg.hd), dt),
-        }
-    if kind == "shared_attn":  # Zamba2 shared block: full attention
-        return {
-            "k": jnp.zeros((batch, max_len, cfg.n_kv, cfg.hd), dt),
-            "v": jnp.zeros((batch, max_len, cfg.n_kv, cfg.hd), dt),
+            "k": jnp.zeros((batch, cfg.n_kv, max_len, cfg.hd), dt),
+            "v": jnp.zeros((batch, cfg.n_kv, max_len, cfg.hd), dt),
         }
     if kind in ("swa", "swa_moe"):
         W = cfg.window if cfg.window else max_len  # ring buffer size
         return {
-            "k": jnp.zeros((batch, W, cfg.n_kv, cfg.hd), dt),
-            "v": jnp.zeros((batch, W, cfg.n_kv, cfg.hd), dt),
+            "k": jnp.zeros((batch, cfg.n_kv, W, cfg.hd), dt),
+            "v": jnp.zeros((batch, cfg.n_kv, W, cfg.hd), dt),
         }
     if kind == "cross":
         return {
-            "k": jnp.zeros((batch, enc_len, cfg.n_kv, cfg.hd), dt),
-            "v": jnp.zeros((batch, enc_len, cfg.n_kv, cfg.hd), dt),
+            "k": jnp.zeros((batch, cfg.n_kv, enc_len, cfg.hd), dt),
+            "v": jnp.zeros((batch, cfg.n_kv, enc_len, cfg.hd), dt),
         }
     if kind == "selfcross":
         return {
             "self": {
-                "k": jnp.zeros((batch, max_len, cfg.n_kv, cfg.hd), dt),
-                "v": jnp.zeros((batch, max_len, cfg.n_kv, cfg.hd), dt),
+                "k": jnp.zeros((batch, cfg.n_kv, max_len, cfg.hd), dt),
+                "v": jnp.zeros((batch, cfg.n_kv, max_len, cfg.hd), dt),
             },
             "cross": {
-                "k": jnp.zeros((batch, enc_len, cfg.n_kv, cfg.hd), dt),
-                "v": jnp.zeros((batch, enc_len, cfg.n_kv, cfg.hd), dt),
+                "k": jnp.zeros((batch, cfg.n_kv, enc_len, cfg.hd), dt),
+                "v": jnp.zeros((batch, cfg.n_kv, enc_len, cfg.hd), dt),
             },
         }
     if kind == "mamba2":

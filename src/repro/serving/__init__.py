@@ -1,5 +1,8 @@
-from repro.serving.engine import (GenerationResult, ProgressiveServer,
-                                  WireStoreReceiver, resident_report)
+from repro.serving.engine import (GenerationResult, PoolRequest,
+                                  PoolStepStats, ProgressiveServer,
+                                  SlotPoolEngine, WireStoreReceiver,
+                                  resident_report)
 
 __all__ = ["ProgressiveServer", "GenerationResult", "WireStoreReceiver",
+           "SlotPoolEngine", "PoolRequest", "PoolStepStats",
            "resident_report"]

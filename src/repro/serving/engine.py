@@ -1,4 +1,5 @@
-"""Progressive serving engine.
+"""Progressive serving engine: single-stream server + continuous-
+batching slot pool.
 
 The deployment story of the paper, pod-side: a server starts with the
 MSB planes of the weights, begins serving immediately, and upgrades
@@ -8,6 +9,28 @@ values change; shapes/dtypes don't), so an upgrade costs one integer
 OR + dequantize — no recompilation, no cache invalidation, no request
 draining. That is the TPU-serving analogue of the paper's Fig. 4
 concurrent download/inference timeline.
+
+Two engines share the precision machinery:
+
+* :class:`ProgressiveServer` — the lock-stepped single stream (every
+  slot at the same position). Kept for parity baselines, prefix tests
+  and the Fig.-4 co-simulation.
+* :class:`SlotPoolEngine` — continuous batching: a fixed pool of
+  ``n_slots`` decode slots over ONE set of device caches in the flash
+  kernel's native ``(B, Kh, S, hd)`` layout. Requests are admitted into
+  free slots mid-flight (their prompt prefilled straight into the
+  slot's cache region), finished requests are evicted, and every step
+  is one batched ragged ``decode_step`` — per-slot ``(B,)`` positions,
+  one compiled executable for the lifetime of the pool, upgrades
+  applied between batched steps at zero recompiles.
+
+Both engines dispatch **asynchronously**: the device is never host-
+synced per token. Greedy sampling chains on device (argmax feeds the
+next step), and the host only blocks on a bounded in-flight window
+(``dispatch_window`` steps) before reading token values — so plane
+ingest, admission bookkeeping and upgrade scheduling all overlap device
+decode. ``sync=True`` restores the old block-per-token behavior (and
+its per-token timing semantics) for comparable benchmarks.
 
 The accumulators live in the shared PlaneStore: a stage upgrade is one
 batched integer Pallas launch over the flat buffer. What the decode
@@ -19,10 +42,7 @@ step *sees* is governed by ``resident``:
 * ``resident="quantized"`` (SLIDE-style): the live param pytree holds
   :class:`~repro.core.quantize.QuantizedTensor` *views* over the
   accumulators; eq. (5) runs fused into every matmul
-  (``kernels/dequant_matmul``) and no fp weight buffer ever exists. An
-  upgrade is the store ingest plus a metadata refresh (new traced
-  scale/offset values) — the jitted ``decode_step`` keeps exactly one
-  cache entry across every upgrade, because nothing static changes.
+  (``kernels/dequant_matmul``) and no fp weight buffer ever exists.
 """
 from __future__ import annotations
 
@@ -48,7 +68,12 @@ class GenerationResult:
     tokens: Any           # (B, steps) generated token ids
     stage_at_step: list   # precision stage used for each decode step
     upgrades: list        # (step, stage) upgrade events
-    per_step_s: list
+    per_step_s: list      # sync: measured per token; async: window_s/steps
+    window_s: list = dataclasses.field(default_factory=list)
+    #                    # (steps_in_window, wall_seconds) per flushed window
+    ttft_s: float = 0.0   # wall time until the first token's value is on host
+    tpot_s: float = 0.0   # total wall time / steps
+    mode: str = "sync"    # "sync" (block per token) | "async" (windowed)
 
 
 def resident_report(params) -> dict:
@@ -120,26 +145,11 @@ class WireStoreReceiver:
         return rebuild_params(self.prog, leaves, key_fn=wire.path_str)
 
 
-class ProgressiveServer:
-    """Holds device-resident plane accumulators + a jit'd decode step.
-
-    Two feeding modes:
-
-    * pull (default): ``receive_stage()`` ingests the next stage's
-      planes from ``self.prog`` into the server's own ReceiverState
-      (server-push in a real deployment).
-    * receiver: constructed with ``receiver=`` (e.g.
-      :class:`WireStoreReceiver` over the wire client's store) the
-      server holds no accumulators of its own — ``receive_stage()``
-      refreshes params from the externally-fed store. This is what the
-      co-simulation :class:`~repro.transmission.session.Session` uses:
-      bytes are ingested once, by the client.
-
-    And two residency modes (``resident="fp" | "quantized"``), see the
-    module docstring. Both serve the identical token stream — pinned by
-    tests — but quantized residency allocates no fp weight buffers and
-    upgrades without touching eq. (5) for the weights.
-    """
+class PrecisionManagedEngine:
+    """Shared precision machinery: plane accumulators (own ReceiverState
+    or an external receiver's store), residency-aware param refresh, and
+    the jit'd prefill/decode entry points. Both the single-stream
+    server and the slot pool extend this."""
 
     def __init__(self, model: Model, prog: ProgressiveModel, max_len: int,
                  receiver: WireStoreReceiver | None = None,
@@ -157,8 +167,6 @@ class ProgressiveServer:
         self.params = None  # live param pytree at current precision
         self._prefill = jax.jit(model.prefill)
         self._decode = jax.jit(model.decode_step)
-        self.caches = None
-        self.pos = 0
 
     # -- precision management ------------------------------------------------
     @property
@@ -176,8 +184,9 @@ class ProgressiveServer:
 
     def decode_cache_size(self) -> int:
         """Compiled-executable count of the jitted decode step. The
-        zero-recompile guarantee of quantized residency is exactly
-        'this stays 1 across every upgrade'."""
+        zero-recompile guarantee is exactly 'this stays 1 across every
+        upgrade' — and for the slot pool, across every admission and
+        eviction too."""
         return self._decode._cache_size()
 
     def _refresh_params(self) -> None:
@@ -225,6 +234,37 @@ class ProgressiveServer:
         self.state = self.state.receive(self.prog.stage(s))
         self._refresh_params()
 
+
+class ProgressiveServer(PrecisionManagedEngine):
+    """Single lock-stepped request stream over device-resident plane
+    accumulators + one jit'd decode step.
+
+    Two feeding modes:
+
+    * pull (default): ``receive_stage()`` ingests the next stage's
+      planes from ``self.prog`` into the server's own ReceiverState
+      (server-push in a real deployment).
+    * receiver: constructed with ``receiver=`` (e.g.
+      :class:`WireStoreReceiver` over the wire client's store) the
+      server holds no accumulators of its own — ``receive_stage()``
+      refreshes params from the externally-fed store. This is what the
+      co-simulation :class:`~repro.transmission.session.Session` uses:
+      bytes are ingested once, by the client.
+
+    And two residency modes (``resident="fp" | "quantized"``), see the
+    module docstring. Both serve the identical token stream — pinned by
+    tests — but quantized residency allocates no fp weight buffers and
+    upgrades without touching eq. (5) for the weights.
+    """
+
+    def __init__(self, model: Model, prog: ProgressiveModel, max_len: int,
+                 receiver: WireStoreReceiver | None = None,
+                 resident: str = "fp"):
+        super().__init__(model, prog, max_len, receiver=receiver,
+                         resident=resident)
+        self.caches = None
+        self.pos = 0
+
     # -- serving ---------------------------------------------------------------
     def start(self, batch: dict) -> None:
         if self.params is None:
@@ -234,31 +274,362 @@ class ProgressiveServer:
         self.pos = batch["tokens"].shape[1]
         self.last_logits = last_logits
 
-    def decode(self, steps: int, *, stage_arrival: Callable[[int], bool] | None = None) -> GenerationResult:
+    def decode(self, steps: int, *,
+               stage_arrival: Callable[[int], bool] | None = None,
+               sync: bool = False,
+               dispatch_window: int = 8) -> GenerationResult:
         """Greedy-decode ``steps`` tokens; before each step, consult
         ``stage_arrival(step)`` — True means the next plane landed and we
-        upgrade in place (KV cache untouched)."""
+        upgrade in place (KV cache untouched; checking is host-side
+        bookkeeping, so it costs no device sync).
+
+        Dispatch is asynchronous by default: greedy sampling chains on
+        device and the host blocks only every ``dispatch_window`` steps,
+        so ingest and token reads overlap decode. ``per_step_s`` is then
+        *derived* (window wall time / steps in window); ``window_s``
+        holds the honest measurements and ``ttft_s``/``tpot_s`` the
+        serving-level latencies. ``sync=True`` restores the old
+        block-per-token behavior and its per-token timings."""
+        if sync:
+            dispatch_window = 1
         toks = []
         stage_at, upgrades, per_step = [], [], []
+        window_s: list[tuple[int, float]] = []
         logits = self.last_logits
+        t_start = time.perf_counter()
+        ttft = None
+        win_t0 = t_start
+        win_steps = 0
         for i in range(steps):
             if stage_arrival and self.stage < self.prog.n_stages and stage_arrival(i):
                 self.receive_stage()
                 upgrades.append((i, self.stage))
-            t0 = time.perf_counter()
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
             logits, self.caches = self._decode(
                 self.params, self.caches, nxt, jnp.int32(self.pos)
             )
-            jax.block_until_ready(logits)
-            per_step.append(time.perf_counter() - t0)
             self.pos += 1
             toks.append(nxt[:, 0])
             stage_at.append(self.stage)
+            win_steps += 1
+            if win_steps >= dispatch_window or i == steps - 1:
+                jax.block_until_ready(logits)
+                now = time.perf_counter()
+                if ttft is None:
+                    ttft = now - t_start
+                dt = now - win_t0
+                window_s.append((win_steps, dt))
+                per_step.extend([dt / win_steps] * win_steps)
+                win_t0 = now
+                win_steps = 0
+        total = time.perf_counter() - t_start
         self.last_logits = logits
         return GenerationResult(
             tokens=jnp.stack(toks, axis=1),
             stage_at_step=stage_at,
             upgrades=upgrades,
             per_step_s=per_step,
+            window_s=window_s,
+            ttft_s=ttft or 0.0,
+            tpot_s=total / max(steps, 1),
+            mode="sync" if sync else "async",
         )
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: the slot pool
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PoolRequest:
+    """One serving request: a prompt and a generation budget."""
+
+    rid: int
+    prompt: Any                  # (S,) int32 token ids
+    max_new_tokens: int
+    extras: dict = dataclasses.field(default_factory=dict)
+    # per-request fixed-size side inputs (e.g. "vision_embeds",
+    # (vision_tokens, d_vision)), each WITHOUT the leading batch dim.
+    # Prompt-derived encoder inputs ("enc_input") are not poolable —
+    # see SlotPoolEngine.__init__
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int | None = None       # None = free
+    dispatched: int = 0          # decode steps issued for this request
+    budget: int = 0
+
+    @property
+    def free(self) -> bool:
+        return self.rid is None
+
+
+@dataclasses.dataclass
+class PoolStepStats:
+    """Host-visible outcome of a flushed dispatch window."""
+
+    steps: int
+    wall_s: float
+    tokens_emitted: int
+
+
+class SlotPoolEngine(PrecisionManagedEngine):
+    """Continuous-batching progressive serving.
+
+    A fixed pool of ``n_slots`` decode slots shares ONE cache pytree in
+    the flash kernel's native ``(B, Kh, S, hd)`` layout, one live param
+    pytree over the PlaneStore accumulators, and one compiled ragged
+    ``decode_step`` (per-slot ``(B,)`` positions). Admission prefills a
+    request's prompt with batch 1 and writes the resulting caches into
+    the slot's batch row (``dynamic_update_slice`` per leaf — packed
+    prefill); eviction just frees the host-side slot record. Neither
+    touches the decode executable.
+
+    Decode is dispatched in bounded asynchronous windows: within a
+    window, greedy sampling chains device-side with no host sync;
+    between windows the host reads token values, completes/evicts
+    finished requests, admits queued ones, and applies precision
+    upgrades — "batch-step granularity", zero recompiles (the PR-3
+    traced ``received_bits`` invariant holds: nothing static changes).
+
+    Tokens emitted by a free slot are discarded on host; the kernel
+    masks a free slot's whole cache row (``q_pos = -1``), so it costs
+    one lane of the batched launch and never NaNs.
+
+    One caveat: admission prefills at batch 1 through the jitted
+    ``model.prefill``, which compiles once per DISTINCT prompt length —
+    a novel length admitted mid-flight stalls dispatch for that
+    compile. Production deployments should bucket prompts to a small
+    set of lengths; the decode executable is unaffected (always exactly
+    one).
+    """
+
+    def __init__(self, model: Model, prog: ProgressiveModel, *,
+                 n_slots: int, max_len: int,
+                 receiver: WireStoreReceiver | None = None,
+                 resident: str = "fp",
+                 dispatch_window: int = 8,
+                 eos_id: int | None = None):
+        super().__init__(model, prog, max_len, receiver=receiver,
+                         resident=resident)
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        if model.cfg.enc_layers:
+            # audio enc-dec: the cross-cache length is prompt-derived
+            # (enc frames = seq // divisor), so per-request caches don't
+            # tile into one fixed pool cache without per-slot memory
+            # masking — single-stream serving still covers these archs
+            raise NotImplementedError(
+                "SlotPoolEngine does not support encoder-decoder models "
+                "with prompt-derived encoder lengths (cfg.enc_layers > 0); "
+                "use ProgressiveServer")
+        self.n_slots = n_slots
+        self.dispatch_window = max(1, dispatch_window)
+        self.caches = model.init_caches(n_slots, max_len)
+        self.pos = jnp.full((n_slots,), -1, jnp.int32)
+        self.last_logits = jnp.full((n_slots, model.cfg.vocab), 0.0,
+                                    jnp.float32)
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self.queue: list[PoolRequest] = []       # FIFO admission backlog
+        self.outputs: dict[int, list[int]] = {}  # rid -> generated tokens
+        self.stage_log: dict[int, list[int]] = {}  # rid -> stage per token
+        self.admit_stage: dict[int, int] = {}      # rid -> prefill stage
+        self.admitted_order: list[int] = []        # rids, actual admission
+        self.completed: set[int] = set()
+        self._retired: set[int] = set()  # evicted, final window not yet flushed
+        # in-flight dispatched steps awaiting a flush:
+        # (tokens (B,1) device array, {slot: rid} snapshot, stage)
+        self._pending: list[tuple[Any, dict[int, int], int]] = []
+        self._win_t0: float | None = None
+        self.window_stats: list[PoolStepStats] = []
+        self.upgrade_stall_s: float = 0.0
+        self.upgrades: list[tuple[int, int]] = []  # (global step, stage)
+        self._step_count = 0
+        # eos termination is checked at flush boundaries: a request may
+        # decode up to dispatch_window - 1 tokens past its eos (the
+        # standard async continuous-batching tradeoff); those trailing
+        # tokens are dropped from its output
+        self.eos_id = eos_id
+
+    # -- admission / eviction ----------------------------------------------
+    def free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s.free]
+
+    def active_rids(self) -> dict[int, int]:
+        return {i: s.rid for i, s in enumerate(self.slots) if not s.free}
+
+    def submit(self, request: PoolRequest) -> None:
+        """Queue a request; it is admitted into the next free slot at
+        the next admission point (immediately if one is free)."""
+        if request.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        self.queue.append(request)
+        self._admit_from_queue()
+
+    def _admit_from_queue(self) -> None:
+        while self.queue and (free := self.free_slots()):
+            self._admit(free[0], self.queue.pop(0))
+
+    def _admit(self, slot: int, req: PoolRequest) -> None:
+        if self.params is None:
+            raise RuntimeError("no planes received yet — call receive_stage()")
+        prompt = jnp.asarray(req.prompt, jnp.int32)
+        if prompt.ndim != 1:
+            raise ValueError("PoolRequest.prompt must be (S,)")
+        if prompt.shape[0] + req.max_new_tokens > self.max_len:
+            # write positions reach prompt_len + budget - 1; past max_len
+            # the cache write would silently clamp onto the last slot
+            raise ValueError(
+                f"request needs {prompt.shape[0]} prompt + "
+                f"{req.max_new_tokens} new tokens > max_len {self.max_len}")
+        batch = {"tokens": prompt[None, :]}
+        for k, v in req.extras.items():
+            batch[k] = jnp.asarray(v)[None]
+        last_logits, caches = self._prefill(self.params, batch)
+        caches = self.model.grow_caches(caches, self.max_len)
+        self.caches = _write_slot_tree(self.caches, caches, slot,
+                                       self.n_slots)
+        self.pos = self.pos.at[slot].set(prompt.shape[0])
+        self.last_logits = self.last_logits.at[slot].set(
+            last_logits[0].astype(self.last_logits.dtype))
+        self.slots[slot] = _Slot(rid=req.rid, dispatched=0,
+                                 budget=req.max_new_tokens)
+        self.outputs.setdefault(req.rid, [])
+        self.stage_log.setdefault(req.rid, [])
+        self.admit_stage[req.rid] = self.stage
+        self.admitted_order.append(req.rid)
+
+    def _evict(self, slot: int) -> int:
+        rid = self.slots[slot].rid
+        self.slots[slot] = _Slot()
+        self.pos = self.pos.at[slot].set(-1)
+        self._retired.add(rid)  # completed once its last window flushes
+        return rid
+
+    # -- batched ragged decode ---------------------------------------------
+    def step(self) -> dict[int, int]:
+        """Dispatch ONE batched decode step for every slot (free slots
+        ride along masked). Returns the ``{slot: rid}`` snapshot of who
+        the step decoded for. No host sync happens here."""
+        if self.params is None:
+            raise RuntimeError("no planes received yet — call receive_stage()")
+        if self._win_t0 is None:
+            self._win_t0 = time.perf_counter()
+        snapshot = self.active_rids()
+        nxt = jnp.argmax(self.last_logits, axis=-1).astype(jnp.int32)[:, None]
+        logits, self.caches = self._decode(self.params, self.caches, nxt,
+                                           self.pos)
+        active = jnp.asarray(
+            [not s.free for s in self.slots], dtype=bool)
+        self.pos = jnp.where(active, self.pos + 1, self.pos)
+        self.last_logits = logits
+        self._pending.append((nxt, snapshot, self.stage))
+        self._step_count += 1
+        # dispatch-time bookkeeping: budgets decrement without reading
+        # token values, so length-complete slots free immediately
+        for slot, s in enumerate(self.slots):
+            if not s.free:
+                s.dispatched += 1
+                if s.dispatched >= s.budget:
+                    self._evict(slot)
+        return snapshot
+
+    def flush(self) -> PoolStepStats | None:
+        """Block on the in-flight window, distribute token values to
+        their requests, complete eos/budget-finished ones."""
+        if not self._pending:
+            return None
+        jax.block_until_ready(self.last_logits)
+        toks = np.asarray(jnp.concatenate([t for t, _, _ in self._pending],
+                                          axis=1))  # (B, n_pending)
+        wall = time.perf_counter() - (self._win_t0 or time.perf_counter())
+        emitted = 0
+        eos_hit: set[int] = set()
+        for j, (_, snapshot, stage) in enumerate(self._pending):
+            for slot, rid in snapshot.items():
+                if rid in eos_hit:
+                    continue
+                tok = int(toks[slot, j])
+                self.outputs[rid].append(tok)
+                self.stage_log[rid].append(stage)
+                emitted += 1
+                if self.eos_id is not None and tok == self.eos_id:
+                    eos_hit.add(rid)
+                    # the slot may already be freed by budget bookkeeping
+                    if not self.slots[slot].free and \
+                            self.slots[slot].rid == rid:
+                        self._evict(slot)
+        # every retired request's final in-flight tokens just landed;
+        # incremental, so a long-lived pool never rescans its history
+        self.completed |= self._retired
+        self._retired.clear()
+        stats = PoolStepStats(steps=len(self._pending), wall_s=wall,
+                              tokens_emitted=emitted)
+        self.window_stats.append(stats)
+        self._pending.clear()
+        self._win_t0 = None
+        return stats
+
+    def upgrade_if_available(self) -> bool:
+        """Apply newly-arrived precision: in receiver mode this catches
+        up to every stage the externally-fed store has completed; in
+        pull mode (no receiver) it advances ONE stage per call — the
+        caller models the arrival cadence, exactly like
+        ``ProgressiveServer.decode``'s ``stage_arrival``. Timed into
+        ``upgrade_stall_s`` (the only serving-loop work allowed to
+        stall dispatch)."""
+        if self.stage >= self.prog.n_stages or \
+                self.stages_available <= self.stage:
+            return False
+        t0 = time.perf_counter()
+        self.receive_stage()
+        jax.block_until_ready(jax.tree.leaves(self.params))
+        self.upgrade_stall_s += time.perf_counter() - t0
+        self.upgrades.append((self._step_count, self.stage))
+        return True
+
+    def run(self, *, max_steps: int = 100_000,
+            on_window: Callable[[int], None] | None = None) -> dict[int, list[int]]:
+        """Drive the pool until every submitted request completes.
+        ``on_window(step_count)`` runs at every window boundary (the
+        session uses it to feed bytes / admit staggered arrivals /
+        upgrade)."""
+        while (any(not s.free for s in self.slots) or self.queue):
+            for _ in range(self.dispatch_window):
+                if not any(not s.free for s in self.slots):
+                    break
+                self.step()
+                if self._step_count >= max_steps:
+                    break
+            self.flush()
+            self._admit_from_queue()
+            if on_window is not None:
+                on_window(self._step_count)
+            if self._step_count >= max_steps:
+                break
+        self.flush()
+        return {rid: list(v) for rid, v in self.outputs.items()}
+
+
+def _write_slot_tree(pool, one, slot: int, n_slots: int):
+    """Write a batch-1 cache pytree into batch row ``slot`` of the pool
+    cache pytree. The batch axis of each leaf is located structurally:
+    it is the one axis where the pool leaf is ``n_slots`` wide and the
+    single-request leaf is 1 (leaves with identical shapes — n_slots ==
+    1 — are replaced outright)."""
+
+    def write(p, o):
+        if p.shape == o.shape:
+            return o.astype(p.dtype)
+        cand = [d for d, (a, b) in enumerate(zip(p.shape, o.shape))
+                if a != b]
+        if len(cand) != 1 or o.shape[cand[0]] != 1 or \
+                p.shape[cand[0]] != n_slots:
+            raise ValueError(
+                f"cannot locate batch axis: pool {p.shape} vs one {o.shape}")
+        start = [0] * p.ndim
+        start[cand[0]] = slot
+        return jax.lax.dynamic_update_slice(p, o.astype(p.dtype), start)
+
+    return jax.tree.map(write, pool, one)

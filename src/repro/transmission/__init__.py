@@ -16,7 +16,9 @@ from repro.transmission.scheduler import (
     singleton_timeline,
 )
 from repro.transmission.client import ProgressiveClient
-from repro.transmission.scenarios import SCENARIOS, Scenario, get_scenario, list_scenarios
+from repro.transmission.scenarios import (SCENARIOS, Scenario,
+                                          flash_crowd_arrivals, get_scenario,
+                                          list_scenarios)
 from repro.transmission.session import Session, SessionEvent, SessionResult
 
 __all__ = [
@@ -33,6 +35,7 @@ __all__ = [
     "ProgressiveClient",
     "SCENARIOS",
     "Scenario",
+    "flash_crowd_arrivals",
     "get_scenario",
     "list_scenarios",
     "Session",

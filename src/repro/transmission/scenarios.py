@@ -19,6 +19,10 @@ The four canonical entries map to the paper's deployment stories:
                       outage (elevator/tunnel) — the stall scenario
 ``pod-coldstart``     checkpoint-store -> TPU-pod link: very fast,
                       near-zero latency; stresses the compute side
+``flash-crowd``       a solid edge link whose *demand* spikes: N
+                      clients join mid-download and the slot-pool
+                      engine admits them staggered (see
+                      :func:`flash_crowd_arrivals`)
 ==================== ====================================================
 """
 from __future__ import annotations
@@ -76,6 +80,27 @@ def _pod_coldstart(seed: int) -> BandwidthTrace:
     return BandwidthTrace.constant(200e6, name="pod-coldstart")
 
 
+def _flash_crowd(seed: int) -> BandwidthTrace:
+    """The link itself is a decent lightly-jittered edge connection —
+    the scenario's stress is the *request* side (staggered admissions
+    into the slot pool), not the byte clock."""
+    return BandwidthTrace.jittered(
+        1.5e6, 0.1, seed=seed, interval_s=0.5, n_intervals=128,
+        name=f"flash-crowd@{seed}")
+
+
+def flash_crowd_arrivals(seed: int, n_clients: int,
+                         span_s: float) -> list[float]:
+    """Deterministic staggered arrival offsets for a flash crowd:
+    ``n_clients`` requests land within ``span_s`` seconds of the cold
+    start, sorted, seed-reproducible. The first client arrives at 0 so
+    the pool always cold-starts with work."""
+    rng = np.random.default_rng(seed)
+    offs = np.sort(rng.uniform(0.0, span_s, size=n_clients))
+    offs[0] = 0.0
+    return [float(o) for o in offs]
+
+
 SCENARIOS: dict[str, Scenario] = {
     s.name: s
     for s in (
@@ -110,6 +135,14 @@ SCENARIOS: dict[str, Scenario] = {
             make_trace=_pod_coldstart,
             latency_s=0.005,
             chunk_bytes=1024 * 1024,
+        ),
+        Scenario(
+            name="flash-crowd",
+            description="1.5 MB/s edge link; N clients join "
+                        "mid-download and share one slot pool",
+            make_trace=_flash_crowd,
+            latency_s=0.03,
+            chunk_bytes=32 * 1024,
         ),
     )
 }

@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Any, Sequence
+from typing import Any, Callable, Sequence
 
 from repro.core import wire
 from repro.transmission.client import ProgressiveClient
@@ -62,9 +62,11 @@ class SessionResult:
     client: ProgressiveClient
     timeline: Timeline | None = None
     server: Any = None
-    tokens: Any = None
+    tokens: Any = None                # serving: (B, steps) array;
+                                      # pool: {rid: [token, ...]}
     upgrades: list | None = None      # (decode step, new stage)
     stage_at_step: list | None = None
+    admissions: list | None = None    # pool: (wall_s, rid) admission log
 
     def to_jsonl(self) -> str:
         return "\n".join(
@@ -230,6 +232,30 @@ class Session:
             timeline=Timeline(download_done=download_done,
                               result_ready=result_ready))
 
+    def _make_feeder(self, client, events: list) -> "Callable[[float], None]":
+        """Closure feeding wire bytes to ``client`` up to a wall time,
+        appending chunk/header/stage_complete events as they land."""
+        plan = self._feed_plan()
+        state = {"idx": 0}
+
+        def feed_until(t_wall: float) -> None:
+            while state["idx"] < len(plan) and plan[state["idx"]][2] <= t_wall:
+                a, b, w = plan[state["idx"]]
+                before = client.stages_complete
+                had_header = client.header_ready
+                client.feed(self.blob[a:b])
+                events.append(SessionEvent(w, "chunk",
+                                           {"bytes": b - a, "through": b}))
+                if not had_header and client.header_ready:
+                    events.append(SessionEvent(
+                        w, "header", {"bytes": self._header_end}))
+                for s in range(before + 1, client.stages_complete + 1):
+                    events.append(SessionEvent(
+                        w, "stage_complete", {"stage": s, "through": b}))
+                state["idx"] += 1
+
+        return feed_until
+
     # -- mode 2: the operational serve path --------------------------------
     def run_serving(self, model, prog, *, decode_steps: int, batch: dict,
                     step_time_s: float | None = None,
@@ -258,26 +284,8 @@ class Session:
         server = ProgressiveServer(model, prog, max_len=max_len,
                                    receiver=receiver, resident=resident)
         events: list[SessionEvent] = []
-        plan = self._feed_plan()
         arrivals = self.stage_arrival_times()
-        idx = 0
-
-        def feed_until(t_wall: float) -> None:
-            nonlocal idx
-            while idx < len(plan) and plan[idx][2] <= t_wall:
-                a, b, w = plan[idx]
-                before = client.stages_complete
-                had_header = client.header_ready
-                client.feed(self.blob[a:b])
-                events.append(SessionEvent(w, "chunk",
-                                           {"bytes": b - a, "through": b}))
-                if not had_header and client.header_ready:
-                    events.append(SessionEvent(
-                        w, "header", {"bytes": self._header_end}))
-                for s in range(before + 1, client.stages_complete + 1):
-                    events.append(SessionEvent(
-                        w, "stage_complete", {"stage": s, "through": b}))
-                idx += 1
+        feed_until = self._make_feeder(client, events)
 
         # cold start: serve as soon as stage 1 is in
         t_cold = arrivals[0]
@@ -314,3 +322,173 @@ class Session:
             events=events, client=client, server=server,
             tokens=res.tokens, upgrades=res.upgrades,
             stage_at_step=res.stage_at_step)
+
+    # -- mode 3: continuous batching under a flash crowd -------------------
+    def run_serving_pool(self, model, prog, *, prompts: Sequence,
+                         arrival_offsets_s: Sequence[float] | None = None,
+                         max_new_tokens: int = 8,
+                         n_slots: int = 4,
+                         max_len: int | None = None,
+                         resident: str = "fp",
+                         step_time_s: float | None = None,
+                         dispatch_window: int = 4) -> SessionResult:
+        """Flash-crowd serving: N requests join mid-download over ONE
+        shared byte stream, and a :class:`~repro.serving.engine.
+        SlotPoolEngine` serves them all from the client's PlaneStore —
+        staggered admissions into free slots, evictions on completion,
+        precision upgrades between batched windows, one decode
+        executable throughout.
+
+        ``prompts[i]`` becomes admissible ``arrival_offsets_s[i]``
+        seconds after the cold start (default: all at cold start). The
+        simulated decode clock ticks ``step_time_s`` per batched step;
+        idle rounds (pool empty, crowd not yet arrived) advance the
+        clock without dispatching. Deterministic for a fixed
+        (blob, trace, prompts, offsets).
+
+        Note: this drives the engine step/flush primitives directly
+        rather than ``SlotPoolEngine.run`` because admissions and byte
+        feeding are gated on the *simulated wall clock*, which only
+        this session knows — keep the two loops' flush/evict
+        bookkeeping in sync when changing either."""
+        from repro.serving.engine import (PoolRequest, SlotPoolEngine,
+                                          WireStoreReceiver)
+
+        n_req = len(prompts)
+        if arrival_offsets_s is None:
+            arrival_offsets_s = [0.0] * n_req
+        if len(arrival_offsets_s) != n_req:
+            raise ValueError("one arrival offset per prompt")
+        if max_len is None:
+            max_len = max(len(p) for p in prompts) + max_new_tokens
+
+        client = ProgressiveClient()
+        receiver = WireStoreReceiver(client, prog)
+        engine = SlotPoolEngine(model, prog, n_slots=n_slots,
+                                max_len=max_len, receiver=receiver,
+                                resident=resident,
+                                dispatch_window=dispatch_window)
+        events: list[SessionEvent] = []
+        arrivals = self.stage_arrival_times()
+        feed_until = self._make_feeder(client, events)
+
+        t_cold = arrivals[0]
+        feed_until(t_cold)
+        if client.stages_complete < 1:
+            raise AssertionError("stage 1 not complete at its arrival time")
+        engine.receive_stage()
+        events.append(SessionEvent(
+            t_cold, "cold_start",
+            {"stage": engine.stage, "n_slots": n_slots, "clients": n_req}))
+
+        total_budget = n_req * max_new_tokens
+        if step_time_s is None:
+            step_time_s = max(
+                (arrivals[-1] - t_cold) / max(total_budget, 1), 1e-6)
+
+        order = sorted(range(n_req), key=lambda i: (arrival_offsets_s[i], i))
+        next_req = 0
+        admissions: list[tuple[float, int]] = []  # actual slot admissions
+        seen_admits = 0
+        rounds = 0
+        # every request decodes max_new_tokens steps; idle rounds are
+        # bounded by the crowd span, so this cap is never the exit path
+        max_rounds = total_budget + n_req + int(
+            max(arrival_offsets_s) / step_time_s) + 8
+
+        def wall() -> float:
+            return t_cold + (rounds + 1) * step_time_s
+
+        def admit_due(t: float) -> None:
+            nonlocal next_req
+            while next_req < n_req and \
+                    t_cold + arrival_offsets_s[order[next_req]] <= t:
+                rid = order[next_req]
+                engine.submit(PoolRequest(
+                    rid=rid, prompt=prompts[rid],
+                    max_new_tokens=max_new_tokens))
+                events.append(SessionEvent(t, "submit", {"rid": rid}))
+                next_req += 1
+
+        def log_admissions(t: float) -> None:
+            # the 'admit' event stamps when a request actually took a
+            # slot (engine._admit), not when it was submitted — a full
+            # pool queues submissions until an eviction frees a slot
+            nonlocal seen_admits
+            for rid in engine.admitted_order[seen_admits:]:
+                admissions.append((t, rid))
+                events.append(SessionEvent(t, "admit", {"rid": rid}))
+            seen_admits = len(engine.admitted_order)
+
+        admit_due(t_cold)
+        log_admissions(t_cold)
+        evicted_logged: set[int] = set()
+
+        def log_evictions(t: float) -> None:
+            for rid in sorted(engine.completed - evicted_logged):
+                events.append(SessionEvent(t, "evict", {"rid": rid}))
+                evicted_logged.add(rid)
+
+        while (next_req < n_req or engine.queue or
+               any(not s.free for s in engine.slots)):
+            if rounds >= max_rounds:
+                raise AssertionError("slot-pool run did not converge")
+            t = wall()
+            feed_until(t)
+            if engine.upgrade_if_available():
+                events.append(SessionEvent(
+                    t, "upgrade",
+                    {"step": engine._step_count, "stage": engine.stage}))
+            admit_due(t)
+            log_admissions(t)
+            if any(not s.free for s in engine.slots):
+                snapshot = engine.step()
+                if len(engine._pending) >= dispatch_window:
+                    stats = engine.flush()
+                    events.append(SessionEvent(
+                        t, "pool_window",
+                        {"steps": stats.steps,
+                         "tokens": stats.tokens_emitted,
+                         "active": len(snapshot),
+                         "stage": engine.stage}))
+                    engine._admit_from_queue()
+                    log_admissions(t)
+                    log_evictions(t)
+                rounds += 1
+            elif engine.queue:
+                # every active slot budget-evicted mid-window: flush the
+                # in-flight tail so the queue can take the freed slots
+                stats = engine.flush()
+                if stats is not None:
+                    events.append(SessionEvent(
+                        t, "pool_window",
+                        {"steps": stats.steps,
+                         "tokens": stats.tokens_emitted,
+                         "active": 0, "stage": engine.stage}))
+                engine._admit_from_queue()
+                log_admissions(t)
+                log_evictions(t)
+                rounds += 1
+            else:
+                # idle pool, crowd still to come (queue empty + no active
+                # slot implies next_req < n_req by the loop condition):
+                # fast-forward the clock to the next arrival instead of
+                # spinning one round per step_time_s tick (a fast link
+                # makes that microscopic)
+                nxt = t_cold + arrival_offsets_s[order[next_req]]
+                skip = int((nxt - t_cold) / step_time_s) - 1
+                rounds = max(rounds + 1, min(skip, max_rounds - 1))
+        stats = engine.flush()
+        t_end = wall()
+        if stats is not None:
+            events.append(SessionEvent(
+                t_end, "pool_window",
+                {"steps": stats.steps, "tokens": stats.tokens_emitted,
+                 "active": 0, "stage": engine.stage}))
+        log_evictions(t_end)
+        events.sort(key=lambda e: e.t_s)
+        return SessionResult(
+            events=events, client=client, server=engine,
+            tokens={rid: list(v) for rid, v in engine.outputs.items()},
+            upgrades=list(engine.upgrades),
+            admissions=admissions)

@@ -123,77 +123,175 @@ def test_plane_or_matches_ref(bits):
 
 
 # ---------------------------------------------------------------------------
-# flash decode attention
+# flash decode attention (ragged batches, native (B, Kh, S, hd) layout)
 # ---------------------------------------------------------------------------
+
+def _ragged_inputs(key, B, H, Kh, hd, S, pos):
+    """Random q/k/v in native layout + lock-stepped position operands
+    (every slot at ``pos``)."""
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, Kh, S, hd))
+    v = jax.random.normal(ks[2], (B, Kh, S, hd))
+    k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q_pos = jnp.full((B,), pos, jnp.int32)
+    return q, k, v, k_pos, q_pos
+
 
 @pytest.mark.parametrize("B,H,Kh,hd,S", [
     (1, 4, 4, 32, 64),     # MHA
-    (2, 8, 2, 64, 300),    # GQA, ragged S
+    (2, 8, 2, 64, 300),    # GQA, ragged S (block shrinks to a divisor)
     (2, 16, 1, 32, 128),   # MQA
     (1, 8, 8, 128, 1024),  # long-ish
 ])
 def test_flash_decode_vs_ref(B, H, Kh, hd, S):
-    ks = jax.random.split(jax.random.PRNGKey(B + H + S), 3)
-    q = jax.random.normal(ks[0], (B, H, hd))
-    k = jax.random.normal(ks[1], (B, S, Kh, hd))
-    v = jax.random.normal(ks[2], (B, S, Kh, hd))
-    pos = S * 3 // 4
-    k_pos = jnp.where(jnp.arange(S) <= pos, jnp.arange(S), -1)
-    o = flash_decode(q, k, v, k_pos, jnp.int32(pos), bs=128, interpret=True)
-    orf = ref.flash_decode_ref(q, k, v, k_pos, jnp.int32(pos))
+    q, k, v, k_pos, q_pos = _ragged_inputs(
+        jax.random.PRNGKey(B + H + S), B, H, Kh, hd, S, S * 3 // 4)
+    o = flash_decode(q, k, v, k_pos, q_pos, bs=128, interpret=True)
+    orf = ref.flash_decode_ref(q, k, v, k_pos, q_pos)
     np.testing.assert_allclose(np.asarray(o), np.asarray(orf), rtol=2e-5, atol=2e-5)
 
 
 @pytest.mark.parametrize("window", [16, 64])
 def test_flash_decode_window(window):
     B, H, Kh, hd, S = 2, 8, 4, 32, 200
-    ks = jax.random.split(jax.random.PRNGKey(window), 3)
-    q = jax.random.normal(ks[0], (B, H, hd))
-    k = jax.random.normal(ks[1], (B, S, Kh, hd))
-    v = jax.random.normal(ks[2], (B, S, Kh, hd))
-    pos = 150
-    k_pos = jnp.where(jnp.arange(S) <= pos, jnp.arange(S), -1)
-    o = flash_decode(q, k, v, k_pos, jnp.int32(pos), window=window, bs=64,
+    q, k, v, k_pos, q_pos = _ragged_inputs(
+        jax.random.PRNGKey(window), B, H, Kh, hd, S, 150)
+    o = flash_decode(q, k, v, k_pos, q_pos, window=window, bs=64,
                      interpret=True)
-    orf = ref.flash_decode_ref(q, k, v, k_pos, jnp.int32(pos), window=window)
+    orf = ref.flash_decode_ref(q, k, v, k_pos, q_pos, window=window)
     np.testing.assert_allclose(np.asarray(o), np.asarray(orf), rtol=2e-5, atol=2e-5)
 
 
 def test_flash_decode_softcap_and_ring_positions():
-    """Ring-buffer slot positions (unordered, with overwrites) must work."""
+    """Ring-buffer slot positions (unordered, with overwrites, per-slot
+    write depths) must work."""
     from repro.models.attention import ring_positions
 
-    B, H, Kh, hd, W = 1, 4, 2, 32, 32
+    B, H, Kh, hd, W = 2, 4, 2, 32, 32
     ks = jax.random.split(jax.random.PRNGKey(7), 3)
     q = jax.random.normal(ks[0], (B, H, hd))
-    k = jax.random.normal(ks[1], (B, W, Kh, hd))
-    v = jax.random.normal(ks[2], (B, W, Kh, hd))
-    pos = 50  # ring has wrapped
-    k_pos = ring_positions(W, jnp.int32(pos))
-    o = flash_decode(q, k, v, k_pos, jnp.int32(pos), window=W, softcap=20.0,
+    k = jax.random.normal(ks[1], (B, Kh, W, hd))
+    v = jax.random.normal(ks[2], (B, Kh, W, hd))
+    q_pos = jnp.array([50, 17], jnp.int32)  # one wrapped ring, one not
+    k_pos = ring_positions(W, q_pos)        # (B, W)
+    o = flash_decode(q, k, v, k_pos, q_pos, window=W, softcap=20.0,
                      bs=16, interpret=True)
-    orf = ref.flash_decode_ref(q, k, v, k_pos, jnp.int32(pos), window=W,
+    orf = ref.flash_decode_ref(q, k, v, k_pos, q_pos, window=W,
                                softcap=20.0)
     np.testing.assert_allclose(np.asarray(o), np.asarray(orf), rtol=2e-5, atol=2e-5)
 
 
-def test_flash_decode_matches_model_attention():
-    """The kernel must agree with the model's chunked_attention decode
-    path (the jnp oracle used by every architecture)."""
+# -- ragged-parity sweeps: kernel (interpret) vs the chunked_attention
+#    oracle, per-slot positions / GQA / window / softcap / empty slots ------
+
+def _chunked_oracle(q, k, v, k_pos, q_pos, *, window=0, softcap=0.0):
+    """Per-slot chunked_attention reference: runs each slot as its own
+    B=1 sequence-major call, i.e. the PR-3 single-stream semantics."""
     from repro.models.attention import chunked_attention
 
-    B, H, Kh, hd, S = 2, 8, 4, 32, 96
-    ks = jax.random.split(jax.random.PRNGKey(11), 3)
-    q1 = jax.random.normal(ks[0], (B, 1, H, hd))
-    k = jax.random.normal(ks[1], (B, S, Kh, hd))
-    v = jax.random.normal(ks[2], (B, S, Kh, hd))
-    pos = 64
-    k_pos = jnp.where(jnp.arange(S) <= pos, jnp.arange(S), -1)
-    got = flash_decode(q1[:, 0], k, v, k_pos, jnp.int32(pos), bs=32,
-                       interpret=True)
-    want = chunked_attention(
-        q1, k, v, jnp.full((1,), pos, jnp.int32), k_pos.astype(jnp.int32),
-        causal=True, window=0, chunk=32,
-    )[:, 0]
+    B = q.shape[0]
+    outs = []
+    for b in range(B):
+        ob = chunked_attention(
+            q[b][None, None],                      # (1, 1, H, hd)
+            jnp.swapaxes(k[b], 0, 1)[None],        # (1, S, Kh, hd)
+            jnp.swapaxes(v[b], 0, 1)[None],
+            q_pos[b][None],
+            k_pos[b],
+            causal=True, window=window, softcap=softcap, chunk=32,
+        )[0, 0]
+        outs.append(ob)
+    return jnp.stack(outs)
+
+
+@pytest.mark.parametrize("Kh,window,softcap", [
+    (4, 0, 0.0),    # MHA
+    (2, 0, 0.0),    # GQA groups
+    (2, 24, 0.0),   # sliding window
+    (1, 0, 30.0),   # MQA + softcap
+    (2, 16, 25.0),  # everything at once
+])
+def test_flash_decode_ragged_parity_vs_chunked(Kh, window, softcap):
+    """Every slot at its own position (including one EMPTY slot with
+    q_pos = -1 and k_pos all -1): the batched kernel must equal the
+    single-stream chunked_attention oracle slot by slot — this is the
+    contract that makes slot-pool decode token-identical to the
+    lock-stepped path."""
+    B, H, hd, S = 4, 8, 32, 96
+    ks = jax.random.split(jax.random.PRNGKey(Kh * 100 + window), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, Kh, S, hd))
+    v = jax.random.normal(ks[2], (B, Kh, S, hd))
+    q_pos = jnp.array([95, 40, 7, -1], jnp.int32)  # ragged + one empty
+    base = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    k_pos = jnp.where(q_pos[:, None] >= 0, base, -1)
+
+    got = flash_decode(q, k, v, k_pos, q_pos, window=window,
+                       softcap=softcap, bs=32, interpret=True)
+    live = [b for b in range(B) if int(q_pos[b]) >= 0]
+    want_live = _chunked_oracle(
+        q[jnp.array(live)], k[jnp.array(live)], v[jnp.array(live)],
+        k_pos[jnp.array(live)], q_pos[jnp.array(live)],
+        window=window, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got)[live], np.asarray(want_live),
+                               rtol=2e-5, atol=2e-5)
+    # the empty slot's row must be finite garbage, never NaN/Inf
+    assert bool(jnp.all(jnp.isfinite(got[3])))
+    # and it must equal the jnp oracle exactly on the same inputs
+    orf = ref.flash_decode_ref(q, k, v, k_pos, q_pos, window=window,
+                               softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(orf),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_divisor_hostile_length_pads_tail():
+    """A prime cache length can't shrink the block to a useful divisor;
+    the wrapper must fall back to masked tail padding and stay exact."""
+    B, H, Kh, hd, S = 2, 4, 2, 32, 97  # prime S
+    ks = jax.random.split(jax.random.PRNGKey(23), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, Kh, S, hd))
+    v = jax.random.normal(ks[2], (B, Kh, S, hd))
+    q_pos = jnp.array([96, 40], jnp.int32)
+    k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    o = flash_decode(q, k, v, k_pos, q_pos, bs=32, interpret=True)
+    orf = ref.flash_decode_ref(q, k, v, k_pos, q_pos)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_all_slots_empty_is_finite():
+    """A fully idle pool (every k_pos = -1) still runs one launch and
+    produces finite output."""
+    B, H, Kh, hd, S = 3, 4, 2, 32, 64
+    ks = jax.random.split(jax.random.PRNGKey(13), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, Kh, S, hd))
+    v = jax.random.normal(ks[2], (B, Kh, S, hd))
+    k_pos = jnp.full((B, S), -1, jnp.int32)
+    q_pos = jnp.full((B,), -1, jnp.int32)
+    o = flash_decode(q, k, v, k_pos, q_pos, bs=32, interpret=True)
+    assert bool(jnp.all(jnp.isfinite(o)))
+    orf = ref.flash_decode_ref(q, k, v, k_pos, q_pos)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_dispatch_matches_kernel():
+    """ops.decode_attention (the model's entry point: oracle on CPU,
+    Pallas on TPU) agrees with the interpret-mode kernel on identical
+    ragged operands."""
+    from repro.kernels import ops
+
+    B, H, Kh, hd, S = 3, 8, 2, 32, 64
+    ks = jax.random.split(jax.random.PRNGKey(17), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k = jax.random.normal(ks[1], (B, Kh, S, hd))
+    v = jax.random.normal(ks[2], (B, Kh, S, hd))
+    q_pos = jnp.array([63, 20, 5], jnp.int32)
+    k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    got = ops.decode_attention(q, k, v, k_pos, q_pos)
+    want = flash_decode(q, k, v, k_pos, q_pos, bs=32, interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)

@@ -322,6 +322,115 @@ class MixedBitsPolicy(DivisionPolicy):
         return 8
 
 
+# ---------------------------------------------------------------------------
+# acceptance: flash crowd through the slot pool (ISSUE 4)
+# ---------------------------------------------------------------------------
+
+def test_flash_crowd_scenario_in_catalog():
+    names = list_scenarios()
+    assert "flash-crowd" in names
+    from repro.transmission import flash_crowd_arrivals
+    offs = flash_crowd_arrivals(5, 8, span_s=2.0)
+    assert len(offs) == 8 and offs == sorted(offs) and offs[0] == 0.0
+    assert all(0.0 <= o <= 2.0 for o in offs)
+    assert flash_crowd_arrivals(5, 8, 2.0) == offs          # deterministic
+    assert flash_crowd_arrivals(6, 8, 2.0) != offs          # seed family
+
+
+def test_session_pool_serving_staggered_admissions(served):
+    """N clients joining mid-download over one shared trace: the slot
+    pool admits each at its arrival offset, serves every request to its
+    full budget with ONE decode executable, and the run is
+    deterministic (events, tokens, upgrades, admissions)."""
+    cfg, model, params, prog, blob, batch = served
+    from repro.transmission import flash_crowd_arrivals
+
+    scenario = get_scenario("flash-crowd")
+    prompts = [jax.random.randint(jax.random.PRNGKey(10 + i), (6,), 0,
+                                  cfg.vocab).astype(jnp.int32)
+               for i in range(5)]
+    offs = flash_crowd_arrivals(1, 5, span_s=1.0)
+
+    def go():
+        session = Session.from_scenario(blob, scenario, seed=2)
+        return session.run_serving_pool(
+            model, prog, prompts=prompts, arrival_offsets_s=offs,
+            max_new_tokens=4, n_slots=3, dispatch_window=2)
+
+    a, b = go(), go()
+    assert a.events == b.events
+    assert a.tokens == b.tokens
+    assert a.upgrades == b.upgrades
+    assert a.admissions == b.admissions
+    # every client served to its budget
+    assert sorted(a.tokens) == list(range(5))
+    assert all(len(v) == 4 for v in a.tokens.values())
+    # admissions were genuinely staggered and respect arrival order
+    admit_times = [t for t, _ in a.admissions]
+    assert admit_times == sorted(admit_times)
+    assert len({round(t, 6) for t in admit_times}) > 1
+    # one executable across the crowd + upgrades; audit-complete log
+    assert a.server.decode_cache_size() == 1
+    kinds = {e.kind for e in a.events}
+    assert {"cold_start", "admit", "pool_window", "chunk",
+            "stage_complete"} <= kinds
+    ts = [e.t_s for e in a.events]
+    assert ts == sorted(ts)
+
+
+def test_session_pool_simultaneous_evictions_requeue(served):
+    """All slots budget-evict mid-window (budget not a multiple of the
+    dispatch window) with queued requests waiting and every arrival
+    already submitted — the session must flush, admit the queue into
+    the freed slots, and finish every request (regression: this used to
+    IndexError past the arrival list)."""
+    cfg, model, params, prog, blob, batch = served
+    prompts = [jax.random.randint(jax.random.PRNGKey(40 + i), (6,), 0,
+                                  cfg.vocab).astype(jnp.int32)
+               for i in range(5)]
+    session = Session(blob, BandwidthTrace.constant(100e3), chunk_bytes=4096)
+    res = session.run_serving_pool(
+        model, prog, prompts=prompts, max_new_tokens=6, n_slots=3,
+        dispatch_window=4)
+    assert sorted(res.tokens) == list(range(5))
+    assert all(len(v) == 6 for v in res.tokens.values())
+    assert sorted(e.data["rid"] for e in res.events_of("evict")) == \
+        list(range(5))
+    # 'admit' stamps the ACTUAL slot entry: the two queued requests
+    # are admitted strictly after the first wave, at eviction time
+    admit_t = {e.data["rid"]: e.t_s for e in res.events_of("admit")}
+    assert len(admit_t) == 5
+    assert max(admit_t[r] for r in (0, 1, 2)) < min(admit_t[3], admit_t[4])
+    assert len(res.events_of("submit")) == 5
+
+
+def test_session_pool_matches_single_stream_tokens(served):
+    """A one-slot pool fed one request through the session must emit
+    exactly the tokens of its single-stream replay at the same
+    per-token stages (the continuous-batching path degrades cleanly to
+    the PR-3 semantics)."""
+    cfg, model, params, prog, blob, batch = served
+    from repro.serving.engine import ProgressiveServer
+
+    prompt = batch["tokens"][0]
+    session = Session(blob, BandwidthTrace.constant(100e3), chunk_bytes=4096)
+    res = session.run_serving_pool(
+        model, prog, prompts=[prompt], max_new_tokens=8, n_slots=1,
+        dispatch_window=2)
+    stage_log = res.server.stage_log[0]
+    ref = ProgressiveServer(model, prog,
+                            max_len=prompt.shape[0] + 8)
+    for _ in range(res.server.admit_stage[0]):
+        ref.receive_stage()
+    ref.start({"tokens": prompt[None]})
+    want = []
+    for s in stage_log:
+        while ref.stage < s:
+            ref.receive_stage()
+        want.append(int(np.asarray(ref.decode(1).tokens)[0, 0]))
+    assert res.tokens[0] == want
+
+
 def test_stage_upgrade_in_session_is_one_launch_per_dtype(tiny):
     """Regression guard on PR 1's O(1)-launch invariant, now measured
     through the full co-simulation path: every full-model stage

@@ -1,0 +1,361 @@
+"""Continuous-batching slot pool: the ISSUE-4 acceptance surface.
+
+1. Token identity: batched ragged decode through the pool is
+   token-identical to the single-stream (PR-3) path for each slot at
+   every precision stage, including upgrades landing mid-flight — with
+   exactly ONE decode executable across all admissions, evictions and
+   N upgrades.
+2. Native layout: the per-token decode step never materializes a
+   transposed copy of a KV cache (jaxpr regression) and routes
+   attention through the ragged decode entry point once per attention
+   layer (trace-count regression).
+3. Timing semantics: async windows report honest wall-clock per flush
+   (+ derived TTFT/TPOT); ``sync=True`` restores per-token timing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.progressive import divide
+from repro.kernels import ops
+from repro.models.model import build_model
+from repro.serving.engine import PoolRequest, ProgressiveServer, SlotPoolEngine
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("olmo-1b").reduced(n_layers=2, d_model=64, d_ff=128,
+                                        vocab=128, n_heads=2, n_kv=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prog = divide(params)
+    return cfg, model, params, prog
+
+
+def _prompts(cfg, lengths, seed=1):
+    return [jax.random.randint(jax.random.PRNGKey(seed + i), (L,), 0,
+                               cfg.vocab).astype(jnp.int32)
+            for i, L in enumerate(lengths)]
+
+
+def _single_stream_replay(model, prog, prompt, stage_log, max_len,
+                          admit_stage=1):
+    """Decode len(stage_log) tokens through the lock-stepped PR-3
+    server, prefilled at the pool's admission stage and upgraded to
+    match the pool's per-token stage schedule."""
+    srv = ProgressiveServer(model, prog, max_len=max_len)
+    for _ in range(admit_stage):
+        srv.receive_stage()
+    srv.start({"tokens": prompt[None]})
+    toks = []
+    for want_stage in stage_log:
+        while srv.stage < want_stage:
+            srv.receive_stage()
+        toks.append(int(np.asarray(srv.decode(1).tokens)[0, 0]))
+    return toks
+
+
+# ---------------------------------------------------------------------------
+# acceptance: per-slot token identity at every stage, one executable
+# ---------------------------------------------------------------------------
+
+def test_pool_token_identity_with_midflight_upgrades(setup):
+    """Requests at different prompt lengths share the pool while every
+    precision stage lands mid-flight; each slot's tokens must equal the
+    single-stream server replayed at the same per-token stages, and the
+    pool compiles exactly one decode executable for the whole run."""
+    cfg, model, params, prog = setup
+    steps = 2 * prog.n_stages + 2
+    prompts = _prompts(cfg, [4, 8, 6, 8])
+    max_len = 8 + steps
+    pool = SlotPoolEngine(model, prog, n_slots=3, max_len=max_len,
+                          dispatch_window=2)
+    pool.receive_stage()
+    for i, p in enumerate(prompts):
+        pool.submit(PoolRequest(rid=i, prompt=p, max_new_tokens=steps))
+
+    def upgrade_every_window(step_count):
+        pool.upgrade_if_available()
+
+    out = pool.run(on_window=upgrade_every_window)
+    assert pool.stage == prog.n_stages
+    assert len(pool.upgrades) == prog.n_stages - 1
+    assert pool.decode_cache_size() == 1
+    for rid, prompt in enumerate(prompts):
+        assert len(out[rid]) == steps
+        want = _single_stream_replay(model, prog, prompt,
+                                     pool.stage_log[rid], max_len,
+                                     admit_stage=pool.admit_stage[rid])
+        assert out[rid] == want, f"rid {rid}"
+
+
+def test_pool_token_identity_sliding_window(setup):
+    """Ring caches: decode past the window with ragged per-slot
+    positions must match the single-stream path."""
+    cfg = get_config("mixtral-8x22b").reduced(
+        n_layers=2, d_model=32, d_ff=64, vocab=64, n_heads=2, n_kv=2,
+        n_experts=2, top_k=1, window=8)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    prog = divide(params)
+    steps = 12  # positions cross the window-8 boundary
+    prompts = _prompts(cfg, [5, 9], seed=7)
+    max_len = 9 + steps
+    pool = SlotPoolEngine(model, prog, n_slots=2, max_len=max_len,
+                          dispatch_window=4)
+    for _ in range(prog.n_stages):
+        pool.receive_stage()
+    for i, p in enumerate(prompts):
+        pool.submit(PoolRequest(rid=i, prompt=p, max_new_tokens=steps))
+    out = pool.run()
+    for rid, prompt in enumerate(prompts):
+        srv = ProgressiveServer(model, prog, max_len=max_len)
+        for _ in range(prog.n_stages):
+            srv.receive_stage()
+        srv.start({"tokens": prompt[None]})
+        want = np.asarray(srv.decode(steps).tokens)[0].tolist()
+        assert out[rid] == want, f"rid {rid}"
+
+
+def test_pool_admission_mid_flight_reuses_executable(setup):
+    """A request admitted while others are mid-generation (a true
+    continuous batch: ragged positions from step one) decodes
+    identically to its own single-stream run, with no recompile."""
+    cfg, model, params, prog = setup
+    steps = 6
+    prompts = _prompts(cfg, [8, 8, 8], seed=11)
+    max_len = 8 + 2 * steps
+    pool = SlotPoolEngine(model, prog, n_slots=3, max_len=max_len,
+                          dispatch_window=2)
+    for _ in range(prog.n_stages):
+        pool.receive_stage()
+    pool.submit(PoolRequest(rid=0, prompt=prompts[0], max_new_tokens=steps))
+    pool.step(); pool.step(); pool.flush()
+    execs_before = pool.decode_cache_size()
+    # admit two more while request 0 sits at position 10
+    pool.submit(PoolRequest(rid=1, prompt=prompts[1], max_new_tokens=steps))
+    pool.submit(PoolRequest(rid=2, prompt=prompts[2], max_new_tokens=steps))
+    out = pool.run()
+    assert pool.decode_cache_size() == execs_before == 1
+    for rid, prompt in enumerate(prompts):
+        srv = ProgressiveServer(model, prog, max_len=max_len)
+        for _ in range(prog.n_stages):
+            srv.receive_stage()
+        srv.start({"tokens": prompt[None]})
+        want = np.asarray(srv.decode(steps).tokens)[0].tolist()
+        assert out[rid] == want, f"rid {rid}"
+
+
+def test_pool_eos_early_eviction(setup):
+    """With eos_id set, a request stops at its first eos token (checked
+    at flush boundaries), its trailing window tokens are dropped, and
+    the slot frees for the queue."""
+    cfg, model, params, prog = setup
+    probe = SlotPoolEngine(model, prog, n_slots=1, max_len=32,
+                           dispatch_window=2)
+    for _ in range(prog.n_stages):
+        probe.receive_stage()
+    prompt = _prompts(cfg, [6], seed=21)[0]
+    probe.submit(PoolRequest(rid=0, prompt=prompt, max_new_tokens=10))
+    free_run = probe.run()[0]
+    eos = free_run[3]  # make the 4th emitted token the stop token
+    pool = SlotPoolEngine(model, prog, n_slots=1, max_len=32,
+                          dispatch_window=2, eos_id=eos)
+    for _ in range(prog.n_stages):
+        pool.receive_stage()
+    pool.submit(PoolRequest(rid=0, prompt=prompt, max_new_tokens=10))
+    pool.submit(PoolRequest(rid=1, prompt=prompt, max_new_tokens=2))
+    out = pool.run()
+    assert out[0] == free_run[:4]          # stops AT the eos token
+    assert len(out[1]) == 2                # freed slot served the queue
+    assert pool.completed == {0, 1}
+
+
+def test_pool_rejects_prompt_derived_encoder_archs():
+    """Audio enc-dec cross caches are prompt-length-derived and can't
+    tile into one fixed pool cache; the pool must refuse them loudly."""
+    cfg = get_config("seamless-m4t-medium").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prog = divide(params)
+    with pytest.raises(NotImplementedError, match="encoder-decoder"):
+        SlotPoolEngine(model, prog, n_slots=2, max_len=16)
+
+
+def test_pool_vlm_fixed_size_memory_admits():
+    """Vision cross memories are fixed-size (vision_tokens), so VLM
+    requests pool fine via PoolRequest.extras."""
+    cfg = get_config("llama32-vision-90b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prog = divide(params)
+    pool = SlotPoolEngine(model, prog, n_slots=2, max_len=16,
+                          dispatch_window=2)
+    for _ in range(prog.n_stages):
+        pool.receive_stage()
+    key = jax.random.PRNGKey(5)
+    for i in range(2):
+        pool.submit(PoolRequest(
+            rid=i, prompt=_prompts(cfg, [6], seed=30 + i)[0],
+            max_new_tokens=4,
+            extras={"vision_embeds": 0.1 * jax.random.normal(
+                jax.random.fold_in(key, i),
+                (cfg.vision_tokens, cfg.d_vision)).astype(cfg.dtype)}))
+    out = pool.run()
+    assert sorted(out) == [0, 1] and all(len(v) == 4 for v in out.values())
+    assert pool.decode_cache_size() == 1
+
+
+def test_pool_rejects_oversized_request(setup):
+    """prompt_len + max_new_tokens must fit max_len, else the cache
+    write positions would silently clamp onto the last slot."""
+    cfg, model, params, prog = setup
+    pool = SlotPoolEngine(model, prog, n_slots=1, max_len=16)
+    pool.receive_stage()
+    with pytest.raises(ValueError, match="max_len"):
+        pool.submit(PoolRequest(rid=0, prompt=_prompts(cfg, [12])[0],
+                                max_new_tokens=8))
+
+
+def test_pool_eviction_frees_slots(setup):
+    cfg, model, params, prog = setup
+    pool = SlotPoolEngine(model, prog, n_slots=2, max_len=16,
+                          dispatch_window=2)
+    pool.receive_stage()
+    for i, p in enumerate(_prompts(cfg, [4, 4, 4, 4], seed=3)):
+        pool.submit(PoolRequest(rid=i, prompt=p, max_new_tokens=3))
+    assert len(pool.free_slots()) == 0 and len(pool.queue) == 2
+    out = pool.run()
+    assert sorted(out) == [0, 1, 2, 3]
+    assert all(len(v) == 3 for v in out.values())
+    assert len(pool.free_slots()) == 2
+    assert pool.completed == {0, 1, 2, 3}
+
+
+# ---------------------------------------------------------------------------
+# acceptance: no transposed KV copy in the per-token hot loop
+# ---------------------------------------------------------------------------
+
+def _collect_eqns(jaxpr):
+    """All eqns including nested (scan/cond/jit) bodies."""
+    out = []
+    stack = [jaxpr]
+    while stack:
+        j = stack.pop()
+        for eqn in j.eqns:
+            out.append(eqn)
+            for v in eqn.params.values():
+                vals = v if isinstance(v, (tuple, list)) else (v,)
+                for item in vals:
+                    if hasattr(item, "jaxpr"):
+                        stack.append(item.jaxpr)
+                    elif hasattr(item, "eqns"):
+                        stack.append(item)
+    return out
+
+
+def test_decode_step_jaxpr_never_transposes_a_cache(setup):
+    """The regression the native (B, Kh, S, hd) layout exists for:
+    tracing decode_step must show NO transpose whose operand is a
+    KV-cache-row-sized array — the old layout paid a full transposed
+    cache copy per token per layer."""
+    cfg, model, params, prog = setup
+    B, S, max_len = 3, 8, 24
+    tokens = jnp.zeros((B, S), jnp.int32)
+    _, caches = model.prefill(params, {"tokens": tokens})
+    caches = model.grow_caches(caches, max_len)
+    pos = jnp.full((B,), S, jnp.int32)
+    jaxpr = jax.make_jaxpr(model.decode_step)(
+        params, caches, jnp.zeros((B, 1), jnp.int32), pos)
+    # cache rows as the scan body sees them: strip stacked leading dims
+    cache_sizes = set()
+    for leaf in jax.tree.leaves(caches):
+        if leaf.ndim >= 4:
+            cache_sizes.add(int(np.prod(leaf.shape[-4:])))
+    assert cache_sizes
+    offenders = []
+    for eqn in _collect_eqns(jaxpr.jaxpr):
+        if eqn.primitive.name != "transpose":
+            continue
+        aval = eqn.invars[0].aval
+        if aval.ndim >= 4 and int(np.prod(aval.shape)) in cache_sizes:
+            offenders.append(aval.shape)
+    assert not offenders, f"cache-sized transposes in decode_step: {offenders}"
+
+
+def test_decode_step_routes_attention_through_decode_entry(setup):
+    """Trace-count regression: one ragged decode_attention call per
+    attention block per trace, zero chunked-path scans over the cache."""
+    cfg, model, params, prog = setup
+    B, S, max_len = 2, 8, 16
+    _, caches = model.prefill(params, {"tokens": jnp.zeros((B, S), jnp.int32)})
+    caches = model.grow_caches(caches, max_len)
+    ops.reset_launch_counts()
+    jax.make_jaxpr(model.decode_step)(
+        params, caches, jnp.zeros((B, 1), jnp.int32),
+        jnp.full((B,), S, jnp.int32))
+    # the cycle stack traces its body once regardless of n_cycles;
+    # selfcross blocks trace two calls (self + native cross)
+    n_attn_calls = sum(
+        2 if k == "selfcross" else 1
+        for k in cfg.cycle + cfg.tail
+        if k in ("attn", "swa", "global", "moe", "swa_moe",
+                 "shared_attn", "cross", "selfcross"))
+    assert ops.LAUNCH_COUNTS["decode_attention"] == n_attn_calls
+    ops.reset_launch_counts()
+
+
+# ---------------------------------------------------------------------------
+# timing semantics: honest async windows + sync fallback
+# ---------------------------------------------------------------------------
+
+def test_async_timing_fields(setup):
+    cfg, model, params, prog = setup
+    srv = ProgressiveServer(model, prog, max_len=24)
+    for _ in range(prog.n_stages):
+        srv.receive_stage()
+    srv.start({"tokens": jnp.zeros((1, 8), jnp.int32)})
+    res = srv.decode(10, dispatch_window=4)
+    assert res.mode == "async"
+    assert [w[0] for w in res.window_s] == [4, 4, 2]
+    assert len(res.per_step_s) == 10
+    # derived per-step values: each window's steps share its mean
+    for (n, dt), chunk in zip(res.window_s,
+                              [res.per_step_s[:4], res.per_step_s[4:8],
+                               res.per_step_s[8:]]):
+        assert all(abs(p - dt / n) < 1e-12 for p in chunk)
+    assert res.ttft_s > 0 and res.tpot_s > 0
+    assert abs(sum(dt for _, dt in res.window_s) -
+               res.tpot_s * 10) < 0.05 * max(res.tpot_s * 10, 1e-9) + 1e-4
+
+
+def test_sync_fallback_measures_per_token(setup):
+    cfg, model, params, prog = setup
+    srv = ProgressiveServer(model, prog, max_len=24)
+    for _ in range(prog.n_stages):
+        srv.receive_stage()
+    srv.start({"tokens": jnp.zeros((1, 8), jnp.int32)})
+    res = srv.decode(5, sync=True)
+    assert res.mode == "sync"
+    assert len(res.per_step_s) == 5
+    assert [w[0] for w in res.window_s] == [1] * 5
+    assert all(p > 0 for p in res.per_step_s)
+
+
+def test_async_tokens_equal_sync_tokens(setup):
+    """Dropping the per-token host sync must not change the token
+    stream (greedy chains device-side either way)."""
+    cfg, model, params, prog = setup
+    toks = {}
+    for mode in ("sync", "async"):
+        srv = ProgressiveServer(model, prog, max_len=32)
+        srv.receive_stage()
+        srv.start({"tokens": jnp.ones((2, 8), jnp.int32)})
+        res = srv.decode(12, stage_arrival=lambda i: i % 3 == 0,
+                         sync=(mode == "sync"), dispatch_window=4)
+        toks[mode] = (np.asarray(res.tokens), res.upgrades, res.stage_at_step)
+    np.testing.assert_array_equal(toks["sync"][0], toks["async"][0])
+    assert toks["sync"][1] == toks["async"][1]
+    assert toks["sync"][2] == toks["async"][2]
