@@ -16,12 +16,12 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table1,table2,table3,"
                          "roofline,upgrade_latency,resident_serving,"
-                         "serving_throughput")
+                         "serving_throughput,speculative_decode")
     args = ap.parse_args()
 
     from benchmarks import table1_execution_time, table2_accuracy, table3_ttfi
     from benchmarks import resident_serving, roofline, serving_throughput
-    from benchmarks import upgrade_latency
+    from benchmarks import speculative_decode, upgrade_latency
 
     benches = {
         "table1": table1_execution_time,
@@ -31,6 +31,7 @@ def main() -> None:
         "upgrade_latency": upgrade_latency,
         "resident_serving": resident_serving,
         "serving_throughput": serving_throughput,
+        "speculative_decode": speculative_decode,
     }
     selected = (args.only.split(",") if args.only else list(benches))
 

@@ -29,6 +29,12 @@ admitted into a free slot (its prompt prefilled straight into the
 slot's cache region), and every decode step is ONE batched ragged
 kernel launch — per-slot positions, per-slot windows, one compiled
 executable across all admissions, evictions and precision upgrades.
+
+``--speculative`` turns the precision ladder into a throughput
+multiplier: a truncated-bits view of the *same* accumulators (zero
+extra weight bytes) drafts k tokens, the full-received-bits view
+verifies the whole block in one pass, and the output stays
+token-identical to plain greedy at every stage.
 """
 import argparse
 
@@ -56,6 +62,14 @@ def main():
                     help="'quantized' serves from the uint plane "
                          "accumulators: no fp weight copy, zero-recompile "
                          "upgrades, identical tokens")
+    ap.add_argument("--speculative", action="store_true",
+                    help="self-speculative decoding: the low-bit view of "
+                         "the SAME accumulators drafts, the full view "
+                         "verifies whole blocks — token-identical to plain "
+                         "greedy, zero extra weight bytes")
+    ap.add_argument("--draft-bits", type=int, default=4)
+    ap.add_argument("--draft-k", type=int, default=None,
+                    help="fixed draft length (default: adaptive)")
     ap.add_argument("--flash-crowd", type=int, default=0, metavar="N",
                     help="> 0: serve N staggered clients through the "
                          "continuous-batching slot pool instead of one "
@@ -87,6 +101,12 @@ def main():
     if args.flash_crowd > 0:
         from repro.transmission import flash_crowd_arrivals
 
+        pool_spec = None
+        if args.speculative:
+            from repro.serving.speculative import SpecConfig
+
+            pool_spec = SpecConfig(draft_bits=args.draft_bits,
+                                   k=args.draft_k)
         n = args.flash_crowd
         prompts = [jax.random.randint(
             jax.random.PRNGKey(100 + i), (S,), 0, cfg.vocab
@@ -95,10 +115,17 @@ def main():
         res = session.run_serving_pool(
             model, prog, prompts=prompts, arrival_offsets_s=offs,
             max_new_tokens=args.decode_steps, n_slots=min(4, n),
-            resident=args.resident)
+            resident=args.resident, speculative=pool_spec)
         print(f"flash crowd: {n} clients admitted at "
               f"{[round(t, 2) for t, _ in res.admissions]}s "
-              f"into {min(4, n)} slots")
+              f"into {min(4, n)} slots"
+              + (" (self-speculative rounds)" if args.speculative else ""))
+        if args.speculative:
+            s = res.speculation_summary()
+            print(f"speculation: {s['rounds']} pool rounds, "
+                  f"{s['accepted']}/{s['drafted']} drafts accepted; extra "
+                  f"resident draft bytes: "
+                  f"{res.server.resident_report()['extra_draft_bytes']}")
         for rid in sorted(res.tokens):
             stages = res.server.stage_log[rid]
             print(f"client {rid}: bits "
@@ -111,18 +138,36 @@ def main():
         _write_event_log(res, args.event_log)
         return
 
+    speculative = None
+    max_len = S + args.decode_steps
+    if args.speculative:
+        from repro.serving.speculative import SpecConfig
+
+        speculative = SpecConfig(draft_bits=args.draft_bits, k=args.draft_k)
+        max_len += speculative.k_max + 1
     print(f"cold start at t={arrivals[0]:.2f}s with 2-bit weights "
-          f"({args.resident}-resident); decoding...")
+          f"({'speculative' if args.speculative else args.resident}"
+          f"-resident); decoding...")
     res = session.run_serving(model, prog, decode_steps=args.decode_steps,
-                              batch=batch, max_len=S + args.decode_steps,
-                              resident=args.resident)
+                              batch=batch, max_len=max_len,
+                              resident=args.resident,
+                              speculative=speculative)
     print("decode-step : " + " ".join(f"{i:3d}" for i in range(args.decode_steps)))
     print("bits/weight : " + " ".join(f"{2 * s:3d}" for s in res.stage_at_step))
     print("tokens[0]   : " + " ".join(f"{int(t):3d}" for t in res.tokens[0]))
     print(f"\n{len(res.upgrades)} in-place upgrades during generation; "
           f"final precision {2 * res.server.stage} bits — no recompile, "
           f"no KV loss; {len(res.events)} audited events")
-    if args.resident == "quantized":
+    if args.speculative:
+        s = res.speculation_summary()
+        rep = res.server.resident_report()
+        print(f"speculation: {s['rounds']} rounds; "
+              f"{s['accepted']}/{s['drafted']} drafts accepted; draft view "
+              f"shares every buffer (extra resident draft bytes: "
+              f"{rep['extra_draft_bytes']}); "
+              f"{res.server.decode_cache_size()} decode executables "
+              f"(draft decode + target verify)")
+    if args.resident == "quantized" and not args.speculative:
         rep = res.server.resident_report()
         print(f"resident weights: {rep['quantized_leaves']} quantized leaves "
               f"({rep['quantized_bytes']} uint bytes), {rep['fp_leaves']} fp "

@@ -123,6 +123,7 @@ class PlaneStore:
         self._dirty: set[int] = set(range(len(slots)))
         self._leaf_cache: dict[Any, jax.Array] = {}
         self._qleaf_cache: dict[Any, QuantizedTensor] = {}
+        self._qtrunc_cache: dict[tuple, QuantizedTensor] = {}
         self._acc_cache: dict[int, jax.Array] = {}
 
     # -- construction ------------------------------------------------------
@@ -200,6 +201,7 @@ class PlaneStore:
         new._dirty = set(self._dirty)
         new._leaf_cache = dict(self._leaf_cache)
         new._qleaf_cache = dict(self._qleaf_cache)
+        new._qtrunc_cache = dict(self._qtrunc_cache)
         new._acc_cache = dict(self._acc_cache)
         return new
 
@@ -354,8 +356,11 @@ class PlaneStore:
             self.received[idx] += 1
             self._dirty.add(idx)
             self._acc_cache.pop(idx, None)
-            self._leaf_cache.pop(self.slots[idx].key, None)
-            self._qleaf_cache.pop(self.slots[idx].key, None)
+            key = self.slots[idx].key
+            self._leaf_cache.pop(key, None)
+            self._qleaf_cache.pop(key, None)
+            for tk in [t for t in self._qtrunc_cache if t[0] == key]:
+                self._qtrunc_cache.pop(tk)
 
     # -- eq. (5): incremental materialization ------------------------------
     def _by_key(self) -> dict[Any, list[int]]:
@@ -450,7 +455,8 @@ class PlaneStore:
             received_bits=place(ms, jnp.int32),
         )
 
-    def quantized_leaves(self, eligible=None) -> dict[Any, Any]:
+    def quantized_leaves(self, eligible=None, *, bits: int | None = None
+                         ) -> dict[Any, Any]:
         """The param pytree's leaves with weight tensors as *live*
         :class:`QuantizedTensor` views over the flat accumulators —
         the quantized-resident serving surface. ``eligible`` is an
@@ -458,6 +464,15 @@ class PlaneStore:
         quantized (e.g. matmul weights only); everything else — and any
         leaf a dequant matmul can't consume — falls back to the same
         incremental float materialization ``materialize_leaves`` uses.
+
+        ``bits=b`` hands out the *truncated-precision* view instead: the
+        same accumulators, behaving as if only ``min(b, received)`` bits
+        had arrived (:meth:`QuantizedTensor.truncate` — a deferred plane
+        mask plus a recomputed eq.-(5) affine; ``q`` is the *same*
+        array object as the full view's, so a draft model built from
+        this view adds zero resident weight bytes next to the target).
+        Ineligible leaves fall back to the *shared* full-precision float
+        leaf — tiny non-matmul remainders are not worth degrading.
 
         Like ``materialize_leaves`` this is incremental: clean keys come
         out of a cache as the *same* leaf objects, so a jitted consumer
@@ -473,6 +488,19 @@ class PlaneStore:
                     if got is not None:
                         self._qleaf_cache[key] = got
                 if got is not None:
+                    if bits is not None:
+                        # clamp per leaf: schedules may differ per
+                        # tensor, and bits >= the leaf's own width just
+                        # means "full precision, masked form" — the
+                        # no-op mask keeps the draft and target views
+                        # treedef-identical, so one decode executable
+                        # serves both
+                        b_eff = min(bits, got.bits)
+                        trunc = self._qtrunc_cache.get((key, b_eff))
+                        if trunc is None:
+                            trunc = got.truncate(b_eff)
+                            self._qtrunc_cache[(key, b_eff)] = trunc
+                        got = trunc
                     out[key] = got
                     continue
             out[key] = self._fp_leaf(key, idxs)

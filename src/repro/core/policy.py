@@ -140,6 +140,95 @@ class ExpertPopularityPolicy(DivisionPolicy):
         return self.schedule.n_planes
 
 
+# ---------------------------------------------------------------------------
+# Speculative-decoding control (beyond-paper): the precision ladder as a
+# draft-model knob
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SpeculationController:
+    """Tunes the self-speculative draft (length k, draft bits) from the
+    observed acceptance rate — which *changes as planes arrive*: early
+    in the download the truncated draft view equals the target
+    (received <= draft bits), so drafting buys nothing and the round
+    degenerates to plain decode (k = 0, verify-only); once the received
+    precision pulls ahead, the gap opens and long drafts pay off
+    whenever the coarse model keeps predicting the refined one.
+
+    k moves over a fixed ladder (powers of two up to ``k_max``) on an
+    EWMA of the per-round acceptance fraction: high acceptance climbs
+    the ladder, low acceptance steps down. Keeping k on a small ladder
+    bounds the set of compiled draft/verify executables (one pair per
+    distinct k); a *continuous* k would compile per value. Upgrades
+    never touch k directly — they reset the EWMA toward its prior,
+    since fresh planes change the draft/target gap.
+
+    Draft *bits* adapt too: when rejection persists even at the ladder
+    floor (k == 1), the coarse view simply isn't predictive, so the
+    draft climbs ``bits_step`` planes (up to ``max_draft_bits``) — a
+    finer prefix of the SAME accumulators. A draft-bits move is
+    recompile-free by construction (the deferred mask rides in traced
+    ``keep_bits``), so the controller can walk the precision ladder as
+    freely as the download does; the EWMA resets toward its prior
+    because acceptance evidence against the old draft is void.
+    """
+
+    draft_bits: int = 4
+    k_max: int = 8
+    k_init: int = 4
+    bits_step: int = 2         # draft-precision increment on rejection
+    max_draft_bits: int = 8    # never draft finer than this
+    ewma: float = 0.6          # weight of history in the acceptance EWMA
+    raise_at: float = 0.8      # climb the ladder above this rate
+    lower_at: float = 0.4      # step down below this rate
+    rate: float = 0.5          # EWMA state (prior: an even coin)
+    k: int = dataclasses.field(default=-1)
+
+    def __post_init__(self):
+        if self.k < 0:
+            self.k = min(self.k_init, self.k_max)
+        self._ladder = [0] + [2 ** i for i in range(0, 32)
+                              if 2 ** i <= self.k_max]
+        # snap k onto the ladder (a non-power-of-two k_max would
+        # otherwise strand k off-ladder and confuse the index walk)
+        self.k = max(v for v in self._ladder[1:] if v <= max(self.k, 1))
+
+    def choose_k(self, received_bits: int) -> int:
+        """Draft length for the next round. No precision gap -> no
+        cheaper draft exists -> plain decode (k = 0)."""
+        if received_bits <= self.draft_bits:
+            return 0
+        return self.k
+
+    def update(self, accepted: int, proposed: int) -> None:
+        """Fold one round's outcome (``accepted`` of ``proposed`` draft
+        tokens) into the EWMA and move k along the ladder — or, when
+        rejection persists at the ladder floor, move the draft itself
+        up the precision ladder instead."""
+        if proposed <= 0:
+            return
+        r = accepted / proposed
+        self.rate = self.ewma * self.rate + (1.0 - self.ewma) * r
+        i = self._ladder.index(self.k)  # always on-ladder (post_init)
+        if self.rate >= self.raise_at and self.k < self.k_max:
+            self.k = self._ladder[min(i + 1, len(self._ladder) - 1)]
+        elif self.rate <= self.lower_at:
+            if i > 1:
+                # never adapt down to 0: k = 0 is reserved for the
+                # no-gap regime (choose_k), not for unlucky streaks
+                self.k = self._ladder[i - 1]
+            elif self.draft_bits < self.max_draft_bits:
+                # shortest drafts still bounce: the view is too coarse
+                self.draft_bits = min(self.draft_bits + self.bits_step,
+                                      self.max_draft_bits)
+                self.rate = 0.5  # evidence against the old draft is void
+
+    def on_upgrade(self) -> None:
+        """A precision stage landed: the draft/target gap changed, so
+        past acceptance evidence is stale — relax toward the prior."""
+        self.rate = 0.5 * (self.rate + 0.5)
+
+
 def schedule_from_stages(bits: int, stage_bits: Sequence[int]) -> PlaneSchedule:
     """Convenience: the paper's '2 -> 4 -> 6 -> ... -> 16' notation gives
     cumulative bits; convert to widths."""

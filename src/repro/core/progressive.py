@@ -193,19 +193,23 @@ class ReceiverState:
         (stacking sliced tensors back along their slice axis)."""
         return rebuild_params(self.model_meta, self.store.materialize_leaves())
 
-    def materialize_resident(self, eligible=None):
+    def materialize_resident(self, eligible=None, *, bits=None):
         """The quantized-resident view of the same pytree: eligible
         weight leaves stay :class:`~repro.core.quantize.QuantizedTensor`
         views over the store's accumulators (no fp copy); the rest
         dequantize as in :meth:`materialize`. ``eligible`` defaults to
         the model dispatch's matmul-leaf predicate — a bare ``None``
         would quantize every >=2-D leaf, including ones (conv kernels,
-        recurrence matrices) the model consumes without dispatch."""
+        recurrence matrices) the model consumes without dispatch.
+        ``bits=b`` hands out the truncated-precision draft view instead
+        (same accumulators, deferred plane mask — zero extra weight
+        bytes; see ``PlaneStore.quantized_leaves``)."""
         if eligible is None:
             from repro.models.common import quantized_resident_eligible
             eligible = quantized_resident_eligible
-        return rebuild_params(self.model_meta,
-                              self.store.quantized_leaves(eligible=eligible))
+        return rebuild_params(
+            self.model_meta,
+            self.store.quantized_leaves(eligible=eligible, bits=bits))
 
 
 def rebuild_params(model: ProgressiveModel, tensor_leaves: Mapping,

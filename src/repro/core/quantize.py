@@ -54,6 +54,14 @@ class QuantizedTensor:
     (q values, scale, offset, received_bits) is a pytree *child*, and
     everything static (bits, orig_dtype) is aux data — so a jitted
     consumer keeps one cache entry across every upgrade.
+
+    ``keep_bits`` is the *deferred plane mask* of a truncated-precision
+    view (:meth:`truncate`): when set, consumers keep only the top
+    ``keep_bits`` bits of ``q`` — the mask is applied inside the
+    consuming op (models/common dispatch), so the masked uint never
+    exists as a second weight buffer; ``q`` stays the *same* array
+    object as the full-precision view's. None means no masking (and no
+    masking ops in the consumer's jaxpr).
     """
 
     q: jax.Array
@@ -64,19 +72,21 @@ class QuantizedTensor:
     scale: jax.Array | None = None      # traced eq.-(5) slope
     offset: jax.Array | None = None     # traced eq.-(5) intercept
     received_bits: jax.Array | None = None  # traced effective precision m
+    keep_bits: jax.Array | None = None  # traced deferred-mask width
 
     # -- pytree protocol ---------------------------------------------------
     def tree_flatten(self):
         return ((self.q, self.lo, self.hi, self.scale, self.offset,
-                 self.received_bits),
+                 self.received_bits, self.keep_bits),
                 (self.bits, self.orig_dtype))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        q, lo, hi, scale, offset, received_bits = children
+        q, lo, hi, scale, offset, received_bits, keep_bits = children
         bits, orig_dtype = aux
         return cls(q=q, lo=lo, hi=hi, bits=bits, orig_dtype=orig_dtype,
-                   scale=scale, offset=offset, received_bits=received_bits)
+                   scale=scale, offset=offset, received_bits=received_bits,
+                   keep_bits=keep_bits)
 
     @property
     def shape(self):
@@ -101,6 +111,49 @@ class QuantizedTensor:
         import math
 
         return math.ceil(self.q.size * self.bits / 8)
+
+    def truncate(self, b: int) -> "QuantizedTensor":
+        """Truncated-precision *view*: behave as if only the first planes
+        totalling ``b`` bits had been received, without copying ``q``.
+
+        The returned leaf shares this tensor's ``q`` buffer verbatim and
+        carries the truncation as a deferred mask (``keep_bits``) plus a
+        recomputed eq.-(5) affine for ``min(b, received)`` effective
+        bits. Consumers (the dequant dispatch in ``models/common``) mask
+        ``q`` on the fly, so no second weight buffer ever exists — this
+        is the self-speculative draft view. The floor-quantization prefix
+        property makes the masked value bit-identical to freshly
+        quantizing the source at ``b`` bits (pinned by tests).
+        """
+        if not (0 <= b <= self.bits):
+            raise ValueError(f"b={b} outside [0, {self.bits}]")
+        if self.received_bits is not None:
+            recv = jnp.minimum(self.received_bits, jnp.int32(b))
+        else:
+            recv = jnp.broadcast_to(
+                jnp.int32(b), self.q.shape[:-2] + (1, 1)
+                if self.q.ndim >= 2 else ())
+        span = self.hi.astype(jnp.float32) - self.lo.astype(jnp.float32)
+        span = span + _range_eps(self.lo, self.hi)
+        # eq. (5) at m = recv effective bits, with q left in the k-bit
+        # container: scale is unchanged (span * 2^-k); only the half-LSB
+        # revision in the offset moves to the truncated precision. recv
+        # is traced, so jnp.where keeps the m == 0 centre-of-range case
+        # recompile-free. ldexp builds the exact power of two, so the
+        # offset is bit-identical to dequant_affine's 0.5 ** (m + 1).
+        lo32 = jnp.asarray(self.lo, jnp.float32)
+        half_lsb = jnp.ldexp(jnp.float32(1.0), -(recv.astype(jnp.int32) + 1))
+        offset = jnp.where(recv > 0,
+                           lo32 + span * half_lsb,
+                           lo32 + span * 0.5)
+        shape = self.scale.shape if self.scale is not None else offset.shape
+        scale = (self.scale if self.scale is not None
+                 else jnp.broadcast_to(span * (0.5 ** self.bits), shape))
+        return dataclasses.replace(
+            self, scale=scale,
+            offset=jnp.broadcast_to(offset, shape),
+            received_bits=jnp.broadcast_to(recv, shape).astype(jnp.int32),
+            keep_bits=jnp.broadcast_to(recv, shape).astype(jnp.int32))
 
 
 # ε of eq. (2): keeps the scaled value strictly below 2^k so floor lands

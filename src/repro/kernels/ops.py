@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from repro.kernels import dequant_matmul as _dqm
 from repro.kernels import bitplane as _bp
 from repro.kernels import decode_attention as _da
+from repro.kernels import verify_attention as _va
 
 # Dispatch counts per public kernel entry point. Reset freely; purely
 # diagnostic (benchmarks, tests) — never read on a hot path.
@@ -92,6 +93,39 @@ def decode_attention(q, k, v, k_pos, q_pos, *, window=0, softcap=0.0):
     from repro.kernels import ref as _ref
 
     return _ref.flash_decode_ref(
+        q, k, v, k_pos, q_pos, window=window, softcap=softcap
+    ).astype(q.dtype)
+
+
+def flash_verify(q, k, v, k_pos, q_pos, *, window=0, softcap=0.0, **kw):
+    """Ragged draft-block verify attention: q (B, T, H, hd); k/v in the
+    native (B, Kh, S, hd) cache layout; k_pos (B, S); q_pos (B, T)
+    per-token positions (negative = masked row)."""
+    LAUNCH_COUNTS["flash_verify"] += 1
+    kw.setdefault("interpret", _interpret_default())
+    return _va.flash_verify(
+        q, k, v, k_pos, q_pos, window=window, softcap=softcap, **kw
+    )
+
+
+def verify_attention(q, k, v, k_pos, q_pos, *, window=0, softcap=0.0):
+    """The model's verify-step attention entry point: T = k+1 draft
+    queries per slot against the same native cache, one pass. On TPU
+    this is the Pallas flash_verify kernel; elsewhere it is the jnp
+    oracle, whose per-row computation is *exactly* a decode step's (see
+    ``kernels/ref.flash_verify_ref``) — the bit-identity that makes
+    lossless speculative decoding token-identical to plain greedy on
+    this backend. Same no-pass-through-kwargs rule as
+    :func:`decode_attention`."""
+    LAUNCH_COUNTS["verify_attention"] += 1
+    if jax.default_backend() == "tpu":
+        return _va.flash_verify(
+            q, k, v, k_pos, q_pos, window=window, softcap=softcap,
+            interpret=False
+        )
+    from repro.kernels import ref as _ref
+
+    return _ref.flash_verify_ref(
         q, k, v, k_pos, q_pos, window=window, softcap=softcap
     ).astype(q.dtype)
 

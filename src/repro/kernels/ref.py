@@ -64,3 +64,34 @@ def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
     return o.reshape(B, H, hd)
+
+
+def flash_verify_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     k_pos: jax.Array, q_pos: jax.Array,
+                     *, window: int = 0, softcap: float = 0.0) -> jax.Array:
+    """Ragged batched draft-block verify attention (T = k+1 queries per
+    slot against one native-layout cache).
+
+    q: (B, T, H, hd); k/v: (B, Kh, S, hd); k_pos: (B, S) per-slot cache
+    positions; q_pos: (B, T) int32 *per-token* query positions (negative
+    = masked row — draft padding or a free pool slot). Returns
+    (B, T, H, hd).
+
+    Implemented as a sequential ``lax.map`` of :func:`flash_decode_ref`
+    over the T draft rows ON PURPOSE: each row then runs the *exact*
+    computation a plain decode step would, so the verify pass is
+    bit-identical to sequential decode on this backend — which is what
+    makes lossless speculative token-identity testable at equality
+    rather than tolerance. T is small (k+1), so the sequential map costs
+    nothing here; the TPU kernel amortizes the cache pass instead.
+    """
+    qt = jnp.swapaxes(q, 0, 1)        # (T, B, H, hd)
+    qpt = jnp.swapaxes(q_pos, 0, 1)   # (T, B)
+
+    def row(args):
+        qr, qp = args
+        return flash_decode_ref(qr, k, v, k_pos, qp,
+                                window=window, softcap=softcap)
+
+    out = jax.lax.map(row, (qt, qpt))  # (T, B, H, hd)
+    return jnp.swapaxes(out, 0, 1)

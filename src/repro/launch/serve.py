@@ -70,6 +70,17 @@ def main() -> None:
                          "weights per upgrade; 'quantized' decodes straight "
                          "from the uint plane accumulators (no fp weight "
                          "copy in HBM, recompile-free upgrades)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="self-speculative decoding: a truncated-bits view "
+                         "of the same accumulators drafts, the full view "
+                         "verifies whole draft blocks in one pass — token-"
+                         "identical to plain greedy, zero extra weight "
+                         "bytes (implies quantized residency)")
+    ap.add_argument("--draft-bits", type=int, default=4,
+                    help="draft view precision for --speculative")
+    ap.add_argument("--draft-k", type=int, default=None,
+                    help="fixed draft length for --speculative "
+                         "(default: adaptive from the acceptance rate)")
     ap.add_argument("--pool-clients", type=int, default=0,
                     help="> 0: continuous-batching mode — this many "
                          "clients join mid-download (flash crowd) and are "
@@ -110,6 +121,12 @@ def main() -> None:
     if args.pool_clients > 0:
         from repro.transmission import flash_crowd_arrivals
 
+        pool_spec = None
+        if args.speculative:
+            from repro.serving.speculative import SpecConfig
+
+            pool_spec = SpecConfig(draft_bits=args.draft_bits,
+                                   k=args.draft_k)
         prompts = [jax.random.randint(
             jax.random.PRNGKey(1000 + i), (args.prompt_len,), 0, cfg.vocab
         ).astype(jnp.int32) for i in range(args.pool_clients)]
@@ -118,12 +135,18 @@ def main() -> None:
         result = session.run_serving_pool(
             model, prog, prompts=prompts, arrival_offsets_s=offs,
             max_new_tokens=args.decode_steps, n_slots=args.pool_slots,
-            resident=args.resident)
+            resident=args.resident, speculative=pool_spec)
         pool = result.server
         print(f"flash crowd: {args.pool_clients} clients over "
               f"{args.crowd_span_s}s into {args.pool_slots} slots; "
               f"admissions at "
               f"{[round(t, 2) for t, _ in result.admissions]}s")
+        if args.speculative:
+            s = result.speculation_summary()
+            print(f"speculative pool: {s['rounds']} rounds, "
+                  f"{s['accepted']}/{s['drafted']} drafts accepted; extra "
+                  f"resident draft bytes: "
+                  f"{pool.resident_report()['extra_draft_bytes']}")
         print(f"upgrades (batched step -> stage): {result.upgrades}")
         for rid in sorted(result.tokens):
             print(f"client {rid}: tokens {result.tokens[rid]}")
@@ -135,11 +158,30 @@ def main() -> None:
         return
 
     batch = build_batch(cfg, args.batch, args.prompt_len, seed=1)
+    speculative = None
+    max_len = args.prompt_len + args.decode_steps
+    if args.speculative:
+        from repro.serving.speculative import SpecConfig
+
+        speculative = SpecConfig(draft_bits=args.draft_bits, k=args.draft_k)
+        # headroom for the final verify block to write past the last
+        # emitted token
+        max_len += speculative.k_max + 1
     result = session.run_serving(
         model, prog, decode_steps=args.decode_steps, batch=batch,
-        max_len=args.prompt_len + args.decode_steps, resident=args.resident)
+        max_len=max_len, resident=args.resident, speculative=speculative)
     server = result.server
-    if args.resident == "quantized":
+    if args.speculative:
+        s = result.speculation_summary()
+        rep = server.resident_report()
+        print(f"speculative: {s['rounds']} rounds, draft {args.draft_bits} "
+              f"bits, acceptance {s['accepted']}/{s['drafted']} "
+              f"({s['rate']:.0%} of drafted)" if s["drafted"] else
+              f"speculative: {s['rounds']} rounds (no precision gap yet)")
+        print(f"zero-copy draft: extra resident draft bytes = "
+              f"{rep['extra_draft_bytes']} ({rep['aliased_leaves']} aliased "
+              f"leaves); decode executables: {server.decode_cache_size()}")
+    elif args.resident == "quantized":
         rep = server.resident_report()
         print(f"quantized-resident: {rep['quantized_leaves']} weight leaves "
               f"on {rep['quantized_bytes']} uint bytes, "

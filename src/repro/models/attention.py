@@ -132,7 +132,10 @@ def chunked_attention(
 def make_ring_cache(k: jax.Array, v: jax.Array, window: int):
     """Prefill -> ring cache holding the last `window` positions at slot
     p % window. k/v: (B, S, K, hd) in; caches come out in the native
-    (B, K, window, hd) layout."""
+    (B, K, window, hd) layout. Speculative decoding over-allocates the
+    ring AFTER prefill (see :func:`grow_ring_cache`) so speculative
+    writes past the head never clobber entries still inside a live
+    window."""
     B, S, K, hd = k.shape
     W = min(window, S)
     slots = jnp.arange(S - W, S) % window
@@ -141,6 +144,38 @@ def make_ring_cache(k: jax.Array, v: jax.Array, window: int):
     ring_k = jnp.zeros((B, K, window, hd), k.dtype).at[:, :, slots].set(kn[:, :, S - W :])
     ring_v = jnp.zeros((B, K, window, hd), v.dtype).at[:, :, slots].set(vn[:, :, S - W :])
     return ring_k, ring_v
+
+
+def grow_ring_cache(cache: dict, new_size: int, pos: int) -> dict:
+    """Repack a prefill-produced ring cache (ring size = its S axis)
+    into a larger ring, preserving every stored position. ``pos`` is the
+    next write position (= tokens consumed so far) — a concrete host
+    int, so this is plain indexing, done once per request at admission.
+
+    Why: a ring of size W is only safe when positions are written in
+    strict sequence (writing p clobbers p - W exactly when no future
+    query can attend p - W). A speculative round writes k + 1 positions
+    ahead and may then *rewind* to the first rejection, after which
+    still-live window entries would have been clobbered. Over-allocating
+    the ring to W + k + 1 restores the invariant: the attention window
+    mask is still ``window`` (positions), only the slot layout widens.
+    """
+    R = cache["k"].shape[-2]  # slot axis is -2 (stacked or not)
+    if new_size <= R:
+        return cache
+    import numpy as np
+
+    held = np.asarray(ring_positions(R, pos - 1)) if pos > 0 else \
+        np.full((R,), -1, np.int64)
+    src = np.nonzero(held >= 0)[0]
+    dst = held[src] % new_size
+
+    def regrow(a):
+        shp = a.shape[:-2] + (new_size,) + a.shape[-1:]
+        out = jnp.zeros(shp, a.dtype)
+        return out.at[..., dst, :].set(a[..., src, :])
+
+    return {"k": regrow(cache["k"]), "v": regrow(cache["v"])}
 
 
 def ring_positions(window: int, pos: jax.Array) -> jax.Array:
@@ -152,15 +187,26 @@ def ring_positions(window: int, pos: jax.Array) -> jax.Array:
     return p - ((p - i) % window)     # (window,) or (B, window)
 
 
-def write_kv_slot(cache: jax.Array, new: jax.Array, pos: jax.Array) -> jax.Array:
-    """Write one token's K or V into the native cache at each slot's own
-    position. cache: (B, K, S, hd); new: (B, K, 1, hd); pos: (B,) int32
-    (clamped into range, so a free slot's ``-1`` writes harmlessly at
-    0 — its row is fully masked anyway)."""
-    def upd(c, u, p):
-        return lax.dynamic_update_slice(c, u.astype(c.dtype), (0, p, 0))
+def write_kv_slot(cache: jax.Array, new: jax.Array, pos: jax.Array,
+                  active: jax.Array | None = None) -> jax.Array:
+    """Write a token block's K or V into the native cache at each slot's
+    own position. cache: (B, K, S, hd); new: (B, K, T, hd) — T = 1 for a
+    decode step, T = k+1 contiguous rows for a verify block; pos: (B,)
+    int32 (clamped into range, so a free slot's ``-1`` writes harmlessly
+    at 0 — its row is fully masked anyway). ``active`` (B,) bool makes
+    the write a per-slot no-op instead (the verify path uses it so a
+    masked slot's cache row stays byte-identical, which is what lets the
+    rollback invariant be tested at equality)."""
+    def upd(c, u, p, a=None):
+        u = u.astype(c.dtype)
+        if a is not None:
+            old = lax.dynamic_slice(c, (0, p, 0), u.shape)
+            u = jnp.where(a, u, old)
+        return lax.dynamic_update_slice(c, u, (0, p, 0))
 
-    return jax.vmap(upd)(cache, new, pos)
+    if active is None:
+        return jax.vmap(upd)(cache, new, pos)
+    return jax.vmap(upd)(cache, new, pos, active)
 
 
 # ---------------------------------------------------------------------------
@@ -256,6 +302,54 @@ def self_attention(
                 # one transpose at prefill; decode never transposes
                 new_cache = {"k": jnp.swapaxes(k, 1, 2),
                              "v": jnp.swapaxes(v, 1, 2)}
+    elif mode == "verify":  # T = k+1 draft tokens per slot, one pass
+        q, k_new, v_new = project_qkv(cfg, p, x, x)
+        pos_vec = decode_pos_vector(pos, B)                    # (B,) base
+        # per-token positions; a negative base (free pool slot) keeps
+        # every row masked instead of walking into valid range
+        tok_pos = jnp.where(pos_vec[:, None] >= 0,
+                            pos_vec[:, None]
+                            + jnp.arange(Tq, dtype=jnp.int32)[None, :],
+                            jnp.int32(-1))                     # (B, T)
+        q = rope(q, tok_pos, theta)
+        k_new = rope(k_new, tok_pos, theta)
+        kn = jnp.swapaxes(k_new, 1, 2)                         # (B, K, T, hd)
+        vn = jnp.swapaxes(v_new, 1, 2)
+        # write the whole draft block FIRST, then attend: rejected rows
+        # are never rolled back — the next round simply overwrites them,
+        # and the per-row causal mask (k_pos <= q_pos) keeps any not-yet
+        # -overwritten row invisible to every live query. Masked rows
+        # (free/finished slots, ragged draft padding) write NOTHING —
+        # their cache rows stay byte-identical.
+        if window:
+            ring = cache["k"].shape[2]
+            if ring < window + Tq:
+                raise ValueError(
+                    f"verify over a ring cache needs ring >= window + T "
+                    f"({window} + {Tq}), got {ring}: speculative writes "
+                    f"would clobber live window entries (grow the cache "
+                    f"with ring_margin >= the draft block length)")
+            k_cache, v_cache = cache["k"], cache["v"]
+            for t in range(Tq):
+                wp = jnp.maximum(tok_pos[:, t], 0) % ring
+                live = tok_pos[:, t] >= 0
+                k_cache = write_kv_slot(k_cache, kn[:, :, t:t + 1], wp, live)
+                v_cache = write_kv_slot(v_cache, vn[:, :, t:t + 1], wp, live)
+            head = jnp.where(pos_vec >= 0, pos_vec + Tq - 1, pos_vec)
+            k_pos = ring_positions(ring, head)                 # (B, ring)
+        else:
+            # contiguous block: one vmapped T-wide update per slot
+            base = jnp.maximum(pos_vec, 0)
+            live = pos_vec >= 0
+            k_cache = write_kv_slot(cache["k"], kn, base, live)
+            v_cache = write_kv_slot(cache["v"], vn, base, live)
+            S = k_cache.shape[2]
+            k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        out = ops.verify_attention(
+            q, k_cache, v_cache, k_pos.astype(jnp.int32), tok_pos,
+            window=window,
+        )                                                      # (B, T, H, hd)
+        new_cache = {"k": k_cache, "v": v_cache}
     else:  # decode: ragged, native-layout, one batched kernel call
         q, k_new, v_new = project_qkv(cfg, p, x, x)
         pos_vec = decode_pos_vector(pos, B)                    # (B,)
@@ -264,10 +358,14 @@ def self_attention(
         kn = jnp.swapaxes(k_new, 1, 2)                         # (B, K, 1, hd)
         vn = jnp.swapaxes(v_new, 1, 2)
         if window:
-            slot = pos_vec % window
+            # ring size comes from the cache (it may be over-allocated
+            # beyond the attention window for speculative rounds); the
+            # window mask itself is positional, never layout
+            ring = cache["k"].shape[2]
+            slot = pos_vec % ring
             k_cache = write_kv_slot(cache["k"], kn, slot)
             v_cache = write_kv_slot(cache["v"], vn, slot)
-            k_pos = ring_positions(window, pos_vec)            # (B, W)
+            k_pos = ring_positions(ring, pos_vec)              # (B, ring)
         else:
             k_cache = write_kv_slot(cache["k"], kn, pos_vec)
             v_cache = write_kv_slot(cache["v"], vn, pos_vec)
@@ -288,10 +386,11 @@ def cross_attention(cfg: ArchConfig, p, x: jax.Array, enc_kv, *,
     """enc_kv: precomputed {"k","v"} from the encoder or vision
     projector — computed once at prefill, static afterwards. With
     ``native=False`` (prefill/full) the memory is (B, Tv, K, hd) and
-    attention runs chunked; with ``native=True`` (decode, Tq == 1) the
-    memory is the cached native (B, K, Tv, hd) layout and attention
-    runs through the ragged decode kernel with every memory slot
-    valid — no per-step transpose of the cross cache."""
+    attention runs chunked; with ``native=True`` (decode Tq == 1, or a
+    verify block Tq == k+1) the memory is the cached native
+    (B, K, Tv, hd) layout and attention runs through the ragged
+    decode/verify kernel with every memory slot valid — no per-step
+    transpose of the cross cache."""
     dt = cfg.dtype
     B, Tq, _ = x.shape
     q = dense(x, p["wq"], dtype=dt).reshape(B, Tq, cfg.n_heads, cfg.hd)
@@ -301,10 +400,16 @@ def cross_attention(cfg: ArchConfig, p, x: jax.Array, enc_kv, *,
         Tv = enc_kv["k"].shape[2]
         k_pos = jnp.broadcast_to(jnp.arange(Tv, dtype=jnp.int32), (B, Tv))
         # non-causal: q_pos = Tv admits every memory slot for every slot
-        q_pos = jnp.full((B,), Tv, jnp.int32)
-        out = ops.decode_attention(
-            q[:, 0], enc_kv["k"], enc_kv["v"], k_pos, q_pos, window=0,
-        )[:, None]
+        if Tq == 1:
+            q_pos = jnp.full((B,), Tv, jnp.int32)
+            out = ops.decode_attention(
+                q[:, 0], enc_kv["k"], enc_kv["v"], k_pos, q_pos, window=0,
+            )[:, None]
+        else:
+            q_pos = jnp.full((B, Tq), Tv, jnp.int32)
+            out = ops.verify_attention(
+                q, enc_kv["k"], enc_kv["v"], k_pos, q_pos, window=0,
+            )
     else:
         Tv = enc_kv["k"].shape[1]
         k_pos = jnp.arange(Tv, dtype=jnp.int32)

@@ -238,13 +238,29 @@ def quantized_resident_eligible(key) -> bool:
     return leaf_basename(key) in QUANTIZED_RESIDENT_LEAVES
 
 
+def masked_q(w: QuantizedTensor, q: jax.Array | None = None,
+             keep: jax.Array | None = None) -> jax.Array:
+    """Apply a truncated view's deferred plane mask: keep only the top
+    ``keep_bits`` bits of the accumulator, on the fly. The full-view
+    ``keep_bits is None`` case is a structural no-op (no masking ops in
+    the jaxpr), so the plain quantized-resident path is untouched. The
+    mask runs inside the consuming jit — the masked uint is a transient
+    fusion input, never a resident buffer."""
+    q = w.q if q is None else q
+    keep = w.keep_bits if keep is None else keep
+    if keep is None:
+        return q
+    shift = (jnp.int32(w.bits) - keep.astype(jnp.int32)).astype(q.dtype)
+    return (q >> shift) << shift
+
+
 def dense(x: jax.Array, w, *, dtype) -> jax.Array:
     """``x @ w`` with ``w`` either a float array (cast to ``dtype``,
     plain matmul) or a QuantizedTensor (fused dequant-matmul; f32
     accumulation, output cast to ``dtype``). x: (..., K); w: (K, N)."""
     if isinstance(w, QuantizedTensor):
         lead = x.shape[:-1]
-        y = ops.dequant_matmul(x.reshape(-1, x.shape[-1]), w.q,
+        y = ops.dequant_matmul(x.reshape(-1, x.shape[-1]), masked_q(w),
                                w.scale, w.offset)
         return y.reshape(*lead, w.q.shape[-1]).astype(dtype)
     return x @ w.astype(dtype)
@@ -259,7 +275,9 @@ def expert_dense(x: jax.Array, w, *, dtype) -> jax.Array:
         B, E, C, d = x.shape
         outs = []
         for e in range(E):
-            ye = ops.dequant_matmul(x[:, e].reshape(B * C, d), w.q[e],
+            qe = masked_q(w, w.q[e],
+                          None if w.keep_bits is None else w.keep_bits[e])
+            ye = ops.dequant_matmul(x[:, e].reshape(B * C, d), qe,
                                     w.scale[e], w.offset[e])
             outs.append(ye.reshape(B, C, -1))
         return jnp.stack(outs, axis=1).astype(dtype)
@@ -271,7 +289,7 @@ def embed_lookup(w, tokens: jax.Array) -> jax.Array:
     applies the eq.-(5) affine to just those rows — the fp table never
     materializes. Returns float32 rows (callers cast)."""
     if isinstance(w, QuantizedTensor):
-        rows = w.q[tokens].astype(jnp.float32)
+        rows = masked_q(w, w.q[tokens]).astype(jnp.float32)
         return rows * w.scale.reshape(()) + w.offset.reshape(())
     return w[tokens].astype(jnp.float32)
 

@@ -174,11 +174,33 @@ class Model:
         x = apply_norm(cfg, params["final_norm"], x)
         return self._unembed(params, x)[:, 0, :], caches
 
+    def verify_step(self, params, caches, tokens, pos):
+        """Speculative verify: score a whole draft block in one pass.
+
+        tokens: (B, T) int32 — the last accepted token followed by the
+        k = T-1 drafted continuations, per slot; pos: (B,) int32 base
+        positions (token t of slot b sits at ``pos[b] + t``; negative
+        marks a free pool slot whose rows stay fully masked). Returns
+        ``(logits (B, T, V), caches)``: logits[:, t] is the target
+        model's next-token distribution after consuming tokens[:, :t+1],
+        exactly what t+1 sequential decode_step calls would produce —
+        K/V for all T positions are written into the caches (rejected
+        rows are *left in place* and simply overwritten by later
+        rounds; the per-row causal mask keeps them invisible)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        x, caches, _ = tfm.run_stack(
+            cfg, params["decoder"], x, mode="verify", caches=caches, pos=pos
+        )
+        x = apply_norm(cfg, params["final_norm"], x)
+        return self._unembed(params, x), caches
+
     # -- caches ----------------------------------------------------------------
-    def init_caches(self, batch: int, max_len: int):
+    def init_caches(self, batch: int, max_len: int, *, ring_margin: int = 0):
         cfg = self.cfg
         enc_len = self.enc_len(max_len)
-        return tfm.stack_init_caches(cfg, batch, max_len, enc_len)
+        return tfm.stack_init_caches(cfg, batch, max_len, enc_len,
+                                     ring_margin)
 
     def enc_len(self, seq_len: int) -> int:
         cfg = self.cfg
@@ -188,10 +210,17 @@ class Model:
             return cfg.vision_tokens
         return 0
 
-    def grow_caches(self, caches, max_len: int):
+    def grow_caches(self, caches, max_len: int, *, ring_margin: int = 0,
+                    pos: int = 0):
         """Pad prefill-produced full-attention caches along the sequence
-        axis so decode_step can write up to max_len."""
+        axis so decode_step can write up to max_len. With
+        ``ring_margin > 0`` sliding-window ring caches are additionally
+        repacked to ``window + ring_margin`` slots (``pos`` = tokens
+        consumed so far, i.e. the prompt length) so speculative verify
+        blocks up to ``ring_margin`` tokens long never clobber live
+        window entries."""
         cfg = self.cfg
+        from repro.models.attention import grow_ring_cache
 
         def grow_slot(kind: str, c, stacked: bool):
             if c is None:
@@ -200,6 +229,8 @@ class Model:
                 return {"self": _pad_kv(c["self"], max_len, stacked), "cross": c["cross"]}
             if kind in ("attn", "global", "moe", "shared_attn"):
                 return _pad_kv(c, max_len, stacked)
+            if kind in ("swa", "swa_moe") and ring_margin and cfg.window:
+                return grow_ring_cache(c, cfg.window + ring_margin, pos)
             return c  # swa ring / ssm states / cross are already final-size
 
         out = {"cycles": {}, "tail": {}}

@@ -144,7 +144,7 @@ def block_apply(cfg: ArchConfig, kind: str, p, x, *, mode: str, cache, pos, enc_
 
     if kind == "cross":
         h = apply_norm(cfg, p["norm1"], x)
-        if mode == "decode":
+        if mode in ("decode", "verify"):
             # cache holds the native (B, K, Tv, hd) layout, static
             a_out = attn.cross_attention(cfg, p["attn"], h, cache, native=True)
             new_cache = cache
@@ -165,7 +165,7 @@ def block_apply(cfg: ArchConfig, kind: str, p, x, *, mode: str, cache, pos, enc_
         )
         x = x + a_out
         hx = apply_norm(cfg, p["norm_x"], x)
-        if mode == "decode":
+        if mode in ("decode", "verify"):
             new_cross = cache["cross"]  # native layout, static
             x = x + attn.cross_attention(cfg, p["cross_attn"], hx,
                                          cache["cross"], native=True)
@@ -176,9 +176,18 @@ def block_apply(cfg: ArchConfig, kind: str, p, x, *, mode: str, cache, pos, enc_
         h2 = apply_norm(cfg, p["norm2"], x)
         x = x + attn.mlp_apply(cfg, p["mlp"], h2)
         new_cache = None
-        if mode in ("prefill", "decode"):
+        if mode in ("prefill", "decode", "verify"):
             new_cache = {"self": new_self, "cross": new_cross}
         return x, new_cache, aux
+
+    if kind in ("mamba2", "mlstm", "slstm"):
+        if mode == "verify":
+            # an SSM/recurrent state is cumulative: a rejected draft
+            # can't be "overwritten", it would need a state snapshot per
+            # draft token — the opposite of the zero-copy KV story
+            raise NotImplementedError(
+                f"speculative verify is not supported for {kind} blocks "
+                f"(recurrent state has no overwrite-only rollback)")
 
     if kind == "mamba2":
         h = apply_norm(cfg, p["norm1"], x)
@@ -211,9 +220,13 @@ def block_apply(cfg: ArchConfig, kind: str, p, x, *, mode: str, cache, pos, enc_
 # Cache construction (shape-only safe: works under jax.eval_shape)
 # ---------------------------------------------------------------------------
 
-def block_init_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int, enc_len: int):
+def block_init_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int,
+                     enc_len: int, ring_margin: int = 0):
     # KV caches use the decode kernel's native (B, K, S, hd) layout so
-    # the per-token hot loop never transposes or pads the cache
+    # the per-token hot loop never transposes or pads the cache.
+    # ring_margin over-allocates sliding-window rings beyond the
+    # attention window so speculative verify blocks can write k+1
+    # positions ahead without clobbering live window entries.
     dt = cfg.dtype
     if kind in ("attn", "global", "moe", "shared_attn"):
         return {
@@ -221,7 +234,8 @@ def block_init_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int, enc_l
             "v": jnp.zeros((batch, cfg.n_kv, max_len, cfg.hd), dt),
         }
     if kind in ("swa", "swa_moe"):
-        W = cfg.window if cfg.window else max_len  # ring buffer size
+        # ring buffer size; margin only matters for real windows
+        W = cfg.window + ring_margin if cfg.window else max_len
         return {
             "k": jnp.zeros((batch, cfg.n_kv, W, cfg.hd), dt),
             "v": jnp.zeros((batch, cfg.n_kv, W, cfg.hd), dt),
@@ -278,15 +292,17 @@ def stack_init(cfg: ArchConfig, key) -> dict:
     return out
 
 
-def stack_init_caches(cfg: ArchConfig, batch: int, max_len: int, enc_len: int = 0):
+def stack_init_caches(cfg: ArchConfig, batch: int, max_len: int,
+                      enc_len: int = 0, ring_margin: int = 0):
     caches: dict[str, Any] = {"cycles": {}, "tail": {}}
     for j, kind in enumerate(cfg.cycle):
-        one = block_init_cache(cfg, kind, batch, max_len, enc_len)
+        one = block_init_cache(cfg, kind, batch, max_len, enc_len, ring_margin)
         caches["cycles"][f"{j}_{kind}"] = jax.tree.map(
             lambda a: jnp.broadcast_to(a[None], (cfg.n_cycles,) + a.shape), one
         )
     for i, kind in enumerate(cfg.tail):
-        caches["tail"][f"{i}_{kind}"] = block_init_cache(cfg, kind, batch, max_len, enc_len)
+        caches["tail"][f"{i}_{kind}"] = block_init_cache(
+            cfg, kind, batch, max_len, enc_len, ring_margin)
     return caches
 
 
@@ -356,4 +372,5 @@ def run_stack(
         if nc is not None:
             new_caches["tail"][slot] = nc
         aux = {k: aux[k] + a[k] for k in aux}
-    return x, (new_caches if mode in ("prefill", "decode") else None), aux
+    return x, (new_caches if mode in ("prefill", "decode", "verify")
+               else None), aux

@@ -2,7 +2,11 @@ from repro.serving.engine import (GenerationResult, PoolRequest,
                                   PoolStepStats, ProgressiveServer,
                                   SlotPoolEngine, WireStoreReceiver,
                                   resident_report)
+from repro.serving.speculative import (SpecConfig, SpeculativeEngine,
+                                       SpeculativeResult,
+                                       SpeculativeSlotPool)
 
 __all__ = ["ProgressiveServer", "GenerationResult", "WireStoreReceiver",
            "SlotPoolEngine", "PoolRequest", "PoolStepStats",
-           "resident_report"]
+           "resident_report", "SpecConfig", "SpeculativeEngine",
+           "SpeculativeResult", "SpeculativeSlotPool"]

@@ -84,23 +84,51 @@ def resident_report(params) -> dict:
     ``fp_bytes`` counts float leaves — for ``resident='quantized'``
     that is only the small non-matmul remainder (norms, gates, conv
     kernels), and the audit is exactly the acceptance check that no fp
-    weight buffer exists."""
-    leaves = jax.tree.leaves(params, is_leaf=lambda x: isinstance(x, QuantizedTensor))
-    n_q = n_fp = q_bytes = fp_bytes = meta_bytes = 0
-    for leaf in leaves:
+    weight buffer exists.
+
+    Buffers are counted ONCE per distinct array object: a speculative
+    engine's draft view shares the target view's accumulators (and the
+    fp remainder) verbatim, so auditing ``(target, draft)`` together
+    shows zero extra resident weight bytes next to the target alone —
+    ``aliased_leaves`` counts the shared ones. ``effective_bits`` maps
+    each quantized leaf's path to its served precision
+    ``min(received_bits, keep_bits)``, which is what tells a draft view
+    apart from the full view (the buffers are identical)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=lambda x: isinstance(x, QuantizedTensor))
+    n_q = n_fp = q_bytes = fp_bytes = meta_bytes = aliased = 0
+    eff_bits: dict[str, int] = {}
+    seen: set[int] = set()
+    for path, leaf in flat:
+        pstr = jax.tree_util.keystr(path)
         if isinstance(leaf, QuantizedTensor):
             n_q += 1
-            q_bytes += leaf.q.size * leaf.q.dtype.itemsize
+            if id(leaf.q) in seen:
+                aliased += 1
+            else:
+                seen.add(id(leaf.q))
+                q_bytes += leaf.q.size * leaf.q.dtype.itemsize
             for m in (leaf.lo, leaf.hi, leaf.scale, leaf.offset,
-                      leaf.received_bits):
+                      leaf.received_bits, leaf.keep_bits):
                 if m is not None:
                     meta_bytes += np.size(m) * m.dtype.itemsize
+            eff = leaf.bits
+            if leaf.received_bits is not None:
+                eff = int(np.max(np.asarray(leaf.received_bits)))
+            if leaf.keep_bits is not None:
+                eff = min(eff, int(np.max(np.asarray(leaf.keep_bits))))
+            eff_bits[pstr] = eff
         else:
             n_fp += 1
-            fp_bytes += np.size(leaf) * jnp.asarray(leaf).dtype.itemsize
+            if id(leaf) in seen:
+                aliased += 1
+            else:
+                seen.add(id(leaf))
+                fp_bytes += np.size(leaf) * jnp.asarray(leaf).dtype.itemsize
     return {"quantized_leaves": n_q, "fp_leaves": n_fp,
             "quantized_bytes": q_bytes, "fp_bytes": fp_bytes,
-            "metadata_bytes": meta_bytes}
+            "metadata_bytes": meta_bytes, "aliased_leaves": aliased,
+            "effective_bits": eff_bits}
 
 
 class WireStoreReceiver:
@@ -134,14 +162,17 @@ class WireStoreReceiver:
         leaves = self.client.store.materialize_leaves()
         return rebuild_params(self.prog, leaves, key_fn=wire.path_str)
 
-    def materialize_resident(self, eligible=quantized_resident_eligible):
+    def materialize_resident(self, eligible=quantized_resident_eligible,
+                             *, bits=None):
         """Quantized-resident view over the client's store: weight
         leaves stay QuantizedTensor accumulator views; this is the
         'metadata refresh' of an upgrade — no ``materialize()`` at
-        all for the weights."""
+        all for the weights. ``bits=b`` yields the truncated-precision
+        draft view (same accumulators, zero extra weight bytes)."""
         if self.client.store is None:
             raise RuntimeError("wire header not received yet")
-        leaves = self.client.store.quantized_leaves(eligible=eligible)
+        leaves = self.client.store.quantized_leaves(eligible=eligible,
+                                                    bits=bits)
         return rebuild_params(self.prog, leaves, key_fn=wire.path_str)
 
 
@@ -410,7 +441,8 @@ class SlotPoolEngine(PrecisionManagedEngine):
                  receiver: WireStoreReceiver | None = None,
                  resident: str = "fp",
                  dispatch_window: int = 8,
-                 eos_id: int | None = None):
+                 eos_id: int | None = None,
+                 ring_margin: int = 0):
         super().__init__(model, prog, max_len, receiver=receiver,
                          resident=resident)
         if n_slots < 1:
@@ -426,7 +458,10 @@ class SlotPoolEngine(PrecisionManagedEngine):
                 "use ProgressiveServer")
         self.n_slots = n_slots
         self.dispatch_window = max(1, dispatch_window)
-        self.caches = model.init_caches(n_slots, max_len)
+        # ring_margin over-allocates sliding-window ring caches for
+        # speculative verify blocks (see serving/speculative.py)
+        self.caches = model.init_caches(n_slots, max_len,
+                                        ring_margin=ring_margin)
         self.pos = jnp.full((n_slots,), -1, jnp.int32)
         self.last_logits = jnp.full((n_slots, model.cfg.vocab), 0.0,
                                     jnp.float32)

@@ -77,6 +77,16 @@ class SessionResult:
     def events_of(self, kind: str) -> list[SessionEvent]:
         return [e for e in self.events if e.kind == kind]
 
+    def speculation_summary(self) -> dict:
+        """Aggregate the run's ``accept_round`` events (empty-safe):
+        rounds, drafts proposed/accepted, overall acceptance rate."""
+        rounds = self.events_of("accept_round")
+        drafted = sum(e.data["k"] * len(e.data["accepted"]) for e in rounds)
+        accepted = sum(sum(e.data["accepted"]) for e in rounds)
+        return {"rounds": len(rounds), "drafted": drafted,
+                "accepted": accepted,
+                "rate": accepted / drafted if drafted else 0.0}
+
 
 class Session:
     """Streams a serialized progressive model through a bandwidth trace
@@ -260,7 +270,8 @@ class Session:
     def run_serving(self, model, prog, *, decode_steps: int, batch: dict,
                     step_time_s: float | None = None,
                     max_len: int | None = None,
-                    resident: str = "fp") -> SessionResult:
+                    resident: str = "fp",
+                    speculative=None) -> SessionResult:
         """Drive a real ProgressiveServer from the byte stream: the
         server sits on the client's PlaneStore (one ingest per stage,
         one batched Pallas launch per container dtype) and decodes real
@@ -274,15 +285,36 @@ class Session:
         ``"quantized"`` decodes straight from the client's uint
         accumulators (no fp weight copy, upgrades are metadata-only —
         see :class:`~repro.serving.engine.ProgressiveServer`).
+
+        ``speculative`` (a :class:`~repro.serving.speculative.SpecConfig`
+        or truthy for defaults) swaps the server for the
+        self-speculative engine: a truncated-bits view of the same
+        store drafts, the full view verifies, and per-round accept-rate
+        events join the audit log on the byte clock. Speculation
+        implies quantized residency (the draft IS a second metadata
+        view over the resident accumulators), so ``resident`` is
+        ignored when set.
         """
         from repro.serving.engine import ProgressiveServer, WireStoreReceiver
+        from repro.serving.speculative import SpecConfig, SpeculativeEngine
 
         client = ProgressiveClient()
         receiver = WireStoreReceiver(client, prog)
-        if max_len is None:
-            max_len = batch["tokens"].shape[1] + decode_steps
-        server = ProgressiveServer(model, prog, max_len=max_len,
-                                   receiver=receiver, resident=resident)
+        if speculative:
+            spec = (speculative if isinstance(speculative, SpecConfig)
+                    else SpecConfig())
+            if max_len is None:
+                # headroom so end-of-generation verify blocks keep full
+                # k (a clamped k compiles an extra verify shape)
+                max_len = (batch["tokens"].shape[1] + decode_steps
+                           + spec.k_max + 1)
+            server = SpeculativeEngine(model, prog, max_len=max_len,
+                                       receiver=receiver, spec=spec)
+        else:
+            if max_len is None:
+                max_len = batch["tokens"].shape[1] + decode_steps
+            server = ProgressiveServer(model, prog, max_len=max_len,
+                                       receiver=receiver, resident=resident)
         events: list[SessionEvent] = []
         arrivals = self.stage_arrival_times()
         feed_until = self._make_feeder(client, events)
@@ -310,7 +342,24 @@ class Session:
             feed_until(step_wall(i))
             return receiver.stages_complete > server.stage
 
-        res = server.decode(decode_steps, stage_arrival=stage_arrival)
+        if speculative:
+            def on_round(rec: dict) -> None:
+                # stamp the round where its last emitted token lands on
+                # the byte clock; min() because slots emit raggedly
+                t = step_wall(max(min(rec["emitted"]) - 1, 0))
+                events.append(SessionEvent(t, "accept_round", {
+                    "round": rec["round"], "k": rec["k"],
+                    "accepted": rec["accepted"], "rate": rec["rate"],
+                    "stage": rec["stage"],
+                    "effective_bits": {
+                        "draft": min(server.current_draft_bits(),
+                                     server.received_bits_now()),
+                        "target": server.received_bits_now()}}))
+
+            res = server.decode(decode_steps, stage_arrival=stage_arrival,
+                                on_round=on_round)
+        else:
+            res = server.decode(decode_steps, stage_arrival=stage_arrival)
         for i, stage in enumerate(res.stage_at_step):
             events.append(SessionEvent(
                 step_wall(i), "decode_step", {"step": i, "stage": stage}))
@@ -331,7 +380,8 @@ class Session:
                          max_len: int | None = None,
                          resident: str = "fp",
                          step_time_s: float | None = None,
-                         dispatch_window: int = 4) -> SessionResult:
+                         dispatch_window: int = 4,
+                         speculative=None) -> SessionResult:
         """Flash-crowd serving: N requests join mid-download over ONE
         shared byte stream, and a :class:`~repro.serving.engine.
         SlotPoolEngine` serves them all from the client's PlaneStore —
@@ -346,6 +396,12 @@ class Session:
         clock without dispatching. Deterministic for a fixed
         (blob, trace, prompts, offsets).
 
+        ``speculative`` (a SpecConfig or truthy) swaps the engine for
+        :class:`~repro.serving.speculative.SpeculativeSlotPool`: every
+        pool 'step' becomes a draft+verify round, acceptance records
+        join the audit log at flush boundaries, and ``resident`` is
+        ignored (speculation implies quantized residency).
+
         Note: this drives the engine step/flush primitives directly
         rather than ``SlotPoolEngine.run`` because admissions and byte
         feeding are gated on the *simulated wall clock*, which only
@@ -359,15 +415,31 @@ class Session:
             arrival_offsets_s = [0.0] * n_req
         if len(arrival_offsets_s) != n_req:
             raise ValueError("one arrival offset per prompt")
-        if max_len is None:
-            max_len = max(len(p) for p in prompts) + max_new_tokens
 
         client = ProgressiveClient()
         receiver = WireStoreReceiver(client, prog)
-        engine = SlotPoolEngine(model, prog, n_slots=n_slots,
-                                max_len=max_len, receiver=receiver,
-                                resident=resident,
-                                dispatch_window=dispatch_window)
+        if speculative:
+            from repro.serving.speculative import (SpecConfig,
+                                                   SpeculativeSlotPool)
+
+            spec = (speculative if isinstance(speculative, SpecConfig)
+                    else SpecConfig())
+            if max_len is None:
+                # headroom so end-of-budget verify blocks keep full k
+                # (a clamped k compiles an extra verify shape)
+                max_len = (max(len(p) for p in prompts) + max_new_tokens
+                           + spec.k_max + 1)
+            engine = SpeculativeSlotPool(model, prog, n_slots=n_slots,
+                                         max_len=max_len, receiver=receiver,
+                                         spec=spec,
+                                         dispatch_window=dispatch_window)
+        else:
+            if max_len is None:
+                max_len = max(len(p) for p in prompts) + max_new_tokens
+            engine = SlotPoolEngine(model, prog, n_slots=n_slots,
+                                    max_len=max_len, receiver=receiver,
+                                    resident=resident,
+                                    dispatch_window=dispatch_window)
         events: list[SessionEvent] = []
         arrivals = self.stage_arrival_times()
         feed_until = self._make_feeder(client, events)
@@ -423,11 +495,22 @@ class Session:
         admit_due(t_cold)
         log_admissions(t_cold)
         evicted_logged: set[int] = set()
+        accepts_logged = 0
 
         def log_evictions(t: float) -> None:
             for rid in sorted(engine.completed - evicted_logged):
                 events.append(SessionEvent(t, "evict", {"rid": rid}))
                 evicted_logged.add(rid)
+
+        def log_accepts(t: float) -> None:
+            # speculative pool: per-round acceptance records become
+            # host-visible at flush; stamp them on the byte clock
+            nonlocal accepts_logged
+            if not speculative:
+                return
+            for rec in engine.accept_log[accepts_logged:]:
+                events.append(SessionEvent(t, "accept_round", dict(rec)))
+            accepts_logged = len(engine.accept_log)
 
         while (next_req < n_req or engine.queue or
                any(not s.free for s in engine.slots)):
@@ -451,6 +534,7 @@ class Session:
                          "tokens": stats.tokens_emitted,
                          "active": len(snapshot),
                          "stage": engine.stage}))
+                    log_accepts(t)
                     engine._admit_from_queue()
                     log_admissions(t)
                     log_evictions(t)
@@ -465,6 +549,7 @@ class Session:
                         {"steps": stats.steps,
                          "tokens": stats.tokens_emitted,
                          "active": 0, "stage": engine.stage}))
+                log_accepts(t)
                 engine._admit_from_queue()
                 log_admissions(t)
                 log_evictions(t)
@@ -485,6 +570,7 @@ class Session:
                 t_end, "pool_window",
                 {"steps": stats.steps, "tokens": stats.tokens_emitted,
                  "active": 0, "stage": engine.stage}))
+        log_accepts(t_end)
         log_evictions(t_end)
         events.sort(key=lambda e: e.t_s)
         return SessionResult(

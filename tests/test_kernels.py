@@ -295,3 +295,94 @@ def test_decode_attention_dispatch_matches_kernel():
     want = flash_decode(q, k, v, k_pos, q_pos, bs=32, interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash_verify — draft-block verify attention (T = k+1 ragged queries
+# per slot, one cache pass)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.verify_attention import flash_verify
+
+
+def _verify_inputs(key, B, T, H, Kh, hd, S, bases):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, Kh, S, hd))
+    v = jax.random.normal(ks[2], (B, Kh, S, hd))
+    base = jnp.asarray(bases, jnp.int32)
+    q_pos = jnp.where(base[:, None] >= 0,
+                      base[:, None] + jnp.arange(T, dtype=jnp.int32),
+                      -1)
+    k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    k_pos = jnp.where(base[:, None] >= 0, k_pos, -1)
+    return q, k, v, k_pos, q_pos
+
+
+@pytest.mark.parametrize("B,T,H,Kh,hd,S", [
+    (1, 5, 4, 4, 32, 64),     # MHA
+    (2, 3, 8, 2, 64, 300),    # GQA + divisor-shrunk block
+    (2, 9, 16, 1, 32, 128),   # MQA, long draft block
+    (3, 2, 4, 2, 32, 97),     # prime S: masked tail padding
+])
+def test_flash_verify_vs_ref(B, T, H, Kh, hd, S):
+    q, k, v, k_pos, q_pos = _verify_inputs(
+        jax.random.PRNGKey(B * 100 + T + S), B, T, H, Kh, hd, S,
+        [S - T - 1] + [max(0, S // (b + 2) - T) for b in range(1, B)])
+    o = flash_verify(q, k, v, k_pos, q_pos, bs=64, interpret=True)
+    orf = ref.flash_verify_ref(q, k, v, k_pos, q_pos)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [16, 48])
+def test_flash_verify_window_and_ragged_rows(window):
+    """Sliding-window verify with per-row positions AND ragged draft
+    lengths: slot 1's last two rows are padding (q_pos = -1), slot 2 is
+    a free pool slot (whole row masked). Padding/free rows must come
+    out finite and live rows must match the oracle."""
+    B, T, H, Kh, hd, S = 3, 4, 8, 2, 32, 96
+    ks = jax.random.split(jax.random.PRNGKey(window), 3)
+    q = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, Kh, S, hd))
+    v = jax.random.normal(ks[2], (B, Kh, S, hd))
+    q_pos = jnp.array([[60, 61, 62, 63],
+                       [30, 31, -1, -1],
+                       [-1, -1, -1, -1]], jnp.int32)
+    k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    o = flash_verify(q, k, v, k_pos, q_pos, window=window, bs=32,
+                     interpret=True)
+    orf = ref.flash_verify_ref(q, k, v, k_pos, q_pos, window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(orf),
+                               rtol=2e-5, atol=2e-5)
+    assert bool(jnp.all(jnp.isfinite(o)))
+
+
+def test_flash_verify_row_matches_flash_decode():
+    """Each live verify row must equal a single-token flash_decode call
+    at the same position against the same cache — the kernel-level face
+    of 'verify logits == sequential decode logits' that makes
+    speculative decoding lossless."""
+    B, T, H, Kh, hd, S = 2, 4, 8, 2, 32, 64
+    q, k, v, k_pos, q_pos = _verify_inputs(
+        jax.random.PRNGKey(3), B, T, H, Kh, hd, S, [40, 9])
+    o = flash_verify(q, k, v, k_pos, q_pos, bs=32, interpret=True)
+    for t in range(T):
+        ot = flash_decode(q[:, t], k, v, k_pos, q_pos[:, t], bs=32,
+                          interpret=True)
+        np.testing.assert_allclose(np.asarray(o[:, t]), np.asarray(ot),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_verify_attention_dispatch_matches_kernel():
+    """ops.verify_attention (oracle on CPU, Pallas on TPU) agrees with
+    the interpret-mode kernel on identical operands."""
+    from repro.kernels import ops
+
+    B, T, H, Kh, hd, S = 2, 3, 4, 2, 32, 64
+    q, k, v, k_pos, q_pos = _verify_inputs(
+        jax.random.PRNGKey(29), B, T, H, Kh, hd, S, [50, 12])
+    got = ops.verify_attention(q, k, v, k_pos, q_pos)
+    want = flash_verify(q, k, v, k_pos, q_pos, bs=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,46 @@
+"""Hypothesis sweep for the speculative KV-rollback invariant: RANDOM
+accept/reject patterns across rounds — ragged per slot, ring-cache
+wraparound included — leave the attended region of every cache
+byte-identical to a plain sequential decode of the accepted tokens.
+
+The deterministic driver (and fixed-pattern cases that run without
+hypothesis) lives in ``tests/test_speculative.py``; this module feeds
+it hypothesis-drawn round shapes."""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
+
+from test_speculative import (K_MAX, P_LEN, STREAM, rollback_setup,  # noqa: E402
+                              run_rollback_pattern)
+
+
+@pytest.fixture(scope="module")
+def setups():
+    return {kind: rollback_setup(kind) for kind in ("full", "ring")}
+
+
+@pytest.mark.parametrize("kind", ["full", "ring"])
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.function_scoped_fixture])
+@given(data=st.data())
+def test_kv_rollback_random_patterns(setups, kind, data):
+    setup = setups[kind]
+    rng = np.random.RandomState(data.draw(st.integers(0, 2**16)))
+    prompts = rng.randint(0, setup[0].vocab, (2, P_LEN)).astype(np.int32)
+    streams = rng.randint(0, setup[0].vocab, (2, STREAM)).astype(np.int32)
+
+    def draw_k():
+        return data.draw(st.integers(1, K_MAX), label="k")
+
+    current = {"k": K_MAX}
+
+    def draw_k_tracked():
+        current["k"] = draw_k()
+        return current["k"]
+
+    def draw_acc(k, room):
+        return data.draw(st.integers(0, min(k, room)), label="acc")
+
+    run_rollback_pattern(setup, prompts, streams, draw_k_tracked, draw_acc)
