@@ -1,12 +1,31 @@
 """Benchmark orchestrator: one module per paper table + the roofline
-report. ``python -m benchmarks.run [--quick]``."""
+report. ``python -m benchmarks.run [--quick]``.
+
+Every bench writes its ``BENCH_*.json`` under ``artifacts/bench/``;
+after the sweep each one is mirrored to the repo root so the latest
+numbers are diffable in review without digging into (gitignored or CI-
+uploaded) artifact trees."""
 from __future__ import annotations
 
 import argparse
+import glob
 import json
 import os
+import shutil
 import time
 import traceback
+
+
+def mirror_artifacts(src_dir: str = "artifacts/bench",
+                     dst_dir: str = ".") -> list[str]:
+    """Copy each ``BENCH_*.json`` in ``src_dir`` to ``dst_dir``
+    (repo root by default). Returns the mirrored paths."""
+    out = []
+    for path in sorted(glob.glob(os.path.join(src_dir, "BENCH_*.json"))):
+        dst = os.path.join(dst_dir, os.path.basename(path))
+        shutil.copyfile(path, dst)
+        out.append(dst)
+    return out
 
 
 def main() -> None:
@@ -47,6 +66,9 @@ def main() -> None:
             failures.append(name)
             traceback.print_exc()
         print(f"[{name}: {time.time() - t0:.1f}s]")
+    mirrored = mirror_artifacts()
+    if mirrored:
+        print(f"\nmirrored to repo root: {', '.join(mirrored)}")
     if failures:
         raise SystemExit(f"benchmarks failed: {failures}")
     print("\nall benchmarks complete")

@@ -11,17 +11,24 @@ ISSUE-4 continuous-batching refactor is about:
 * **per-token latency p50/p99** — derived from each flushed window's
   wall time / steps (the honest async-dispatch semantics; pass
   ``--sync`` for the old block-per-token measurement).
-* **upgrade-stall ms** — wall time the serving loop spends applying
-  precision upgrades between batched steps (one PlaneStore ingest +
-  param refresh per stage), measured in a separate cold-start phase
-  that upgrades mid-generation.
+* **upgrade-stall ms** — host wall time the serving loop spends on
+  precision upgrades between batched steps, with the default
+  double-buffered (enqueue-only, zero-stall) path and with the legacy
+  ``block_until_ready`` fence, side by side. Acceptance: mean
+  double-buffered stall < 5 ms at the largest pool (asserted).
+* **flash-crowd TTFT p50/p99** — staggered admissions with DISTINCT
+  prompt lengths under chunked admission vs the pre-ISSUE-6 batch-1
+  baseline (which pays one prefill compile per novel length).
+  Acceptance: chunked TTFT p99 >= 5x better (asserted).
+* **token identity per stage** — chunked and batch-1 admission emit
+  identical streams at every precision stage (asserted).
 * **decode-cache-size** — must be exactly 1 executable per pool across
   all admissions, evictions and N upgrades (asserted).
 
-Emits ``artifacts/bench/BENCH_serving_throughput.json`` — the first
-serving datapoint of the bench trajectory.
+Emits ``artifacts/bench/BENCH_serving_throughput.json``.
 
-    PYTHONPATH=src python -m benchmarks.serving_throughput [--quick] [--sync]
+    PYTHONPATH=src python -m benchmarks.serving_throughput \
+        [--quick | --reduced] [--sync]
 """
 from __future__ import annotations
 
@@ -42,6 +49,8 @@ from repro.serving.engine import PoolRequest, SlotPoolEngine
 OUT_PATH = "artifacts/bench/BENCH_serving_throughput.json"
 BATCH_SIZES = (1, 4, 16)
 THROUGHPUT_FLOOR_16_VS_1 = 4.0
+UPGRADE_STALL_CEIL_MS = 5.0
+TTFT_P99_FLOOR = 5.0
 
 
 def _prompt(cfg, i: int, prompt_len: int):
@@ -95,13 +104,17 @@ def bench_pool(model, prog, cfg, *, n_slots: int, decode_steps: int,
 
 
 def bench_upgrade_stall(model, prog, cfg, *, n_slots: int, prompt_len: int,
-                        dispatch_window: int) -> dict:
+                        dispatch_window: int,
+                        double_buffer: bool = True) -> dict:
     """Cold-start at stage 1, upgrade between windows while the pool is
-    saturated; report how long dispatch stalled on upgrades."""
+    saturated; report how long dispatch stalled on upgrades.
+    ``double_buffer=False`` restores the legacy ``block_until_ready``
+    fence after each upgrade, for the A/B stall column."""
     steps = 2 * prog.n_stages * dispatch_window
     pool = SlotPoolEngine(model, prog, n_slots=n_slots,
                           max_len=prompt_len + steps,
-                          dispatch_window=dispatch_window)
+                          dispatch_window=dispatch_window,
+                          double_buffer=double_buffer)
     pool.receive_stage()
     for i in range(n_slots):
         pool.submit(PoolRequest(rid=i, prompt=_prompt(cfg, i, prompt_len),
@@ -110,14 +123,95 @@ def bench_upgrade_stall(model, prog, cfg, *, n_slots: int, prompt_len: int,
     assert pool.stage == prog.n_stages
     assert pool.decode_cache_size() == 1, \
         "upgrades must not recompile the pool's decode executable"
+    n_up = max(len(pool.upgrades), 1)
     return {
         "n_slots": n_slots,
+        "double_buffer": double_buffer,
         "n_upgrades": len(pool.upgrades),
         "upgrade_stall_ms_total": pool.upgrade_stall_s * 1e3,
-        "upgrade_stall_ms_mean": (pool.upgrade_stall_s * 1e3
-                                  / max(len(pool.upgrades), 1)),
+        "upgrade_stall_ms_mean": pool.upgrade_stall_s * 1e3 / n_up,
+        "upgrade_enqueue_ms_mean": pool.upgrade_enqueue_s * 1e3 / n_up,
         "decode_cache_size": pool.decode_cache_size(),
     }
+
+
+def bench_flash_crowd(model, prog, cfg, *, n_clients: int, n_slots: int,
+                      decode_steps: int, dispatch_window: int,
+                      chunked: bool) -> dict:
+    """Staggered admissions with DISTINCT prompt lengths — the flash
+    crowd a deployed progressive server faces at a stage boundary.
+    TTFT is submit -> first flushed token per client. Both pools are
+    warmed with one request first (a deployed server has been serving
+    before the crowd hits), so the one-time chunk/decode compiles are
+    excluded — what remains is the steady-state admission cost: the
+    batch-1 baseline (``chunked=False``, no buckets) still pays one
+    prefill compile per NOVEL length at admission time, which is
+    exactly what its TTFT tail shows; chunked admission streams every
+    length through the same warm (B, chunk) executable."""
+    lengths = [5 + 2 * i for i in range(n_clients)]
+    pool = SlotPoolEngine(model, prog, n_slots=n_slots,
+                          max_len=max(lengths) + decode_steps,
+                          dispatch_window=dispatch_window,
+                          chunked_prefill=chunked, prefill_buckets=False)
+    for _ in range(prog.n_stages):
+        pool.receive_stage()
+    # warm at a length OUTSIDE the crowd's set: the baseline keeps its
+    # per-novel-length compile cost, the shared executables get built
+    warm_len = 4
+    assert warm_len not in lengths
+    pool.submit(PoolRequest(rid=10_000, prompt=_prompt(cfg, 999, warm_len),
+                            max_new_tokens=2))
+    pool.run()
+    backlog = [PoolRequest(rid=i, prompt=_prompt(cfg, 200 + i, lengths[i]),
+                           max_new_tokens=decode_steps)
+               for i in range(n_clients)]
+    t0 = time.time()
+    rounds = 0
+    while backlog or pool.queue or any(not s.free for s in pool.slots):
+        if backlog and rounds % 2 == 0:   # one arrival every other tick
+            pool.submit(backlog.pop(0))
+        pool.step()
+        if len(pool._pending) >= dispatch_window:
+            pool.flush()
+            pool._admit_from_queue()
+        rounds += 1
+    pool.flush()
+    assert pool.decode_cache_size() == 1
+    ttft_ms = np.array([pool.ttft_s[i] for i in range(n_clients)]) * 1e3
+    return {
+        "mode": "chunked" if chunked else "batch1_baseline",
+        "n_clients": n_clients,
+        "n_slots": n_slots,
+        "ttft_p50_ms": float(np.percentile(ttft_ms, 50)),
+        "ttft_p99_ms": float(np.percentile(ttft_ms, 99)),
+        "prefill_cache_size": pool.prefill_cache_size(),
+        "decode_cache_size": pool.decode_cache_size(),
+        "wall_s": time.time() - t0,
+    }
+
+
+def check_stage_identity(model, prog, cfg) -> dict:
+    """Chunked admission must emit the batch-1 pool's exact stream at
+    EVERY precision stage (the per-stage parity half of the ISSUE-6
+    acceptance, asserted here against the bench config)."""
+    steps = 4
+    prompts = [_prompt(cfg, 300 + i, L) for i, L in enumerate((5, 9, 3))]
+    for stage in range(1, prog.n_stages + 1):
+        outs = {}
+        for chunked in (False, True):
+            pool = SlotPoolEngine(model, prog, n_slots=2,
+                                  max_len=9 + steps, dispatch_window=2,
+                                  chunked_prefill=chunked,
+                                  prefill_buckets=False)
+            for _ in range(stage):
+                pool.receive_stage()
+            for i, p in enumerate(prompts):
+                pool.submit(PoolRequest(rid=i, prompt=p,
+                                        max_new_tokens=steps))
+            outs[chunked] = pool.run()
+        assert outs[True] == outs[False], \
+            f"chunked admission diverged from batch-1 at stage {stage}"
+    return {"stages_checked": prog.n_stages, "token_identical": True}
 
 
 def bench(arch: str = "olmo-1b", *, decode_steps: int = 40,
@@ -134,7 +228,24 @@ def bench(arch: str = "olmo-1b", *, decode_steps: int = 40,
             for b in BATCH_SIZES]
     stall = bench_upgrade_stall(model, prog, cfg, n_slots=BATCH_SIZES[-1],
                                 prompt_len=prompt_len,
-                                dispatch_window=dispatch_window)
+                                dispatch_window=dispatch_window,
+                                double_buffer=True)
+    stall_fenced = bench_upgrade_stall(model, prog, cfg,
+                                       n_slots=BATCH_SIZES[-1],
+                                       prompt_len=prompt_len,
+                                       dispatch_window=dispatch_window,
+                                       double_buffer=False)
+    crowd = {}
+    for chunked in (True, False):
+        r = bench_flash_crowd(model, prog, cfg, n_clients=BATCH_SIZES[-1],
+                              n_slots=BATCH_SIZES[-1],
+                              decode_steps=decode_steps,
+                              dispatch_window=dispatch_window,
+                              chunked=chunked)
+        crowd[r["mode"]] = r
+    crowd["ttft_p99_speedup"] = (crowd["batch1_baseline"]["ttft_p99_ms"]
+                                 / max(crowd["chunked"]["ttft_p99_ms"], 1e-9))
+    identity = check_stage_identity(model, prog, cfg)
     return {
         "bench": "serving_throughput",
         "arch": arch,
@@ -144,6 +255,9 @@ def bench(arch: str = "olmo-1b", *, decode_steps: int = 40,
         "decode_steps": decode_steps,
         "batches": rows,
         "upgrade_stall": stall,
+        "upgrade_stall_fenced": stall_fenced,
+        "flash_crowd": crowd,
+        "stage_identity": identity,
         "total_bench_s": time.time() - t0,
     }
 
@@ -163,11 +277,20 @@ def main(quick: bool = False, out: str = OUT_PATH,
         print(f"{r['n_slots']:6d} {r['tokens_per_s']:10,.0f} "
               f"{r['per_token_p50_ms']:8.2f} {r['per_token_p99_ms']:8.2f} "
               f"{r['decode_cache_size']:6d}")
-    st = result["upgrade_stall"]
-    print(f"upgrade stall: {st['n_upgrades']} upgrades, "
-          f"{st['upgrade_stall_ms_mean']:.1f} ms mean "
-          f"({st['upgrade_stall_ms_total']:.1f} ms total) at "
-          f"{st['n_slots']} slots; executables: {st['decode_cache_size']}")
+    st, stf = result["upgrade_stall"], result["upgrade_stall_fenced"]
+    print(f"upgrade stall at {st['n_slots']} slots, {st['n_upgrades']} "
+          f"upgrades: double-buffered {st['upgrade_stall_ms_mean']:.2f} ms "
+          f"mean vs fenced {stf['upgrade_stall_ms_mean']:.2f} ms mean")
+    fc = result["flash_crowd"]
+    print(f"{'flash crowd':>12} {'TTFT p50':>10} {'TTFT p99':>10} "
+          f"{'prefill execs':>14}")
+    for key in ("chunked", "batch1_baseline"):
+        r = fc[key]
+        print(f"{key:>12.12} {r['ttft_p50_ms']:9.1f}ms "
+              f"{r['ttft_p99_ms']:9.1f}ms {r['prefill_cache_size']:14d}")
+    print(f"chunked TTFT p99 speedup: {fc['ttft_p99_speedup']:.1f}x "
+          f"(floor {TTFT_P99_FLOOR:.0f}x); token-identical across "
+          f"{result['stage_identity']['stages_checked']} stages")
     by_slots = {r["n_slots"]: r["tokens_per_s"] for r in result["batches"]}
     ratio = by_slots[16] / max(by_slots[1], 1e-9)
     print(f"batch-16 / batch-1 aggregate throughput: {ratio:.2f}x "
@@ -175,14 +298,23 @@ def main(quick: bool = False, out: str = OUT_PATH,
     assert ratio >= THROUGHPUT_FLOOR_16_VS_1, (
         f"continuous batching regressed: batch-16 is only {ratio:.2f}x "
         f"batch-1 aggregate tokens/s (floor {THROUGHPUT_FLOOR_16_VS_1}x)")
+    assert st["upgrade_stall_ms_mean"] < UPGRADE_STALL_CEIL_MS, (
+        f"double-buffered upgrades must not stall dispatch: mean "
+        f"{st['upgrade_stall_ms_mean']:.2f} ms >= {UPGRADE_STALL_CEIL_MS} ms")
+    assert fc["ttft_p99_speedup"] >= TTFT_P99_FLOOR, (
+        f"chunked admission TTFT p99 is only "
+        f"{fc['ttft_p99_speedup']:.2f}x the batch-1 baseline "
+        f"(floor {TTFT_P99_FLOOR}x)")
     print(f"-> {out}")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="alias for --quick (CI tier-2 naming)")
     ap.add_argument("--sync", action="store_true",
                     help="block per token (old timing semantics; "
                          "comparable to pre-ISSUE-4 numbers)")
     args = ap.parse_args()
-    main(quick=args.quick, sync=args.sync)
+    main(quick=args.quick or args.reduced, sync=args.sync)

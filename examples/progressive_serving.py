@@ -70,6 +70,11 @@ def main():
     ap.add_argument("--draft-bits", type=int, default=4)
     ap.add_argument("--draft-k", type=int, default=None,
                     help="fixed draft length (default: adaptive)")
+    ap.add_argument("--chunked-prefill", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="force chunked admission on/off for the flash-crowd "
+                         "pool (default: auto — on for every arch without "
+                         "cross-attention)")
     ap.add_argument("--flash-crowd", type=int, default=0, metavar="N",
                     help="> 0: serve N staggered clients through the "
                          "continuous-batching slot pool instead of one "
@@ -115,7 +120,8 @@ def main():
         res = session.run_serving_pool(
             model, prog, prompts=prompts, arrival_offsets_s=offs,
             max_new_tokens=args.decode_steps, n_slots=min(4, n),
-            resident=args.resident, speculative=pool_spec)
+            resident=args.resident, speculative=pool_spec,
+            chunked_prefill=args.chunked_prefill)
         print(f"flash crowd: {n} clients admitted at "
               f"{[round(t, 2) for t, _ in res.admissions]}s "
               f"into {min(4, n)} slots"

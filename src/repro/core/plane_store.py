@@ -43,7 +43,8 @@ import numpy as np
 
 from repro.core.bitplanes import PlaneSchedule
 from repro.core.quantize import (QuantizedTensor, container_dtype,
-                                 dequant_affine, dequantize)
+                                 dequant_affine, dequant_constants,
+                                 dequantize_buffers)
 from repro.kernels import ops
 
 # One grid step of plane_or_segments: 8 sublanes x 128 lanes.
@@ -125,6 +126,9 @@ class PlaneStore:
         self._qleaf_cache: dict[Any, QuantizedTensor] = {}
         self._qtrunc_cache: dict[tuple, QuantizedTensor] = {}
         self._acc_cache: dict[int, jax.Array] = {}
+        # stacked eq.-(5) constants per batch of slot indices; lo/hi/
+        # bits never change after the header, so never invalidated
+        self._consts_cache: dict[tuple, tuple] = {}
 
     # -- construction ------------------------------------------------------
     @staticmethod
@@ -203,6 +207,7 @@ class PlaneStore:
         new._qleaf_cache = dict(self._qleaf_cache)
         new._qtrunc_cache = dict(self._qtrunc_cache)
         new._acc_cache = dict(self._acc_cache)
+        new._consts_cache = dict(self._consts_cache)
         return new
 
     # -- views -------------------------------------------------------------
@@ -369,6 +374,41 @@ class PlaneStore:
             by_key.setdefault(t.key, []).append(i)
         return by_key
 
+    def _refresh_fp_leaves(self, stale: list[tuple[Any, list[int]]]) -> None:
+        """Batch-dequantize every slot of the given keys and refill the
+        leaf cache. The whole set is one :func:`dequantize_batch` call —
+        O(1) host dispatches however many tensors an upgrade dirtied —
+        with the stacked eq.-(5) constants cached across upgrades (lo/
+        hi/bits are fixed at the header). This is what keeps an
+        ``resident='fp'`` upgrade's refresh an enqueue, not a stall."""
+        if not stale:
+            return
+        jobs = [i for _, idxs in stale for i in idxs]
+        consts = self._consts_cache.get(tuple(jobs))
+        if consts is None:
+            consts = dequant_constants([self.slots[i].lo for i in jobs],
+                                       [self.slots[i].hi for i in jobs],
+                                       [self.slots[i].bits for i in jobs])
+            self._consts_cache[tuple(jobs)] = consts
+        vals = iter(dequantize_buffers(
+            self.buffers,
+            [(np.dtype(self.slots[i].container).name, self.slots[i].offset,
+              self.slots[i].size, self.slots[i].shape) for i in jobs],
+            [self.slots[i].bits for i in jobs],
+            [self.effective_bits(i) for i in jobs],
+            [np.dtype(self.slots[i].orig_dtype).name for i in jobs],
+            constants=consts))
+        for key, idxs in stale:
+            parts = [(self.slots[i].slice_idx, self.slots[i].slice_axis,
+                      next(vals)) for i in idxs]
+            if len(parts) == 1 and parts[0][1] is None:
+                leaf = parts[0][2]
+            else:
+                axis = parts[0][1]
+                parts.sort(key=lambda x: x[0])
+                leaf = jnp.stack([v for _, _, v in parts], axis=axis)
+            self._leaf_cache[key] = leaf
+
     def _fp_leaf(self, key: Any, idxs: list[int]) -> jax.Array:
         """One dequantized float leaf (sliced tensors restacked), served
         from the leaf cache when untouched since the last rebuild —
@@ -376,27 +416,20 @@ class PlaneStore:
         cached = self._leaf_cache.get(key)
         if cached is not None and not any(i in self._dirty for i in idxs):
             return cached
-        parts = []
-        for i in idxs:
-            val = dequantize(self.quantized(i),
-                             received_bits=self.effective_bits(i))
-            parts.append((self.slots[i].slice_idx,
-                          self.slots[i].slice_axis, val))
-        if len(parts) == 1 and parts[0][1] is None:
-            leaf = parts[0][2]
-        else:
-            axis = parts[0][1]
-            parts.sort(key=lambda x: x[0])
-            leaf = jnp.stack([v for _, _, v in parts], axis=axis)
-        self._leaf_cache[key] = leaf
-        return leaf
+        self._refresh_fp_leaves([(key, idxs)])
+        return self._leaf_cache[key]
 
     def materialize_leaves(self) -> dict[Any, jax.Array]:
         """Dequantize into ``{key: array}``, restacking sliced tensors
         along their slice axis. Only keys touched since the last call
-        are recomputed; the rest are served from the leaf cache."""
-        out = {key: self._fp_leaf(key, idxs)
-               for key, idxs in self._by_key().items()}
+        are recomputed — batched into one :func:`dequantize_batch`
+        call — and the rest are served from the leaf cache."""
+        by_key = self._by_key()
+        self._refresh_fp_leaves(
+            [(key, idxs) for key, idxs in by_key.items()
+             if self._leaf_cache.get(key) is None
+             or any(i in self._dirty for i in idxs)])
+        out = {key: self._leaf_cache[key] for key in by_key}
         self._dirty.clear()
         return out
 

@@ -16,10 +16,12 @@ lives in :mod:`repro.core.progressive`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+import functools
+from typing import Any, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 # Container dtype for quantized values. k <= 16 everywhere in the paper;
 # we keep the container at uint16 for k <= 16 and uint32 above.
@@ -239,6 +241,134 @@ def dequantize(qt: QuantizedTensor, received_bits: int | None = None) -> jax.Arr
     scale, offset = dequant_affine(qt.lo, qt.hi, qt.bits, received_bits)
     val = qt.q.astype(jnp.float32) * scale + offset
     return val.astype(qt.orig_dtype)
+
+
+# -- batched eq. (5): the upgrade hot path -------------------------------
+#
+# A precision upgrade re-dequantizes every dirty tensor. Doing that with
+# per-tensor `dequantize` costs ~10 eager op dispatches per leaf — tens
+# of milliseconds of host time for a whole model, which is the entire
+# stall budget of a double-buffered upgrade. The batched path below does
+# the same eq. (5) for N tensors in O(1) dispatches.
+#
+# Bit-exactness constraint: the obvious fix — one jitted
+# `q * scale + offset` per leaf — is WRONG: XLA:CPU's LLVM backend
+# contracts a multiply feeding an add into an FMA (and strips
+# `optimization_barrier` before codegen), drifting the materialized
+# weights one ulp off the eagerly-evaluated oracle and the fused
+# dequant-matmul kernel. So the batch runs as:
+#
+#   * the affine constants, evaluated EAGERLY but vectorized over
+#     stacked (N,) lo/hi — elementwise ops are per-element identical to
+#     the scalar evaluation, and each eager op is its own executable so
+#     nothing can contract across them;
+#   * one jitted executable of multiplies only (`q.astype(f32) * scale`)
+#     and one of adds only (`prod + offset`, then the output cast) —
+#     neither jaxpr contains an add fed by a multiply, so there is
+#     nothing for LLVM to contract and the boundary between them forces
+#     the product to round to f32, exactly like the eager oracle.
+
+
+def dequant_constants(los: Sequence[jax.Array], his: Sequence[jax.Array],
+                      bits_seq: Sequence[int]
+                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Stacked per-tensor eq.-(5) constants ``(lo, span, scale)`` that do
+    not depend on received bits — computable once per store and reused
+    across every upgrade. Same expressions, same evaluation order as
+    :func:`dequant_affine`."""
+    lo = jnp.stack([jnp.asarray(l, jnp.float32) for l in los])
+    hi = jnp.stack([jnp.asarray(h, jnp.float32) for h in his])
+    span = hi - lo + _range_eps(lo, hi)
+    c = jnp.asarray(np.array([0.5 ** k for k in bits_seq], np.float32))
+    return lo, span, span * c
+
+
+def dequant_offsets(constants: tuple[jax.Array, jax.Array, jax.Array],
+                    bits_seq: Sequence[int],
+                    received_seq: Sequence[int | None]) -> jax.Array:
+    """Stacked per-tensor eq.-(5) offsets at the given received
+    precisions — the only affine term an upgrade actually changes.
+    Two eager dispatches regardless of N."""
+    lo, span, _ = constants
+    cs = []
+    for k, m in zip(bits_seq, received_seq):
+        m = k if m is None else m
+        if not (0 <= m <= k):
+            raise ValueError(f"received_bits={m} outside [0, {k}]")
+        cs.append(0.5 ** (m + 1) if m > 0 else 0.5)
+    return lo + span * jnp.asarray(np.array(cs, np.float32))
+
+
+@jax.jit
+def _dq_scale_jit(qs: list, scale_vec: jax.Array) -> list:
+    # multiplies only — no add in this jaxpr, so no FMA contraction
+    return [q.astype(jnp.float32) * scale_vec[i] for i, q in enumerate(qs)]
+
+
+@functools.partial(jax.jit, static_argnames="specs")
+def _dq_slice_scale_jit(buffers: dict, scale_vec: jax.Array,
+                        specs: tuple) -> list:
+    # slice + convert + multiply only — again no add in the jaxpr.
+    # Slicing the accumulators INSIDE the executable matters: an eager
+    # host-side slice of a freshly-ingested buffer blocks the host on
+    # the in-flight plane OR, which is precisely the stall the
+    # double-buffered upgrade path exists to avoid.
+    out = []
+    for i, (dt, off, size, shape) in enumerate(specs):
+        q = jax.lax.slice(buffers[dt], (off,), (off + size,))
+        out.append(q.reshape(shape).astype(jnp.float32) * scale_vec[i])
+    return out
+
+
+@functools.partial(jax.jit, static_argnames="dtypes")
+def _dq_shift_jit(prods: list, offset_vec: jax.Array, dtypes: tuple) -> list:
+    # adds + output casts only — no multiply in this jaxpr
+    return [(p + offset_vec[i]).astype(jnp.dtype(dt))
+            for i, (p, dt) in enumerate(zip(prods, dtypes))]
+
+
+def dequantize_batch(qts: Sequence[QuantizedTensor],
+                     received: Sequence[int | None] | None = None, *,
+                     constants: tuple[jax.Array, jax.Array, jax.Array] | None = None
+                     ) -> list[jax.Array]:
+    """Eq. (5) for many tensors at once, bit-identical per tensor to
+    :func:`dequantize` (tests assert byte equality) but O(1) host
+    dispatches for the whole batch. ``constants`` accepts a cached
+    :func:`dequant_constants` result (lo/hi/bits never change after
+    quantization, so stores cache it across upgrades)."""
+    if not qts:
+        return []
+    if received is None:
+        received = [None] * len(qts)
+    bits_seq = [qt.bits for qt in qts]
+    if constants is None:
+        constants = dequant_constants([qt.lo for qt in qts],
+                                      [qt.hi for qt in qts], bits_seq)
+    offs = dequant_offsets(constants, bits_seq, received)
+    prods = _dq_scale_jit([qt.q for qt in qts], constants[2])
+    dtypes = tuple(np.dtype(qt.orig_dtype).name for qt in qts)
+    return _dq_shift_jit(prods, offs, dtypes)
+
+
+def dequantize_buffers(buffers: Mapping[str, jax.Array],
+                       specs: Sequence[tuple[str, int, int, tuple]],
+                       bits_seq: Sequence[int],
+                       received: Sequence[int | None],
+                       dtypes: Sequence[str], *,
+                       constants: tuple[jax.Array, jax.Array, jax.Array]
+                       ) -> list[jax.Array]:
+    """:func:`dequantize_batch` when the quantized values live as flat
+    spans of shared container buffers (the PlaneStore layout): each
+    ``specs`` entry is ``(container_dtype_name, offset, size, shape)``
+    and the slicing happens inside the jitted executable, so the host
+    never touches — and never blocks on — a buffer whose plane OR is
+    still in flight. Output values are byte-identical to slicing
+    eagerly and calling :func:`dequantize` per tensor."""
+    if not specs:
+        return []
+    offs = dequant_offsets(constants, bits_seq, received)
+    prods = _dq_slice_scale_jit(dict(buffers), constants[2], tuple(specs))
+    return _dq_shift_jit(prods, offs, tuple(dtypes))
 
 
 def quantization_error_bound(qt: QuantizedTensor, received_bits: int | None = None) -> jax.Array:

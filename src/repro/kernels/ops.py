@@ -130,6 +130,33 @@ def verify_attention(q, k, v, k_pos, q_pos, *, window=0, softcap=0.0):
     ).astype(q.dtype)
 
 
+def prefill_attention(q, k, v, k_pos, q_pos, *, window=0, softcap=0.0):
+    """The model's chunked-prefill attention entry point: a (B, chunk)
+    block of ragged prompt queries per slot against the same native
+    (B, Kh, S, hd) cache, one pass. Operand-wise this is
+    :func:`verify_attention` — q (B, T, H, hd), k_pos (B, S), q_pos
+    (B, T) per-token positions with negative = masked row — the
+    difference is what the rows MEAN: q_pos rows carry per-slot chunk
+    offsets (slot b's row t is prompt position off_b + t), so slots at
+    different prompt depths prefill in the same launch while free and
+    decoding slots ride fully masked. On TPU this is the Pallas
+    flash_verify kernel (multi-query-position causal attention is the
+    same program either way); elsewhere the jnp oracle
+    ``kernels/ref.flash_prefill_ref``. Same no-pass-through-kwargs rule
+    as :func:`decode_attention`."""
+    LAUNCH_COUNTS["prefill_attention"] += 1
+    if jax.default_backend() == "tpu":
+        return _va.flash_verify(
+            q, k, v, k_pos, q_pos, window=window, softcap=softcap,
+            interpret=False
+        )
+    from repro.kernels import ref as _ref
+
+    return _ref.flash_prefill_ref(
+        q, k, v, k_pos, q_pos, window=window, softcap=softcap
+    ).astype(q.dtype)
+
+
 # The old pytree-level ``receiver_or`` convenience (one plane_or per
 # leaf) is gone: shipments now flow through the PlaneStore
 # (``repro/core/plane_store.py``), which batches a whole shipment into

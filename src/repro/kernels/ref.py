@@ -95,3 +95,27 @@ def flash_verify_ref(q: jax.Array, k: jax.Array, v: jax.Array,
 
     out = jax.lax.map(row, (qt, qpt))  # (T, B, H, hd)
     return jnp.swapaxes(out, 0, 1)
+
+
+def flash_prefill_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                      k_pos: jax.Array, q_pos: jax.Array,
+                      *, window: int = 0, softcap: float = 0.0) -> jax.Array:
+    """Ragged chunked-prefill attention oracle: a (B, chunk) block of
+    prompt queries per slot against one native-layout cache.
+
+    Operand contract is :func:`flash_verify_ref`'s — q: (B, T, H, hd);
+    k/v: (B, Kh, S, hd); k_pos: (B, S); q_pos: (B, T) per-token
+    positions, negative = masked row — but the rows carry per-slot
+    CHUNK OFFSETS (slot b's row t is prompt position off_b + t, with -1
+    padding past a short final chunk and for slots that are free or
+    decoding). The computation is identical, and deliberately shared:
+    each chunk row runs the exact computation a decode step at that
+    position would, so chunked prefill is bit-identical per row to
+    sequential decode of the prompt — the property the parity suite
+    pins. Kept as a separate entry point so call sites (and
+    LAUNCH_COUNTS) distinguish prefill chunks from verify blocks, and
+    so a TPU prefill kernel can diverge from the verify kernel without
+    touching callers.
+    """
+    return flash_verify_ref(q, k, v, k_pos, q_pos,
+                            window=window, softcap=softcap)

@@ -86,6 +86,11 @@ def main() -> None:
                          "clients join mid-download (flash crowd) and are "
                          "served by one slot pool instead of a single "
                          "lock-stepped stream")
+    ap.add_argument("--chunked-prefill", default=None,
+                    action=argparse.BooleanOptionalAction,
+                    help="force chunked admission on/off for the pool "
+                         "(default: auto — on for every arch without "
+                         "cross-attention)")
     ap.add_argument("--pool-slots", type=int, default=4,
                     help="slot-pool size for --pool-clients")
     ap.add_argument("--crowd-span-s", type=float, default=1.0,
@@ -135,7 +140,8 @@ def main() -> None:
         result = session.run_serving_pool(
             model, prog, prompts=prompts, arrival_offsets_s=offs,
             max_new_tokens=args.decode_steps, n_slots=args.pool_slots,
-            resident=args.resident, speculative=pool_spec)
+            resident=args.resident, speculative=pool_spec,
+            chunked_prefill=args.chunked_prefill)
         pool = result.server
         print(f"flash crowd: {args.pool_clients} clients over "
               f"{args.crowd_span_s}s into {args.pool_slots} slots; "

@@ -275,10 +275,12 @@ def self_attention(
     p,
     x: jax.Array,
     *,
-    mode: str,  # full | prefill | decode
+    mode: str,  # full | prefill | prefill_chunk | verify | decode
     window: int,
     cache,  # {"k","v"} native (B, K, S|W, hd) or None
-    pos,  # decode: scalar or (B,) int32 per-slot positions; else None
+    pos,  # decode/verify: scalar or (B,) int32 per-slot positions;
+          # prefill_chunk: (B, T) per-token positions (negative = masked);
+          # prefill: optional (B,) valid lengths for bucket-padded prompts
     rope_theta: float | None = None,
 ):
     """Returns (attn_out, new_cache)."""
@@ -287,6 +289,19 @@ def self_attention(
     if mode in ("full", "prefill"):
         q, k, v = project_qkv(cfg, p, x, x)
         q_pos = jnp.arange(Tq, dtype=jnp.int32)
+        if pos is not None:
+            # bucket-padded prefill: positions at/after the valid length
+            # are masked out (-1). All batch rows share one valid length
+            # (the pool prefills at batch 1); keys at masked positions
+            # are invisible to every query, and their garbage cache rows
+            # sit beyond the prompt, overwritten by decode before any
+            # query can attend them.
+            if window:
+                raise NotImplementedError(
+                    "bucketed prefill is not supported for sliding-window "
+                    "attention (the ring layout has no masked slots)")
+            nv = jnp.asarray(pos, jnp.int32).reshape(-1)[0]
+            q_pos = jnp.where(q_pos < nv, q_pos, jnp.int32(-1))
         q = rope(q, q_pos, theta)
         k = rope(k, q_pos, theta)
         out = chunked_attention(
@@ -302,50 +317,86 @@ def self_attention(
                 # one transpose at prefill; decode never transposes
                 new_cache = {"k": jnp.swapaxes(k, 1, 2),
                              "v": jnp.swapaxes(v, 1, 2)}
-    elif mode == "verify":  # T = k+1 draft tokens per slot, one pass
+    elif mode in ("verify", "prefill_chunk"):
+        # One multi-row pass per slot: T = k+1 draft tokens (verify) or
+        # a (B, chunk) block of ragged prompt positions (chunked
+        # prefill, writing prompt KV straight into the pooled cache).
         q, k_new, v_new = project_qkv(cfg, p, x, x)
-        pos_vec = decode_pos_vector(pos, B)                    # (B,) base
-        # per-token positions; a negative base (free pool slot) keeps
-        # every row masked instead of walking into valid range
-        tok_pos = jnp.where(pos_vec[:, None] >= 0,
-                            pos_vec[:, None]
-                            + jnp.arange(Tq, dtype=jnp.int32)[None, :],
-                            jnp.int32(-1))                     # (B, T)
+        if mode == "prefill_chunk":
+            # per-token positions arrive precomputed: row t of slot b
+            # holds prompt position off_b + t, or -1 for masked rows
+            # (free/decoding slots riding the batched launch, ragged
+            # padding past a short final chunk)
+            tok_pos = jnp.asarray(pos, jnp.int32)              # (B, T)
+        else:
+            pos_vec = decode_pos_vector(pos, B)                # (B,) base
+            # per-token positions; a negative base (free pool slot)
+            # keeps every row masked instead of walking into valid range
+            tok_pos = jnp.where(pos_vec[:, None] >= 0,
+                                pos_vec[:, None]
+                                + jnp.arange(Tq, dtype=jnp.int32)[None, :],
+                                jnp.int32(-1))                 # (B, T)
         q = rope(q, tok_pos, theta)
         k_new = rope(k_new, tok_pos, theta)
         kn = jnp.swapaxes(k_new, 1, 2)                         # (B, K, T, hd)
         vn = jnp.swapaxes(v_new, 1, 2)
-        # write the whole draft block FIRST, then attend: rejected rows
+        # write the whole block FIRST, then attend: rejected verify rows
         # are never rolled back — the next round simply overwrites them,
         # and the per-row causal mask (k_pos <= q_pos) keeps any not-yet
         # -overwritten row invisible to every live query. Masked rows
-        # (free/finished slots, ragged draft padding) write NOTHING —
-        # their cache rows stay byte-identical.
+        # (free/finished slots, ragged padding) write NOTHING — their
+        # cache rows stay byte-identical.
         if window:
             ring = cache["k"].shape[2]
             if ring < window + Tq:
                 raise ValueError(
-                    f"verify over a ring cache needs ring >= window + T "
-                    f"({window} + {Tq}), got {ring}: speculative writes "
+                    f"multi-row writes over a ring cache need ring >= "
+                    f"window + T ({window} + {Tq}), got {ring}: the block "
                     f"would clobber live window entries (grow the cache "
-                    f"with ring_margin >= the draft block length)")
+                    f"with ring_margin >= the block length)")
             k_cache, v_cache = cache["k"], cache["v"]
             for t in range(Tq):
                 wp = jnp.maximum(tok_pos[:, t], 0) % ring
                 live = tok_pos[:, t] >= 0
                 k_cache = write_kv_slot(k_cache, kn[:, :, t:t + 1], wp, live)
                 v_cache = write_kv_slot(v_cache, vn[:, :, t:t + 1], wp, live)
-            head = jnp.where(pos_vec >= 0, pos_vec + Tq - 1, pos_vec)
+            # last written position per slot (-1 if fully masked): for a
+            # verify block this is pos + T - 1; for a chunk, off + n - 1
+            head = jnp.max(tok_pos, axis=1)
             k_pos = ring_positions(ring, head)                 # (B, ring)
-        else:
-            # contiguous block: one vmapped T-wide update per slot
-            base = jnp.maximum(pos_vec, 0)
-            live = pos_vec >= 0
-            k_cache = write_kv_slot(cache["k"], kn, base, live)
-            v_cache = write_kv_slot(cache["v"], vn, base, live)
+            # ring_positions(-1) is all-negative, so a masked slot's
+            # whole ring stays invisible
+        elif mode == "prefill_chunk":
+            # per-row masked writes: a short final chunk must NOT write
+            # its padded tail — a T-wide block write starting at the
+            # last prompt position would CLAMP near the cache end
+            # (dynamic_update_slice shifts the start to S - T) and drag
+            # garbage onto real prompt rows. T single-row writes never
+            # clamp (every live row < max_len) and leave masked rows
+            # byte-identical.
+            k_cache, v_cache = cache["k"], cache["v"]
+            for t in range(Tq):
+                wp = jnp.maximum(tok_pos[:, t], 0)
+                live = tok_pos[:, t] >= 0
+                k_cache = write_kv_slot(k_cache, kn[:, :, t:t + 1], wp, live)
+                v_cache = write_kv_slot(v_cache, vn[:, :, t:t + 1], wp, live)
             S = k_cache.shape[2]
             k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
-        out = ops.verify_attention(
+        else:
+            # contiguous verify block: one vmapped T-wide update per
+            # slot. The speculative pool's max_len headroom (budget
+            # ceiling + k_max + 1) guarantees the block never reaches
+            # the cache end, so the write cannot clamp.
+            row0 = tok_pos[:, 0]
+            k_cache = write_kv_slot(cache["k"], kn, jnp.maximum(row0, 0),
+                                    row0 >= 0)
+            v_cache = write_kv_slot(cache["v"], vn, jnp.maximum(row0, 0),
+                                    row0 >= 0)
+            S = k_cache.shape[2]
+            k_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        attend = (ops.prefill_attention if mode == "prefill_chunk"
+                  else ops.verify_attention)
+        out = attend(
             q, k_cache, v_cache, k_pos.astype(jnp.int32), tok_pos,
             window=window,
         )                                                      # (B, T, H, hd)
@@ -357,18 +408,24 @@ def self_attention(
         k_new = rope(k_new, pos_vec[:, None], theta)
         kn = jnp.swapaxes(k_new, 1, 2)                         # (B, K, 1, hd)
         vn = jnp.swapaxes(v_new, 1, 2)
+        # inactive slots (pos < 0) write NOTHING: a mid-prefill slot's
+        # freshly-written prompt KV at position 0 must survive decode
+        # steps dispatched while its remaining chunks are still queued
+        live = pos_vec >= 0
         if window:
             # ring size comes from the cache (it may be over-allocated
             # beyond the attention window for speculative rounds); the
             # window mask itself is positional, never layout
             ring = cache["k"].shape[2]
-            slot = pos_vec % ring
-            k_cache = write_kv_slot(cache["k"], kn, slot)
-            v_cache = write_kv_slot(cache["v"], vn, slot)
+            slot = jnp.maximum(pos_vec, 0) % ring
+            k_cache = write_kv_slot(cache["k"], kn, slot, live)
+            v_cache = write_kv_slot(cache["v"], vn, slot, live)
             k_pos = ring_positions(ring, pos_vec)              # (B, ring)
         else:
-            k_cache = write_kv_slot(cache["k"], kn, pos_vec)
-            v_cache = write_kv_slot(cache["v"], vn, pos_vec)
+            k_cache = write_kv_slot(cache["k"], kn, jnp.maximum(pos_vec, 0),
+                                    live)
+            v_cache = write_kv_slot(cache["v"], vn, jnp.maximum(pos_vec, 0),
+                                    live)
             S = k_cache.shape[2]
             # the kernel masks k_pos > q_pos per slot; stale entries
             # beyond each slot's position never contribute

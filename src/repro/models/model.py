@@ -6,6 +6,9 @@ Model exposes exactly the entry points the launcher/dry-run need:
     forward(params, batch)         -> full logits (small-scale debugging)
     loss(params, batch)            -> (scalar, metrics); chunked CE
     prefill(params, batch)         -> (last_logits, caches)
+    prefill_chunk(params, caches, tokens, tok_pos) -> (logits, caches)
+                                      (ragged chunked prefill into the
+                                       pooled caches, slot-pool path)
     decode_step(params, caches, tokens, pos) -> (logits, caches)
     init_caches(batch, max_len)    -> zeroed cache pytree (eval_shape-safe)
     grow_caches(caches, max_len)   -> pad prefill caches for decoding
@@ -151,15 +154,61 @@ class Model:
         metrics = {"ce": ce, **aux}
         return total, metrics
 
-    def prefill(self, params, batch):
+    def prefill(self, params, batch, n_valid=None):
+        """``n_valid=None``: every token is real, the returned logits
+        are the last row's. ``n_valid`` (B,) int32: the prompt is
+        bucket-padded to its static length and only the first
+        ``n_valid[b]`` positions are real — padded positions are masked
+        out of attention and the logits are gathered at row
+        ``n_valid - 1``. All batch rows must share one valid length
+        (the slot pool prefills at batch 1). Only plain-attention
+        stacks support masked padding: a sliding-window ring has no
+        masked slots and a recurrent state would consume the padding."""
         cfg = self.cfg
+        if n_valid is not None:
+            kinds = set(cfg.cycle) | set(cfg.tail)
+            if kinds & {"swa", "swa_moe", "mamba2", "mlstm", "slstm"}:
+                raise NotImplementedError(
+                    "bucket-padded prefill needs position masking, which "
+                    "sliding-window rings and recurrent states don't "
+                    "support — admit at the exact prompt length instead")
         enc_out = self._encode(params, batch)
         x = self._embed(params, batch["tokens"])
         x, caches, _ = tfm.run_stack(
-            cfg, params["decoder"], x, mode="prefill", enc_out=enc_out
+            cfg, params["decoder"], x, mode="prefill", enc_out=enc_out,
+            pos=None if n_valid is None else jnp.asarray(n_valid, jnp.int32),
         )
-        x = apply_norm(cfg, params["final_norm"], x[:, -1:, :])
-        return self._unembed(params, x)[:, 0, :], caches
+        if n_valid is None:
+            xl = x[:, -1:, :]
+        else:
+            idx = jnp.clip(jnp.asarray(n_valid, jnp.int32) - 1, 0,
+                           x.shape[1] - 1)
+            xl = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        xl = apply_norm(cfg, params["final_norm"], xl)
+        return self._unembed(params, xl)[:, 0, :], caches
+
+    def prefill_chunk(self, params, caches, tokens, tok_pos):
+        """Ragged chunked prefill: consume a (B, C) block of prompt
+        tokens straight into the POOLED caches, each slot at its own
+        depth. ``tok_pos`` (B, C) int32 gives token (b, t)'s prompt
+        position (slot b's chunk offset + t); negative marks a masked
+        row — free/decoding slots riding the batched launch, or ragged
+        padding past a short final chunk. Masked rows write nothing and
+        read nothing (their cache rows stay byte-identical). Returns
+        ``(logits (B, C, V), caches)``; logits[:, t] is the next-token
+        distribution after consuming prompt position tok_pos[:, t] —
+        the chunk holding a slot's LAST prompt token yields its first
+        generated token at that row. This replaces the batch-1 prefill
+        + grow_caches + per-leaf slot write of legacy admission: no
+        cache-sized copy ever happens on the admit path."""
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+        x, caches, _ = tfm.run_stack(
+            cfg, params["decoder"], x, mode="prefill_chunk", caches=caches,
+            pos=jnp.asarray(tok_pos, jnp.int32),
+        )
+        x = apply_norm(cfg, params["final_norm"], x)
+        return self._unembed(params, x), caches
 
     def decode_step(self, params, caches, tokens, pos):
         """tokens: (B, 1) int32; pos: scalar int32 (lock-stepped write

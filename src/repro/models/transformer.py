@@ -142,6 +142,13 @@ def block_apply(cfg: ArchConfig, kind: str, p, x, *, mode: str, cache, pos, enc_
         aux = {k: aux[k] + jnp.float32(moe_aux[k]) for k in aux}
         return x, new_cache, aux
 
+    if kind in ("cross", "selfcross") and mode == "prefill_chunk":
+        # the vision/enc cross memory is produced by the admission-time
+        # encoder pass, which a mid-stream chunk step doesn't have; the
+        # slot pool falls back to batch-1 admission for these archs
+        raise NotImplementedError(
+            f"chunked prefill is not supported for {kind} blocks")
+
     if kind == "cross":
         h = apply_norm(cfg, p["norm1"], x)
         if mode in ("decode", "verify"):
@@ -188,6 +195,24 @@ def block_apply(cfg: ArchConfig, kind: str, p, x, *, mode: str, cache, pos, enc_
             raise NotImplementedError(
                 f"speculative verify is not supported for {kind} blocks "
                 f"(recurrent state has no overwrite-only rollback)")
+        if mode == "prefill_chunk":
+            # Unlike KV caches there is no positional indexing to hide
+            # behind: the chunk is consumed token-by-token through the
+            # single-step recurrence, with a per-token live mask so
+            # masked rows (free/decoding slots, ragged padding) leave
+            # the slot's state byte-identical. The chunk length is
+            # small and static, so the unrolled loop stays cheap and
+            # the executable count stays one per chunk shape.
+            step = {"mamba2": ssm.mamba2_step, "mlstm": ssm.mlstm_step,
+                    "slstm": ssm.slstm_step}[kind]
+            h = apply_norm(cfg, p["norm1"], x)
+            c = cache
+            outs = []
+            for t in range(h.shape[1]):
+                o_t, c_new = step(cfg, p["mixer"], h[:, t:t + 1], c)
+                c = _mask_recurrent(c_new, c, pos[:, t])
+                outs.append(o_t)
+            return x + jnp.concatenate(outs, axis=1), c, aux
 
     if kind == "mamba2":
         h = apply_norm(cfg, p["norm1"], x)
@@ -198,6 +223,9 @@ def block_apply(cfg: ArchConfig, kind: str, p, x, *, mode: str, cache, pos, enc_
             out, new_cache = ssm.mamba2_prefill(cfg, p["mixer"], h)
         else:
             out, new_cache = ssm.mamba2_step(cfg, p["mixer"], h, cache)
+            if pos is not None:
+                new_cache = _mask_recurrent(
+                    new_cache, cache, attn.decode_pos_vector(pos, x.shape[0]))
         return x + out, new_cache, aux
 
     if kind in ("mlstm", "slstm"):
@@ -211,9 +239,27 @@ def block_apply(cfg: ArchConfig, kind: str, p, x, *, mode: str, cache, pos, enc_
             out, new_cache = fwd(cfg, p["mixer"], h, return_cache=True)
         else:
             out, new_cache = step(cfg, p["mixer"], h, cache)
+            if pos is not None:
+                new_cache = _mask_recurrent(
+                    new_cache, cache, attn.decode_pos_vector(pos, x.shape[0]))
         return x + out, new_cache, aux
 
     raise ValueError(f"unknown block kind {kind}")
+
+
+def _mask_recurrent(new_cache, cache, pos_vec):
+    """Per-slot no-op for a recurrent state update: slots whose position
+    is negative (free pool slots, mid-chunked-prefill slots riding a
+    batched decode step, ragged chunk padding) keep their old state
+    byte-identical. Every recurrent cache leaf is batch-first, so one
+    broadcasted ``where`` per leaf suffices — unlike KV writes there is
+    no positional clamp to make a masked write land harmlessly."""
+    live = pos_vec >= 0
+    return jax.tree.map(
+        lambda new, old: jnp.where(
+            live.reshape((-1,) + (1,) * (new.ndim - 1)),
+            new, old.astype(new.dtype)),
+        new_cache, cache)
 
 
 # ---------------------------------------------------------------------------
@@ -311,7 +357,7 @@ def run_stack(
     params: dict,
     x: jax.Array,
     *,
-    mode: str,  # full | prefill | decode
+    mode: str,  # full | prefill | prefill_chunk | verify | decode
     caches=None,
     pos=None,
     enc_out=None,
@@ -372,5 +418,6 @@ def run_stack(
         if nc is not None:
             new_caches["tail"][slot] = nc
         aux = {k: aux[k] + a[k] for k in aux}
-    return x, (new_caches if mode in ("prefill", "decode", "verify")
+    return x, (new_caches if mode in ("prefill", "prefill_chunk", "decode",
+                                      "verify")
                else None), aux

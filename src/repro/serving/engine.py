@@ -398,11 +398,24 @@ class _Slot:
 
 @dataclasses.dataclass
 class PoolStepStats:
-    """Host-visible outcome of a flushed dispatch window."""
+    """Host-visible outcome of a flushed dispatch window. The upgrade
+    fields are the per-window overlap accounting: ``upgrades`` precision
+    upgrades were enqueued while this window's steps were in flight, and
+    enqueueing them held the host for ``upgrade_enqueue_s`` — the wall
+    clock the window actually lost to upgrades (the device-side OR +
+    refresh overlaps dispatched decode work)."""
 
     steps: int
     wall_s: float
     tokens_emitted: int
+    upgrades: int = 0
+    upgrade_enqueue_s: float = 0.0
+    prefill_ticks: int = 0  # chunked-prefill blocks advanced this window
+
+
+_RECURRENT_KINDS = ("mamba2", "mlstm", "slstm")
+_CROSS_KINDS = ("cross", "selfcross")
+_WINDOW_KINDS = ("swa", "swa_moe")
 
 
 class SlotPoolEngine(PrecisionManagedEngine):
@@ -411,11 +424,28 @@ class SlotPoolEngine(PrecisionManagedEngine):
     A fixed pool of ``n_slots`` decode slots shares ONE cache pytree in
     the flash kernel's native ``(B, Kh, S, hd)`` layout, one live param
     pytree over the PlaneStore accumulators, and one compiled ragged
-    ``decode_step`` (per-slot ``(B,)`` positions). Admission prefills a
-    request's prompt with batch 1 and writes the resulting caches into
-    the slot's batch row (``dynamic_update_slice`` per leaf — packed
-    prefill); eviction just frees the host-side slot record. Neither
-    touches the decode executable.
+    ``decode_step`` (per-slot ``(B,)`` positions). Eviction just frees
+    the host-side slot record. Neither admission nor eviction touches
+    the decode executable.
+
+    Admission is **chunked** by default (``chunked_prefill``): the
+    prompt is staged host-side and consumed ``prefill_chunk`` tokens at
+    a time by a batched ragged ``prefill_chunk`` launch that writes
+    prompt KV straight into the slot's pooled cache rows — no batch-1
+    prefill, no ``grow_caches``, no cache-sized copy on the admit path,
+    and ONE compiled executable per chunk shape no matter how many
+    distinct prompt lengths arrive (a flash crowd of novel lengths used
+    to pay one prefill compile each). Chunk steps interleave with
+    decode steps inside the dispatch window, so multiple queued
+    requests make admission progress per window while resident slots
+    keep decoding; a mid-prefill slot's device ``pos`` stays -1, which
+    masks it out of every interleaved decode step (KV writes and
+    recurrent-state updates included). Cross-attention archs (whose
+    admission must run the vision/enc encoder) fall back to the legacy
+    batch-1 path, with prompt lengths padded to power-of-two buckets
+    (``prefill_buckets``) where masked positions are supported, so the
+    prefill executable count is O(log max_len), not O(distinct
+    lengths).
 
     Decode is dispatched in bounded asynchronous windows: within a
     window, greedy sampling chains device-side with no host sync;
@@ -423,17 +453,18 @@ class SlotPoolEngine(PrecisionManagedEngine):
     finished requests, admits queued ones, and applies precision
     upgrades — "batch-step granularity", zero recompiles (the PR-3
     traced ``received_bits`` invariant holds: nothing static changes).
+    Upgrades are **zero-stall** by default (``double_buffer``): the
+    PlaneStore ingest never donates its accumulators, so the OR +
+    eq.-(5) refresh builds NEW buffers while in-flight steps read the
+    old ones; ``upgrade_if_available`` just enqueues that work and the
+    next dispatched step picks up the refreshed params in program
+    order — no ``block_until_ready`` fence anywhere in the serving
+    loop. Per-window overlap accounting lands in
+    :class:`PoolStepStats`.
 
     Tokens emitted by a free slot are discarded on host; the kernel
     masks a free slot's whole cache row (``q_pos = -1``), so it costs
     one lane of the batched launch and never NaNs.
-
-    One caveat: admission prefills at batch 1 through the jitted
-    ``model.prefill``, which compiles once per DISTINCT prompt length —
-    a novel length admitted mid-flight stalls dispatch for that
-    compile. Production deployments should bucket prompts to a small
-    set of lengths; the decode executable is unaffected (always exactly
-    one).
     """
 
     def __init__(self, model: Model, prog: ProgressiveModel, *,
@@ -442,7 +473,11 @@ class SlotPoolEngine(PrecisionManagedEngine):
                  resident: str = "fp",
                  dispatch_window: int = 8,
                  eos_id: int | None = None,
-                 ring_margin: int = 0):
+                 ring_margin: int = 0,
+                 chunked_prefill: bool | None = None,
+                 prefill_chunk: int = 8,
+                 prefill_buckets: bool = True,
+                 double_buffer: bool = True):
         super().__init__(model, prog, max_len, receiver=receiver,
                          resident=resident)
         if n_slots < 1:
@@ -456,10 +491,34 @@ class SlotPoolEngine(PrecisionManagedEngine):
                 "SlotPoolEngine does not support encoder-decoder models "
                 "with prompt-derived encoder lengths (cfg.enc_layers > 0); "
                 "use ProgressiveServer")
+        kinds = set(model.cfg.cycle) | set(model.cfg.tail)
+        chunk_ok = not (kinds & set(_CROSS_KINDS))
+        if chunked_prefill is None:
+            chunked_prefill = chunk_ok
+        elif chunked_prefill and not chunk_ok:
+            raise NotImplementedError(
+                "chunked prefill is not supported for cross-attention "
+                "archs (admission must run the vision/enc encoder); use "
+                "chunked_prefill=None to fall back automatically")
+        self.chunked_prefill = bool(chunked_prefill)
+        self.prefill_chunk = max(1, int(prefill_chunk))
+        if self.chunked_prefill and model.cfg.window and \
+                (kinds & set(_WINDOW_KINDS)):
+            # a chunk writes prefill_chunk positions ahead of the oldest
+            # live window entry — same over-allocation argument as
+            # speculative verify blocks (attention.py ring check)
+            ring_margin = max(ring_margin, self.prefill_chunk)
+        self._ring_margin = ring_margin
+        # masked-position padding is only sound for plain attention: a
+        # sliding-window ring has no masked slots and a recurrent state
+        # would consume the padding tokens
+        self.prefill_buckets = bool(prefill_buckets) and not \
+            (kinds & (set(_WINDOW_KINDS) | set(_RECURRENT_KINDS)))
+        self.double_buffer = bool(double_buffer)
         self.n_slots = n_slots
         self.dispatch_window = max(1, dispatch_window)
         # ring_margin over-allocates sliding-window ring caches for
-        # speculative verify blocks (see serving/speculative.py)
+        # speculative verify blocks and prefill chunks
         self.caches = model.init_caches(n_slots, max_len,
                                         ring_margin=ring_margin)
         self.pos = jnp.full((n_slots,), -1, jnp.int32)
@@ -478,9 +537,37 @@ class SlotPoolEngine(PrecisionManagedEngine):
         self._pending: list[tuple[Any, dict[int, int], int]] = []
         self._win_t0: float | None = None
         self.window_stats: list[PoolStepStats] = []
-        self.upgrade_stall_s: float = 0.0
+        self.upgrade_stall_s: float = 0.0    # host time blocked on upgrades
+        self.upgrade_enqueue_s: float = 0.0  # host time enqueueing them
+        self.upgrade_log: list[dict] = []    # per-upgrade overlap record
         self.upgrades: list[tuple[int, int]] = []  # (global step, stage)
         self._step_count = 0
+        self._tick_count = 0  # chunked-prefill blocks consumed
+        self._win_upgrades = 0
+        self._win_upgrade_enqueue_s = 0.0
+        self._win_prefill_ticks = 0
+        # chunked admission: slot -> staged prompt + consumption offset;
+        # slots here hold a request (not free) but are NOT decoding yet
+        self._prefill_state: dict[int, dict] = {}
+        self._chunk_step = jax.jit(_make_chunk_step(model))
+        # device-side companions updated by the chunk step when a slot's
+        # prefill completes: the argmax of its last prompt row (the
+        # request's first greedy token) lands in _last_tok (consumed by
+        # the speculative pool's draft chain) and _first_cap (read at
+        # flush for deferred first-token emission)
+        self._last_tok = jnp.zeros((n_slots, 1), jnp.int32)
+        self._first_cap = jnp.zeros((n_slots,), jnp.int32)
+        self._recurrent_cycle_keys = [
+            f"{j}_{kind}" for j, kind in enumerate(model.cfg.cycle)
+            if kind in _RECURRENT_KINDS]
+        self._recurrent_tail_keys = [
+            f"{i}_{kind}" for i, kind in enumerate(model.cfg.tail)
+            if kind in _RECURRENT_KINDS]
+        specs = model.input_specs(batch=1, seq_len=2, mode="prefill")
+        self._extra_specs = {k: tuple(s.shape[1:])
+                             for k, s in specs.items() if k != "tokens"}
+        self._submit_t: dict[int, float] = {}   # rid -> submit wall time
+        self.ttft_s: dict[int, float] = {}      # rid -> first-token latency
         # eos termination is checked at flush boundaries: a request may
         # decode up to dispatch_window - 1 tokens past its eos (the
         # standard async continuous-batching tradeoff); those trailing
@@ -492,15 +579,52 @@ class SlotPoolEngine(PrecisionManagedEngine):
         return [i for i, s in enumerate(self.slots) if s.free]
 
     def active_rids(self) -> dict[int, int]:
-        return {i: s.rid for i, s in enumerate(self.slots) if not s.free}
+        """Slots actively DECODING: admitted, prefill complete. A slot
+        mid-chunked-prefill holds a request (not free) but is excluded —
+        it joins decode snapshots once its last prompt chunk lands."""
+        return {i: s.rid for i, s in enumerate(self.slots)
+                if not s.free and i not in self._prefill_state}
 
     def submit(self, request: PoolRequest) -> None:
         """Queue a request; it is admitted into the next free slot at
-        the next admission point (immediately if one is free)."""
-        if request.max_new_tokens < 1:
-            raise ValueError("max_new_tokens must be >= 1")
+        the next admission point (immediately if one is free). A
+        malformed request raises HERE — before any device work."""
+        self._validate_request(request)
+        self._submit_t[request.rid] = time.perf_counter()
         self.queue.append(request)
         self._admit_from_queue()
+
+    def _validate_request(self, req: PoolRequest) -> None:
+        """Host-side (numpy-level) validation: nothing is traced,
+        transferred or launched before a request is known to be
+        well-formed. In particular a (1, S) prompt is rejected outright
+        rather than silently squeezing through batch-1 prefill, and a
+        bad ``extras`` shape fails before the prefill launch."""
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        prompt = np.asarray(req.prompt)
+        if prompt.ndim != 1:
+            raise ValueError(
+                f"PoolRequest.prompt must be one-dimensional (S,), got "
+                f"shape {prompt.shape}")
+        if prompt.shape[0] < 1:
+            raise ValueError("PoolRequest.prompt must hold >= 1 token")
+        if prompt.shape[0] + req.max_new_tokens > self.max_len:
+            # write positions reach prompt_len + budget - 1; past max_len
+            # the cache write would silently clamp onto the last slot
+            raise ValueError(
+                f"request needs {prompt.shape[0]} prompt + "
+                f"{req.max_new_tokens} new tokens > max_len {self.max_len}")
+        for k, v in req.extras.items():
+            if k not in self._extra_specs:
+                raise ValueError(
+                    f"unknown extras key {k!r}; this arch accepts "
+                    f"{sorted(self._extra_specs)}")
+            got, want = tuple(np.shape(v)), self._extra_specs[k]
+            if got != want:
+                raise ValueError(
+                    f"extras[{k!r}] must have per-request shape {want} "
+                    f"(no batch dim), got {got}")
 
     def _admit_from_queue(self) -> None:
         while self.queue and (free := self.free_slots()):
@@ -509,31 +633,158 @@ class SlotPoolEngine(PrecisionManagedEngine):
     def _admit(self, slot: int, req: PoolRequest) -> None:
         if self.params is None:
             raise RuntimeError("no planes received yet — call receive_stage()")
-        prompt = jnp.asarray(req.prompt, jnp.int32)
-        if prompt.ndim != 1:
-            raise ValueError("PoolRequest.prompt must be (S,)")
-        if prompt.shape[0] + req.max_new_tokens > self.max_len:
-            # write positions reach prompt_len + budget - 1; past max_len
-            # the cache write would silently clamp onto the last slot
-            raise ValueError(
-                f"request needs {prompt.shape[0]} prompt + "
-                f"{req.max_new_tokens} new tokens > max_len {self.max_len}")
-        batch = {"tokens": prompt[None, :]}
-        for k, v in req.extras.items():
-            batch[k] = jnp.asarray(v)[None]
-        last_logits, caches = self._prefill(self.params, batch)
-        caches = self.model.grow_caches(caches, self.max_len)
-        self.caches = _write_slot_tree(self.caches, caches, slot,
-                                       self.n_slots)
-        self.pos = self.pos.at[slot].set(prompt.shape[0])
-        self.last_logits = self.last_logits.at[slot].set(
-            last_logits[0].astype(self.last_logits.dtype))
+        prompt = np.asarray(req.prompt, np.int32)
         self.slots[slot] = _Slot(rid=req.rid, dispatched=0,
                                  budget=req.max_new_tokens)
         self.outputs.setdefault(req.rid, [])
         self.stage_log.setdefault(req.rid, [])
         self.admit_stage[req.rid] = self.stage
         self.admitted_order.append(req.rid)
+        self._post_admit(slot, req, int(prompt.shape[0]))
+        if self.chunked_prefill and not req.extras:
+            self._begin_chunked_prefill(slot, req, prompt)
+        else:
+            self._admit_batch1(slot, req, prompt)
+
+    def _post_admit(self, slot: int, req: PoolRequest,
+                    prompt_len: int) -> None:
+        """Subclass hook, called once per admission before the prompt
+        is consumed (speculative pool: position ceiling bookkeeping)."""
+
+    def _begin_chunked_prefill(self, slot: int, req: PoolRequest,
+                               prompt: np.ndarray) -> None:
+        """Chunked admission is host bookkeeping only: stage the prompt
+        and let :meth:`_prefill_tick` consume it ``prefill_chunk``
+        tokens per block, writing KV straight into the slot's pooled
+        cache rows. No KV reset is needed — a prior occupant's stale
+        rows are provably invisible (causal mask + decode overwrites
+        position p before any query >= p exists; a ring assigns
+        non-negative k_pos only to slots the new occupant has written).
+        A RECURRENT state is cumulative rather than positional, so it
+        IS zeroed here. The slot's device pos stays -1 until the last
+        chunk lands, masking it out of interleaved decode steps."""
+        self._reset_recurrent_slot(slot)
+        self._prefill_state[slot] = {"prompt": prompt, "off": 0,
+                                     "rid": req.rid,
+                                     "len": int(prompt.shape[0])}
+
+    def _admit_batch1(self, slot: int, req: PoolRequest,
+                      prompt: np.ndarray) -> None:
+        """Legacy admission: batch-1 prefill, grow to max_len, one
+        per-leaf slot write. Kept for cross-attention archs (the
+        vision/enc encoder runs here) and as the explicit
+        ``chunked_prefill=False`` baseline. With ``prefill_buckets``
+        the prompt is padded to a power-of-two bucket with masked
+        positions, so this path compiles O(log max_len) prefill
+        variants instead of one per distinct prompt length."""
+        L = int(prompt.shape[0])
+        tokens = jnp.asarray(prompt)[None, :]
+        n_valid = None
+        if self.prefill_buckets:
+            bucket = min(max(1 << (L - 1).bit_length(), 1), self.max_len)
+            if bucket > L:
+                tokens = jnp.pad(tokens, ((0, 0), (0, bucket - L)))
+            n_valid = jnp.asarray([L], jnp.int32)
+        batch = {"tokens": tokens}
+        for k, v in req.extras.items():
+            batch[k] = jnp.asarray(v)[None]
+        if n_valid is None:
+            last_logits, caches = self._prefill(self.params, batch)
+        else:
+            last_logits, caches = self._prefill(self.params, batch, n_valid)
+        caches = self._grow_admitted(caches, L)
+        self.caches = _write_slot_tree(self.caches, caches, slot,
+                                       self.n_slots)
+        self.pos = self.pos.at[slot].set(L)
+        self.last_logits = self.last_logits.at[slot].set(
+            last_logits[0].astype(self.last_logits.dtype))
+        self._post_admit_batch1(slot, req, last_logits, L)
+
+    def _grow_admitted(self, caches, prompt_len: int):
+        """Grow a batch-1 prefill's caches to pool shape (subclassed to
+        repack sliding-window rings by the speculative margin)."""
+        return self.model.grow_caches(caches, self.max_len)
+
+    def _post_admit_batch1(self, slot: int, req: PoolRequest,
+                           last_logits, prompt_len: int) -> None:
+        """Subclass hook after a batch-1 admission's device writes
+        (speculative pool: immediate first-token emission)."""
+
+    def _reset_recurrent_slot(self, slot: int) -> None:
+        """Zero one slot's recurrent-state rows (mamba2/mlstm/slstm
+        caches are cumulative — unlike KV rows, a prior occupant's
+        state would leak into the new request). Host-side .at[].set
+        per recurrent block, nothing cache-sized is copied."""
+        for key in self._recurrent_cycle_keys:
+            # stacked over cycles: leaves are (R, B, ...)
+            self.caches["cycles"][key] = jax.tree.map(
+                lambda a: a.at[:, slot].set(jnp.zeros((), a.dtype)),
+                self.caches["cycles"][key])
+        for key in self._recurrent_tail_keys:
+            self.caches["tail"][key] = jax.tree.map(
+                lambda a: a.at[slot].set(jnp.zeros((), a.dtype)),
+                self.caches["tail"][key])
+
+    def _prefill_tick(self) -> None:
+        """Advance every mid-prefill slot by one (B, chunk) block — a
+        single batched ``prefill_chunk`` launch; free and decoding
+        slots ride along fully masked (tok_pos = -1). When a slot's
+        last prompt token is inside this block, the device side
+        installs its end position, last-row logits and first greedy
+        token, so the slot joins the next decode snapshot with no host
+        sync."""
+        if not self._prefill_state:
+            return
+        C, B = self.prefill_chunk, self.n_slots
+        toks = np.zeros((B, C), np.int32)
+        tpos = np.full((B, C), -1, np.int32)
+        frow = np.full((B,), -1, np.int32)
+        done: list[int] = []
+        for slot, st in self._prefill_state.items():
+            off, L = st["off"], st["len"]
+            if off == 0:
+                # the stage the prompt is actually consumed at — an
+                # upgrade may land between submit and the first chunk
+                # tick. (Chunks beyond the first are not re-recorded: a
+                # mid-prefill upgrade makes a single "prefill stage"
+                # ill-defined; parity tests pin the upgrade-free case.)
+                self.admit_stage[st["rid"]] = self.stage
+            n = min(C, L - off)
+            toks[slot, :n] = st["prompt"][off:off + n]
+            tpos[slot, :n] = np.arange(off, off + n, dtype=np.int32)
+            if off + n == L:
+                frow[slot] = n - 1
+                done.append(slot)
+            st["off"] = off + n
+        (self.caches, self.pos, self.last_logits, self._last_tok,
+         self._first_cap) = self._chunk_step(
+            self.params, self.caches, jnp.asarray(toks), jnp.asarray(tpos),
+            jnp.asarray(frow), self.pos, self.last_logits, self._last_tok,
+            self._first_cap)
+        self._tick_count += 1
+        self._win_prefill_ticks += 1
+        for slot in done:
+            del self._prefill_state[slot]
+            self._on_prefill_complete(slot)
+
+    def _on_prefill_complete(self, slot: int) -> None:
+        """Subclass hook when a slot's chunked prefill finishes
+        (speculative pool: deferred first-token emission)."""
+
+    def prefill_cache_size(self) -> int:
+        """Compiled-executable count on the ADMISSION path — the
+        admission analogue of :meth:`decode_cache_size`. Chunked mode:
+        one per chunk shape (one, in practice). Batch-1 mode: one per
+        prompt-length bucket (O(log max_len) with ``prefill_buckets``,
+        one per distinct length without)."""
+        if self.chunked_prefill:
+            return self._chunk_step._cache_size()
+        return self._prefill._cache_size()
+
+    def _note_first_token(self, rid: int) -> None:
+        t = self._submit_t.get(rid)
+        if t is not None and rid not in self.ttft_s:
+            self.ttft_s[rid] = time.perf_counter() - t
 
     def _evict(self, slot: int) -> int:
         rid = self.slots[slot].rid
@@ -544,30 +795,36 @@ class SlotPoolEngine(PrecisionManagedEngine):
 
     # -- batched ragged decode ---------------------------------------------
     def step(self) -> dict[int, int]:
-        """Dispatch ONE batched decode step for every slot (free slots
-        ride along masked). Returns the ``{slot: rid}`` snapshot of who
-        the step decoded for. No host sync happens here."""
+        """One scheduling tick: advance chunked prefills by one block
+        (if any are staged), then dispatch ONE batched decode step for
+        every decoding slot (free and mid-prefill slots ride along
+        masked). Returns the ``{slot: rid}`` snapshot of who the decode
+        step ran for — empty when nothing is decoding yet. No host sync
+        happens here, for either half."""
         if self.params is None:
             raise RuntimeError("no planes received yet — call receive_stage()")
         if self._win_t0 is None:
             self._win_t0 = time.perf_counter()
+        self._prefill_tick()
         snapshot = self.active_rids()
+        if not snapshot:
+            return snapshot
         nxt = jnp.argmax(self.last_logits, axis=-1).astype(jnp.int32)[:, None]
         logits, self.caches = self._decode(self.params, self.caches, nxt,
                                            self.pos)
         active = jnp.asarray(
-            [not s.free for s in self.slots], dtype=bool)
+            [i in snapshot for i in range(self.n_slots)], dtype=bool)
         self.pos = jnp.where(active, self.pos + 1, self.pos)
         self.last_logits = logits
         self._pending.append((nxt, snapshot, self.stage))
         self._step_count += 1
         # dispatch-time bookkeeping: budgets decrement without reading
         # token values, so length-complete slots free immediately
-        for slot, s in enumerate(self.slots):
-            if not s.free:
-                s.dispatched += 1
-                if s.dispatched >= s.budget:
-                    self._evict(slot)
+        for slot in snapshot:
+            s = self.slots[slot]
+            s.dispatched += 1
+            if s.dispatched >= s.budget:
+                self._evict(slot)
         return snapshot
 
     def flush(self) -> PoolStepStats | None:
@@ -586,6 +843,8 @@ class SlotPoolEngine(PrecisionManagedEngine):
                 if rid in eos_hit:
                     continue
                 tok = int(toks[slot, j])
+                if not self.outputs[rid]:
+                    self._note_first_token(rid)
                 self.outputs[rid].append(tok)
                 self.stage_log[rid].append(stage)
                 emitted += 1
@@ -600,10 +859,16 @@ class SlotPoolEngine(PrecisionManagedEngine):
         self.completed |= self._retired
         self._retired.clear()
         stats = PoolStepStats(steps=len(self._pending), wall_s=wall,
-                              tokens_emitted=emitted)
+                              tokens_emitted=emitted,
+                              upgrades=self._win_upgrades,
+                              upgrade_enqueue_s=self._win_upgrade_enqueue_s,
+                              prefill_ticks=self._win_prefill_ticks)
         self.window_stats.append(stats)
         self._pending.clear()
         self._win_t0 = None
+        self._win_upgrades = 0
+        self._win_upgrade_enqueue_s = 0.0
+        self._win_prefill_ticks = 0
         return stats
 
     def upgrade_if_available(self) -> bool:
@@ -611,16 +876,37 @@ class SlotPoolEngine(PrecisionManagedEngine):
         up to every stage the externally-fed store has completed; in
         pull mode (no receiver) it advances ONE stage per call — the
         caller models the arrival cadence, exactly like
-        ``ProgressiveServer.decode``'s ``stage_arrival``. Timed into
-        ``upgrade_stall_s`` (the only serving-loop work allowed to
-        stall dispatch)."""
+        ``ProgressiveServer.decode``'s ``stage_arrival``.
+
+        With ``double_buffer=True`` (default) this only ENQUEUES the
+        upgrade: ``plane_or_segments`` never donates the store's
+        accumulators, so the OR + eq.-(5) refresh builds new buffers
+        while in-flight decode steps keep reading the old ones —
+        functional double buffering, no fence, and the next dispatched
+        step consumes the refreshed params in device program order.
+        The host cost is the enqueue time alone (``upgrade_enqueue_s``,
+        also surfaced per window in :class:`PoolStepStats`).
+        ``double_buffer=False`` restores the old
+        ``block_until_ready`` fence for A/B stall measurement; either
+        way ``upgrade_stall_s`` records the honest measured host-
+        blocked time and ``upgrade_log`` the per-upgrade split."""
         if self.stage >= self.prog.n_stages or \
                 self.stages_available <= self.stage:
             return False
         t0 = time.perf_counter()
         self.receive_stage()
-        jax.block_until_ready(jax.tree.leaves(self.params))
-        self.upgrade_stall_s += time.perf_counter() - t0
+        enqueue_s = time.perf_counter() - t0
+        if not self.double_buffer:
+            jax.block_until_ready(jax.tree.leaves(self.params))
+        stall_s = time.perf_counter() - t0
+        self.upgrade_enqueue_s += enqueue_s
+        self.upgrade_stall_s += stall_s
+        self._win_upgrades += 1
+        self._win_upgrade_enqueue_s += enqueue_s
+        self.upgrade_log.append({
+            "step": self._step_count, "stage": self.stage,
+            "enqueue_s": enqueue_s, "stall_s": stall_s,
+            "double_buffer": self.double_buffer})
         self.upgrades.append((self._step_count, self.stage))
         return True
 
@@ -645,6 +931,38 @@ class SlotPoolEngine(PrecisionManagedEngine):
                 break
         self.flush()
         return {rid: list(v) for rid, v in self.outputs.items()}
+
+
+def _make_chunk_step(model: Model):
+    """Build the jitted chunked-admission step: consume one (B, C)
+    prompt block into the pooled caches and, for slots whose final
+    prompt token is inside this block (``final_row[b] >= 0`` = its row
+    index), install their decode handoff state device-side — end
+    position, last-row logits, and the argmax first token (into both
+    the last-token chain and the first-token capture buffer). Slots
+    with ``final_row = -1`` (mid-prompt, decoding, free) pass their
+    state through untouched. ONE executable per (B, C) shape serves
+    every admission regardless of prompt length."""
+
+    def chunk_step(params, caches, tokens, tok_pos, final_row, pos,
+                   last_logits, last_tok, first_cap):
+        logits, caches = model.prefill_chunk(params, caches, tokens,
+                                             tok_pos)
+        C = tokens.shape[1]
+        row = jnp.clip(final_row, 0, C - 1)
+        sel = jnp.take_along_axis(logits, row[:, None, None],
+                                  axis=1)[:, 0]               # (B, V)
+        done = final_row >= 0
+        last_logits = jnp.where(done[:, None],
+                                sel.astype(last_logits.dtype), last_logits)
+        end = jnp.take_along_axis(tok_pos, row[:, None], axis=1)[:, 0] + 1
+        pos = jnp.where(done, end, pos)
+        first = jnp.argmax(sel, axis=-1).astype(jnp.int32)
+        last_tok = jnp.where(done[:, None], first[:, None], last_tok)
+        first_cap = jnp.where(done, first, first_cap)
+        return caches, pos, last_logits, last_tok, first_cap
+
+    return chunk_step
 
 
 def _write_slot_tree(pool, one, slot: int, n_slots: int):

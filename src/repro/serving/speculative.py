@@ -61,8 +61,7 @@ import numpy as np
 from repro.core.policy import SpeculationController
 from repro.models.common import quantized_resident_eligible
 from repro.serving.engine import (PoolStepStats, ProgressiveServer,
-                                  SlotPoolEngine, _Slot, _write_slot_tree,
-                                  resident_report)
+                                  SlotPoolEngine, resident_report)
 
 
 @dataclasses.dataclass
@@ -402,81 +401,89 @@ class SpeculativeEngine(_SpeculativeMixin, ProgressiveServer):
 class SpeculativeSlotPool(_SpeculativeMixin, SlotPoolEngine):
     """Continuous-batching speculation: one draft chain + one verify
     pass serve EVERY occupied slot per round, ragged positions and all.
-    Admissions land between rounds (prompt prefilled at batch 1, ring
-    caches grown by the speculative margin, first greedy token emitted
-    at admission); budget/eos eviction happens at flush, where the
-    per-round acceptance counts become host-visible. One draft
-    executable + one verify executable across every admission, eviction
-    and precision upgrade."""
+    Admission follows the base pool (chunked by default: the prompt
+    streams into the pooled caches block by block, the slot joining
+    draft rounds once its last chunk lands and its first greedy token —
+    captured device-side — being emitted at the next flush; batch-1
+    fallback prefills at admission, ring caches grown by the
+    speculative margin, first token emitted immediately). Budget/eos
+    eviction happens at flush, where the per-round acceptance counts
+    become host-visible. One draft executable + one verify executable
+    across every admission, eviction and precision upgrade."""
 
     def __init__(self, model, prog, *, n_slots: int, max_len: int,
                  receiver=None, spec: SpecConfig | None = None,
-                 dispatch_window: int = 4, eos_id: int | None = None):
+                 dispatch_window: int = 4, eos_id: int | None = None,
+                 chunked_prefill: bool | None = None,
+                 prefill_chunk: int = 8,
+                 prefill_buckets: bool = True,
+                 double_buffer: bool = True):
         spec = spec or SpecConfig()
         super().__init__(model, prog, n_slots=n_slots, max_len=max_len,
                          receiver=receiver, resident="quantized",
                          dispatch_window=dispatch_window, eos_id=eos_id,
-                         ring_margin=spec.k_max + 1)
+                         ring_margin=spec.k_max + 1,
+                         chunked_prefill=chunked_prefill,
+                         prefill_chunk=prefill_chunk,
+                         prefill_buckets=prefill_buckets,
+                         double_buffer=double_buffer)
         self._init_spec(spec)
-        self._last_tok = jnp.zeros((n_slots, 1), jnp.int32)
         # per-slot position ceiling (prompt + budget - 1): a slot whose
         # budget is met keeps riding rounds until flush evicts it, but
         # its pos freezes here — otherwise it would keep advancing and
         # collapse `room` (hence k_eff, hence the 2-executable
         # invariant) for every co-resident slot
         self._pos_bound = jnp.full((n_slots,), max_len, jnp.int32)
+        # chunked admissions whose first token awaits host emission:
+        # (slot, rid, stage at prefill completion)
+        self._deferred_first: list[tuple[int, int, int]] = []
 
     # -- admission ----------------------------------------------------------
-    def _admit(self, slot: int, req) -> None:
-        if self.params is None:
-            raise RuntimeError("no planes received yet — call receive_stage()")
-        prompt = jnp.asarray(req.prompt, jnp.int32)
-        if prompt.ndim != 1:
-            raise ValueError("PoolRequest.prompt must be (S,)")
-        if prompt.shape[0] + req.max_new_tokens > self.max_len:
-            raise ValueError(
-                f"request needs {prompt.shape[0]} prompt + "
-                f"{req.max_new_tokens} new tokens > max_len {self.max_len}")
-        batch = {"tokens": prompt[None, :]}
-        for k, v in req.extras.items():
-            batch[k] = jnp.asarray(v)[None]
-        last_logits, caches = self._prefill(self.params, batch)
-        caches = self.model.grow_caches(
-            caches, self.max_len, ring_margin=self.spec.k_max + 1,
-            pos=int(prompt.shape[0]))
-        self.caches = _write_slot_tree(self.caches, caches, slot,
-                                       self.n_slots)
-        self.pos = self.pos.at[slot].set(prompt.shape[0])
+    def _post_admit(self, slot: int, req, prompt_len: int) -> None:
         self._pos_bound = self._pos_bound.at[slot].set(
-            int(prompt.shape[0]) + req.max_new_tokens - 1)
+            prompt_len + req.max_new_tokens - 1)
+
+    def _grow_admitted(self, caches, prompt_len: int):
+        return self.model.grow_caches(
+            caches, self.max_len, ring_margin=self._ring_margin,
+            pos=prompt_len)
+
+    def _post_admit_batch1(self, slot: int, req, last_logits,
+                           prompt_len: int) -> None:
         first = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
         self._last_tok = self._last_tok.at[slot].set(first)
-        self.slots[slot] = _Slot(rid=req.rid, dispatched=1,
-                                 budget=req.max_new_tokens)
-        self.outputs.setdefault(req.rid, [])
-        self.stage_log.setdefault(req.rid, [])
         # the prefill argmax is the request's first greedy token,
         # emitted right at admission (the plain pool emits it on the
         # request's first batched step instead — same token)
+        self._note_first_token(req.rid)
         self.outputs[req.rid].append(int(first[0]))
         self.stage_log[req.rid].append(self.stage)
-        self.admit_stage[req.rid] = self.stage
-        self.admitted_order.append(req.rid)
+        self.slots[slot].dispatched = 1
         if req.max_new_tokens == 1:
             self._evict(slot)
 
+    def _on_prefill_complete(self, slot: int) -> None:
+        # the chunk step captured the first greedy token in _first_cap
+        # device-side; emission waits for the next flush (no host sync
+        # mid-window), chronologically before any round that includes
+        # this slot — rounds only snapshot it from here on
+        self._deferred_first.append((slot, self.slots[slot].rid,
+                                     self.stage))
+
     # -- one speculation round for the whole pool ---------------------------
     def step(self) -> dict[int, int]:
-        """One batched speculation round (the pool's 'step'): k draft
-        decode_steps + one verify pass over every slot. Free slots ride
-        along masked (``pos = -1``). Token values stay on device until
-        :meth:`flush`."""
+        """One scheduling tick: advance chunked prefills by one block,
+        then run one batched speculation round — k draft decode_steps +
+        one verify pass over every decoding slot. Free and mid-prefill
+        slots ride along masked (``pos = -1``). Token values stay on
+        device until :meth:`flush`."""
         if self.params is None:
             raise RuntimeError("no planes received yet — call receive_stage()")
         if self._win_t0 is None:
             self._win_t0 = time.perf_counter()
+        self._prefill_tick()
         snapshot = self.active_rids()
-        active = np.array([not s.free for s in self.slots])
+        active = np.array([i in snapshot for i in range(self.n_slots)])
         if not active.any():
             return snapshot
         self._sync_draft_view()
@@ -495,11 +502,37 @@ class SpeculativeSlotPool(_SpeculativeMixin, SlotPoolEngine):
         self._step_count += 1
         return snapshot
 
+    def _flush_deferred_first(self) -> int:
+        """Emit the captured first token of every chunk-admitted
+        request whose prefill completed since the last flush. Runs
+        BEFORE round distribution: the first token chronologically
+        precedes every round that snapshots the slot."""
+        if not self._deferred_first:
+            return 0
+        first_np = np.asarray(self._first_cap)  # host sync (flush-time)
+        emitted = 0
+        for slot, rid, stage in self._deferred_first:
+            s = self.slots[slot]
+            if s.free or s.rid != rid:
+                continue
+            tok = int(first_np[slot])
+            self._note_first_token(rid)
+            self.outputs[rid].append(tok)
+            self.stage_log[rid].append(stage)
+            s.dispatched += 1
+            emitted += 1
+            if s.dispatched >= s.budget or \
+                    (self.eos_id is not None and tok == self.eos_id):
+                self._evict(slot)
+        self._deferred_first.clear()
+        return emitted
+
     def flush(self) -> PoolStepStats | None:
         """Read the in-flight rounds' tokens + acceptance, distribute
         them, and do the budget/eos bookkeeping that the plain pool
         does at dispatch time (speculation only learns how many tokens
         a round produced when the acceptance counts land)."""
+        emitted = self._flush_deferred_first()
         if not self._pending:
             # budget-1 admissions can retire a request without any
             # in-flight round; still surface them as completed
@@ -508,7 +541,6 @@ class SpeculativeSlotPool(_SpeculativeMixin, SlotPoolEngine):
             return None
         jax.block_until_ready(self._last_tok)
         wall = time.perf_counter() - (self._win_t0 or time.perf_counter())
-        emitted = 0
         for g, acc, snapshot, stage, k_eff in self._pending:
             g_np = np.asarray(g)
             acc_np = np.asarray(acc)
@@ -538,8 +570,14 @@ class SpeculativeSlotPool(_SpeculativeMixin, SlotPoolEngine):
         self.completed |= self._retired
         self._retired.clear()
         stats = PoolStepStats(steps=len(self._pending), wall_s=wall,
-                              tokens_emitted=emitted)
+                              tokens_emitted=emitted,
+                              upgrades=self._win_upgrades,
+                              upgrade_enqueue_s=self._win_upgrade_enqueue_s,
+                              prefill_ticks=self._win_prefill_ticks)
         self.window_stats.append(stats)
         self._pending.clear()
         self._win_t0 = None
+        self._win_upgrades = 0
+        self._win_upgrade_enqueue_s = 0.0
+        self._win_prefill_ticks = 0
         return stats

@@ -381,6 +381,7 @@ class Session:
                          resident: str = "fp",
                          step_time_s: float | None = None,
                          dispatch_window: int = 4,
+                         chunked_prefill: bool | None = None,
                          speculative=None) -> SessionResult:
         """Flash-crowd serving: N requests join mid-download over ONE
         shared byte stream, and a :class:`~repro.serving.engine.
@@ -395,6 +396,12 @@ class Session:
         idle rounds (pool empty, crowd not yet arrived) advance the
         clock without dispatching. Deterministic for a fixed
         (blob, trace, prompts, offsets).
+
+        ``chunked_prefill`` is forwarded to the engine (None = auto:
+        on for every arch without cross-attention): admissions stream
+        prompt KV into pooled cache rows in ``prefill_chunk``-token
+        blocks interleaved with decode steps, instead of a batch-1
+        prefill + cache copy per admit.
 
         ``speculative`` (a SpecConfig or truthy) swaps the engine for
         :class:`~repro.serving.speculative.SpeculativeSlotPool`: every
@@ -432,14 +439,16 @@ class Session:
             engine = SpeculativeSlotPool(model, prog, n_slots=n_slots,
                                          max_len=max_len, receiver=receiver,
                                          spec=spec,
-                                         dispatch_window=dispatch_window)
+                                         dispatch_window=dispatch_window,
+                                         chunked_prefill=chunked_prefill)
         else:
             if max_len is None:
                 max_len = max(len(p) for p in prompts) + max_new_tokens
             engine = SlotPoolEngine(model, prog, n_slots=n_slots,
                                     max_len=max_len, receiver=receiver,
                                     resident=resident,
-                                    dispatch_window=dispatch_window)
+                                    dispatch_window=dispatch_window,
+                                    chunked_prefill=chunked_prefill)
         events: list[SessionEvent] = []
         arrivals = self.stage_arrival_times()
         feed_until = self._make_feeder(client, events)
@@ -467,6 +476,11 @@ class Session:
         # bounded by the crowd span, so this cap is never the exit path
         max_rounds = total_budget + n_req + int(
             max(arrival_offsets_s) / step_time_s) + 8
+        if engine.chunked_prefill:
+            # chunked admission consumes prompts one block per round;
+            # worst case (no decode overlap) that adds a round per chunk
+            c = engine.prefill_chunk
+            max_rounds += sum((len(p) + c - 1) // c for p in prompts)
 
         def wall() -> float:
             return t_cold + (rounds + 1) * step_time_s

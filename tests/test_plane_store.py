@@ -272,3 +272,66 @@ def test_pack_bits_large_n_no_blowup(width):
         np.asarray(unpack_bits(jnp.concatenate(
             [packed, jnp.zeros(3, packed.dtype)]), width, n)),
         np.asarray(vals))
+
+
+def test_batched_dequant_bit_identical_to_scalar():
+    """The upgrade hot path (``dequantize_batch`` and the from-buffers
+    variant the store's refresh uses) must be BYTE-identical to
+    per-tensor ``dequantize`` — not merely close: a single jitted
+    ``q*scale+offset`` executable FMA-contracts one ulp away from the
+    eager oracle and the fused dequant-matmul kernel, which is exactly
+    the drift the mul-only/add-only executable split prevents."""
+    from repro.core.quantize import (dequant_constants, dequantize,
+                                     dequantize_batch, dequantize_buffers,
+                                     quantize)
+    rng = np.random.default_rng(11)
+    qts, ms = [], []
+    for j, (shape, bits) in enumerate(
+            [((7,), 3), ((5, 9), 8), ((2, 3, 4), 16), ((33,), 12)]):
+        x = jnp.asarray(
+            (rng.standard_normal(shape) * 10.0 ** (j - 2)).astype(np.float32))
+        qts.append(quantize(x, bits))
+        ms.append([None, 0, bits // 2, bits][j % 4])
+    batch = dequantize_batch(qts, ms)
+    for qt, m, got in zip(qts, ms, batch):
+        assert np.asarray(dequantize(qt, m)).tobytes() == \
+            np.asarray(got).tobytes()
+
+    # from-buffers variant: pack the q's into one flat container buffer
+    # (all uint16 here) and dequantize via in-executable slicing
+    u16 = [(qt, m) for qt, m in zip(qts, ms) if qt.q.dtype == jnp.uint16]
+    flat = jnp.concatenate([qt.q.reshape(-1) for qt, _ in u16])
+    specs, off = [], 0
+    for qt, _ in u16:
+        specs.append(("uint16", off, qt.q.size, qt.q.shape))
+        off += qt.q.size
+    consts = dequant_constants([qt.lo for qt, _ in u16],
+                               [qt.hi for qt, _ in u16],
+                               [qt.bits for qt, _ in u16])
+    out = dequantize_buffers({"uint16": flat}, specs,
+                             [qt.bits for qt, _ in u16],
+                             [m for _, m in u16],
+                             ["float32"] * len(u16), constants=consts)
+    for (qt, m), got in zip(u16, out):
+        assert np.asarray(dequantize(qt, m)).tobytes() == \
+            np.asarray(got).tobytes()
+
+
+def test_store_materialize_matches_per_tensor_dequantize(params):
+    """The store's batched refresh must give byte-identical leaves to
+    eagerly slicing each accumulator and dequantizing it alone — at a
+    partial stage (mixed received bits) and at the final stage."""
+    from repro.core.quantize import dequantize
+    prog = divide(params)
+    state = ReceiverState.init(prog)
+    for s in range(1, prog.n_stages + 1):
+        state = state.receive(prog.stage(s))
+        store = state.store
+        leaves = store.materialize_leaves()
+        for i, t in enumerate(store.slots):
+            if t.slice_axis is not None:
+                continue
+            want = dequantize(store.quantized(i),
+                              received_bits=store.effective_bits(i))
+            assert np.asarray(want).tobytes() == \
+                np.asarray(leaves[t.key]).tobytes()
