@@ -120,7 +120,8 @@ def main():
         res = session.run_serving_pool(
             model, prog, prompts=prompts, arrival_offsets_s=offs,
             max_new_tokens=args.decode_steps, n_slots=min(4, n),
-            resident=args.resident, speculative=pool_spec,
+            resident=None if pool_spec else args.resident,
+            speculative=pool_spec,
             chunked_prefill=args.chunked_prefill)
         print(f"flash crowd: {n} clients admitted at "
               f"{[round(t, 2) for t, _ in res.admissions]}s "
@@ -156,7 +157,7 @@ def main():
           f"-resident); decoding...")
     res = session.run_serving(model, prog, decode_steps=args.decode_steps,
                               batch=batch, max_len=max_len,
-                              resident=args.resident,
+                              resident=None if speculative else args.resident,
                               speculative=speculative)
     print("decode-step : " + " ".join(f"{i:3d}" for i in range(args.decode_steps)))
     print("bits/weight : " + " ".join(f"{2 * s:3d}" for s in res.stage_at_step))

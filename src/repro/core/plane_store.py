@@ -81,6 +81,32 @@ def received_bits(schedule: PlaneSchedule, received: int) -> int:
     return schedule.cumulative_bits[received - 1] if received > 0 else 0
 
 
+def _entries_from_model(model, indices: Sequence[int] | None = None
+                        ) -> list[dict]:
+    """Per-tensor descriptor dicts from a server-side ProgressiveModel
+    (keys are pytree paths) — the pre-layout form both the flat
+    :class:`PlaneStore` and the per-shard sub-stores of
+    :class:`ShardedPlaneStore` build from."""
+    tensors = (model.tensors if indices is None
+               else [model.tensors[i] for i in indices])
+    return [{"key": t.path, "schedule": t.plan.schedule, "lo": t.lo,
+             "hi": t.hi, "shape": tuple(t.shape),
+             "orig_dtype": t.orig_dtype, "slice_axis": t.slice_axis,
+             "slice_idx": t.slice_idx} for t in tensors]
+
+
+def _entries_from_wire_meta(meta: Mapping) -> list[dict]:
+    """Per-tensor descriptor dicts from a decoded wire header (keys are
+    path strings)."""
+    return [{"key": t["path"],
+             "schedule": PlaneSchedule(bits=t["bits"],
+                                       widths=tuple(t["widths"])),
+             "lo": jnp.float32(t["lo"]), "hi": jnp.float32(t["hi"]),
+             "shape": tuple(t["shape"]), "orig_dtype": np.dtype(t["dtype"]),
+             "slice_axis": t.get("slice_axis"),
+             "slice_idx": t.get("slice_idx", 0)} for t in meta["tensors"]]
+
+
 @dataclasses.dataclass(frozen=True)
 class TensorSlot:
     """Static per-tensor metadata: a view descriptor into a flat buffer."""
@@ -107,11 +133,19 @@ class TensorSlot:
 
 
 class PlaneStore:
-    """Device-resident accumulators for one progressive model."""
+    """Device-resident accumulators for one progressive model.
 
-    def __init__(self, slots: list[TensorSlot], *, block: int = DEFAULT_BLOCK):
+    ``device`` commits every buffer (and every ingest upload) to one
+    specific device — the per-shard sub-stores of
+    :class:`ShardedPlaneStore` use this so each shard's planes are
+    OR-ed on the device that owns them (shard-local ingest, no
+    replicated OR). ``None`` keeps jax's default placement."""
+
+    def __init__(self, slots: list[TensorSlot], *, block: int = DEFAULT_BLOCK,
+                 device=None):
         self.block = block
         self.slots = slots
+        self.device = device
         self.received = [0] * len(slots)
         # dtype name -> flat uint buffer (length: multiple of block)
         self.buffers: dict[str, jax.Array] = {}
@@ -120,7 +154,10 @@ class PlaneStore:
             dt = np.dtype(t.container).name
             sizes[dt] = max(sizes.get(dt, 0), t.offset + t.padded)
         for dt, n in sizes.items():
-            self.buffers[dt] = jnp.zeros((n,), dtype=np.dtype(dt))
+            buf = jnp.zeros((n,), dtype=np.dtype(dt))
+            if device is not None:
+                buf = jax.device_put(buf, device)
+            self.buffers[dt] = buf
         self._dirty: set[int] = set(range(len(slots)))
         self._leaf_cache: dict[Any, jax.Array] = {}
         self._qleaf_cache: dict[Any, QuantizedTensor] = {}
@@ -146,6 +183,24 @@ class PlaneStore:
         return out
 
     @classmethod
+    def _from_entries(cls, entries: list[dict], *,
+                      block: int = DEFAULT_BLOCK, device=None) -> "PlaneStore":
+        """Build from per-tensor descriptor dicts (no layout yet):
+        key/schedule/lo/hi/shape/orig_dtype[/slice_axis/slice_idx]."""
+        layout = cls._layout(entries, block)
+        slots = [
+            TensorSlot(
+                key=e["key"], schedule=e["schedule"], lo=e["lo"], hi=e["hi"],
+                shape=tuple(e["shape"]), orig_dtype=e["orig_dtype"],
+                offset=off, size=size, padded=padded,
+                slice_axis=e.get("slice_axis"),
+                slice_idx=e.get("slice_idx", 0),
+            )
+            for e, (off, size, padded) in zip(entries, layout)
+        ]
+        return cls(slots, block=block, device=device)
+
+    @classmethod
     def from_model(cls, model, *, block: int = DEFAULT_BLOCK,
                    indices: Sequence[int] | None = None) -> "PlaneStore":
         """Build from a server-side :class:`ProgressiveModel` (keys are
@@ -153,45 +208,14 @@ class PlaneStore:
         the model's tensors (slot i is then ``model.tensors[indices[i]]``
         — a single-tensor store allocates one tensor's buffer, not the
         whole model's)."""
-        tensors = (model.tensors if indices is None
-                   else [model.tensors[i] for i in indices])
-        entries = [{"schedule": t.plan.schedule, "shape": t.shape}
-                   for t in tensors]
-        layout = cls._layout(entries, block)
-        slots = [
-            TensorSlot(
-                key=t.path, schedule=t.plan.schedule, lo=t.lo, hi=t.hi,
-                shape=tuple(t.shape), orig_dtype=t.orig_dtype,
-                offset=off, size=size, padded=padded,
-                slice_axis=t.slice_axis, slice_idx=t.slice_idx,
-            )
-            for t, (off, size, padded) in zip(tensors, layout)
-        ]
-        return cls(slots, block=block)
+        return cls._from_entries(_entries_from_model(model, indices),
+                                 block=block)
 
     @classmethod
     def from_wire_meta(cls, meta: Mapping, *, block: int = DEFAULT_BLOCK
                        ) -> "PlaneStore":
         """Build from a decoded wire header (keys are path strings)."""
-        entries = [
-            {"schedule": PlaneSchedule(bits=t["bits"],
-                                       widths=tuple(t["widths"])),
-             "shape": tuple(t["shape"])}
-            for t in meta["tensors"]
-        ]
-        layout = cls._layout(entries, block)
-        slots = [
-            TensorSlot(
-                key=t["path"], schedule=e["schedule"],
-                lo=jnp.float32(t["lo"]), hi=jnp.float32(t["hi"]),
-                shape=tuple(t["shape"]), orig_dtype=np.dtype(t["dtype"]),
-                offset=off, size=size, padded=padded,
-                slice_axis=t.get("slice_axis"), slice_idx=t.get("slice_idx", 0),
-            )
-            for t, e, (off, size, padded)
-            in zip(meta["tensors"], entries, layout)
-        ]
-        return cls(slots, block=block)
+        return cls._from_entries(_entries_from_wire_meta(meta), block=block)
 
     def copy(self) -> "PlaneStore":
         """Cheap snapshot: buffers are immutable jax arrays, so sharing
@@ -200,6 +224,7 @@ class PlaneStore:
         new = object.__new__(PlaneStore)
         new.block = self.block
         new.slots = self.slots
+        new.device = self.device
         new.received = list(self.received)
         new.buffers = dict(self.buffers)
         new._dirty = set(self._dirty)
@@ -309,7 +334,8 @@ class PlaneStore:
                 sh = next_plane_shift(t.schedule, self.received[idx])
                 shifts[pos // self.block:(pos + t.padded) // self.block] = sh
                 pos += t.padded
-            shifts = jnp.asarray(shifts)
+            shifts = (jnp.asarray(shifts) if self.device is None
+                      else jax.device_put(shifts, self.device))
             # Plane assembly: on an accelerator, keep device-resident
             # planes (engine path) on device — pad+concat is cheap XLA
             # work and avoids a blocking D2H+H2D round trip. On the CPU
@@ -325,6 +351,8 @@ class PlaneStore:
                         p = jnp.pad(p, (0, t.padded - t.size))
                     parts.append(p)
                 plane = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+                if self.device is not None:
+                    plane = jax.device_put(plane, self.device)
             else:
                 plane_np = np.zeros((total,), dtype=buf.dtype)
                 pos = 0
@@ -333,7 +361,8 @@ class PlaneStore:
                     plane_np[pos:pos + t.size] = (
                         np.asarray(items[idx]).reshape(-1))
                     pos += t.padded
-                plane = jnp.asarray(plane_np)
+                plane = (jnp.asarray(plane_np) if self.device is None
+                         else jax.device_put(plane_np, self.device))
             if full:
                 # Whole buffer touched (the common full-stage upgrade):
                 # segments are dense by layout, no gather/scatter needed.
@@ -542,3 +571,398 @@ class PlaneStore:
 
     def dirty_keys(self) -> set:
         return {self.slots[i].key for i in self._dirty}
+
+
+def _key_path_str(key) -> str:
+    """Leaf key as an 'a/b/c' path string (wire stores already use
+    strings; pull-mode stores use jax tree-path tuples)."""
+    if isinstance(key, str):
+        return key
+    from repro.core.wire import path_str
+
+    return path_str(key)
+
+
+class ShardedPlaneStore:
+    """Multi-device PlaneStore: per-model-shard sub-stores, shard-local
+    ingest, globally-sharded leaf views.
+
+    Each model shard ``j`` owns an ordinary :class:`PlaneStore`
+    committed to ``mesh`` device column ``j`` — the same flat per-dtype
+    uint accumulators, block-aligned layout and batched
+    ``plane_or_segments`` upgrade, just device-pinned. A tensor routes
+    to the sub-stores one of three ways, along the same axes
+    :func:`repro.launch.sharding.serving_spec_for_param` shards the
+    param it backs:
+
+    * **expert slices** (``slice_axis`` set, slice count divisible by
+      the shard count): each per-expert slice is already its own store
+      tensor, so slice ``e`` goes *whole* to shard ``e // (E/n)`` —
+      expert-parallel ingest with no plane surgery;
+    * **split dense** (>= 2-D, serving spec shards a dim divisibly):
+      each arriving plane is split along that dim and each segment is
+      uploaded to — and OR-ed on — its owning shard only;
+    * **whole** (1-D, indivisible, or unshardable): round-robin to one
+      sub-store; the leaf is replicated at materialization.
+
+    Every plane row is OR-ed exactly once on exactly one device (no
+    host gather of accumulators, no replicated OR); launch counts are
+    the per-sub-store sums. Leaves come back as *global* jax arrays:
+    sharded leaves are zero-copy-assembled from the sub-stores' buffer
+    views via ``jax.make_array_from_single_device_arrays`` (plus
+    per-data-row replica transfers when the mesh has a data axis > 1),
+    whole-routed leaves are replicated. The eq.-(5) affine constants
+    stay *shard-local*: each sub-store batches its own
+    ``dequantize_buffers`` refresh with its own cached constants, so an
+    upgrade stays O(1) host dispatches per shard. Everything is
+    dispatch-only — ingest and refresh never block on device results,
+    preserving the zero-stall upgrade property."""
+
+    def __init__(self, entries: list[dict], mesh, *,
+                 block: int = DEFAULT_BLOCK):
+        if mesh.axis_names != ("data", "model"):
+            raise ValueError(
+                f"ShardedPlaneStore wants a ('data', 'model') mesh, got "
+                f"axes {mesh.axis_names}")
+        self.mesh = mesh
+        self.block = block
+        self._n_model = int(mesh.shape["model"])
+        self._n_data = int(mesh.shape["data"])
+        self._devs = np.asarray(mesh.devices).reshape(
+            self._n_data, self._n_model)
+        self.keys = [e["key"] for e in entries]
+        self.schedules = [e["schedule"] for e in entries]
+        self.shapes = [tuple(e["shape"]) for e in entries]
+        self.received = [0] * len(entries)
+        # key -> ordered global tensor idxs (slices group under one key)
+        self._groups: dict[Any, list[int]] = {}
+        for i, k in enumerate(self.keys):
+            self._groups.setdefault(k, []).append(i)
+        # routing (per key): ("expert", axis) | ("split", axis) |
+        # ("whole", owner_shard)
+        self._route: dict[Any, tuple] = {}
+        # global idx -> [(shard, plane_segment_index)] in shard order
+        self._placement: list[list[tuple[int, int]]] = [
+            [] for _ in entries]
+        per_shard: list[list[dict]] = [[] for _ in range(self._n_model)]
+        # key -> shard -> local slot idxs (for per-shard leaf refresh)
+        self._local_by_key: dict[Any, dict[int, list[int]]] = {}
+        rr = 0  # round-robin cursor for whole-routed groups
+        for key, idxs in self._groups.items():
+            locs = self._local_by_key.setdefault(key, {})
+
+            def _place(i: int, j: int, entry: dict) -> None:
+                self._placement[i].append((j, len(per_shard[j])))
+                locs.setdefault(j, []).append(len(per_shard[j]))
+                per_shard[j].append(entry)
+
+            e0 = entries[idxs[0]]
+            ax = e0.get("slice_axis")
+            if (ax is not None and len(idxs) > 1
+                    and len(idxs) % self._n_model == 0
+                    and all(entries[i].get("slice_axis") == ax
+                            for i in idxs)):
+                ordered = sorted(idxs, key=lambda i: entries[i]["slice_idx"])
+                per = len(ordered) // self._n_model
+                for r, i in enumerate(ordered):
+                    _place(i, r // per, entries[i])
+                self._route[key] = ("expert", ax)
+                continue
+            split_ax = (self._split_axis(e0) if len(idxs) == 1 and ax is None
+                        else None)
+            if split_ax is not None:
+                i = idxs[0]
+                shape = list(e0["shape"])
+                shape[split_ax] //= self._n_model
+                local = dict(e0, shape=tuple(shape))
+                for j in range(self._n_model):
+                    _place(i, j, local)
+                self._route[key] = ("split", split_ax)
+                continue
+            owner = rr % self._n_model
+            rr += 1
+            for i in idxs:
+                _place(i, owner, entries[i])
+            self._route[key] = ("whole", owner)
+        self.substores = [
+            PlaneStore._from_entries(per_shard[j], block=block,
+                                     device=self._devs[0, j])
+            for j in range(self._n_model)
+        ]
+        self._g_dirty: set[int] = set(range(len(entries)))
+        self._g_leaf_cache: dict[Any, jax.Array] = {}
+        self._g_qleaf_cache: dict[Any, QuantizedTensor] = {}
+        self._g_qtrunc_cache: dict[tuple, QuantizedTensor] = {}
+
+    def _split_axis(self, entry: dict) -> int | None:
+        """Dim to split a dense tensor on, from the serving sharding
+        rule (reuses launch/sharding's spec; lazy import, launch sits
+        above core)."""
+        from repro.launch.sharding import serving_spec_for_param
+
+        shape = entry["shape"]
+        if len(shape) < 2:
+            return None
+        spec = serving_spec_for_param(_key_path_str(entry["key"]), shape,
+                                      self.mesh)
+        for d, name in enumerate(spec):
+            if name == "model":
+                return d
+        return None
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_model(cls, model, mesh, *,
+                   block: int = DEFAULT_BLOCK) -> "ShardedPlaneStore":
+        return cls(_entries_from_model(model), mesh, block=block)
+
+    @classmethod
+    def from_wire_meta(cls, meta: Mapping, mesh, *,
+                       block: int = DEFAULT_BLOCK) -> "ShardedPlaneStore":
+        return cls(_entries_from_wire_meta(meta), mesh, block=block)
+
+    def copy(self) -> "ShardedPlaneStore":
+        new = object.__new__(ShardedPlaneStore)
+        for attr in ("mesh", "block", "_n_model", "_n_data", "_devs",
+                     "keys", "schedules", "shapes", "_groups", "_route",
+                     "_placement", "_local_by_key"):
+            setattr(new, attr, getattr(self, attr))
+        new.received = list(self.received)
+        new.substores = [s.copy() for s in self.substores]
+        new._g_dirty = set(self._g_dirty)
+        new._g_leaf_cache = dict(self._g_leaf_cache)
+        new._g_qleaf_cache = dict(self._g_qleaf_cache)
+        new._g_qtrunc_cache = dict(self._g_qtrunc_cache)
+        return new
+
+    # -- basic views -------------------------------------------------------
+    @property
+    def n_tensors(self) -> int:
+        return len(self.keys)
+
+    def effective_bits(self, i: int) -> int:
+        return received_bits(self.schedules[i], self.received[i])
+
+    def resident_bytes(self) -> int:
+        return sum(s.resident_bytes() for s in self.substores)
+
+    def dirty_keys(self) -> set:
+        return {self.keys[i] for i in self._g_dirty}
+
+    def acc(self, i: int) -> jax.Array:
+        """Tensor i's accumulator, re-joined across shards (compat /
+        debug surface; the serving path reads the sharded leaves and
+        never host-gathers)."""
+        kind, _ = self._route[self.keys[i]]
+        if kind != "split":
+            j, lidx = self._placement[i][0]
+            return self.substores[j].acc(lidx)
+        ax = self._route[self.keys[i]][1]
+        return jnp.concatenate(
+            [jnp.asarray(np.asarray(self.substores[j].acc(lidx)))
+             for j, lidx in self._placement[i]], axis=ax)
+
+    def quantized(self, i: int) -> QuantizedTensor:
+        t0 = self.substores[self._placement[i][0][0]].slots[
+            self._placement[i][0][1]]
+        return QuantizedTensor(q=self.acc(i), lo=t0.lo, hi=t0.hi,
+                               bits=t0.bits, orig_dtype=t0.orig_dtype)
+
+    # -- eq. (4): shard-local batched upgrade ------------------------------
+    def ingest(self, items: Sequence[tuple[int, jax.Array]]) -> None:
+        """Route a shipment to the owning shards and OR it there.
+        Validation is global and up front (a bad item leaves every
+        sub-store untouched); each sub-store then runs its own batched
+        ``plane_or_segments`` rounds on its own device — launches are
+        the per-shard sums, and no accumulator bytes cross devices."""
+        pending = list(items)
+        counts: dict[int, int] = {}
+        for idx, plane in pending:
+            size = int(np.prod(self.shapes[idx]) or 1)
+            n = int(np.prod(np.shape(plane)) or 1)
+            if n != size:
+                raise ValueError(
+                    f"plane for tensor {idx} has {n} elements, "
+                    f"expected {size}")
+            counts[idx] = counts.get(idx, 0) + 1
+        for idx, c in counts.items():
+            have, total = self.received[idx], self.schedules[idx].n_planes
+            if have + c > total:
+                raise ValueError(
+                    f"tensor {idx}: {have} planes received + {c} arriving "
+                    f"exceeds schedule of {total}")
+        sub_items: list[list[tuple[int, Any]]] = [
+            [] for _ in range(self._n_model)]
+        for idx, plane in pending:
+            key = self.keys[idx]
+            kind, ax = self._route[key]
+            if kind == "split":
+                arr = np.asarray(plane).reshape(self.shapes[idx])
+                pieces = np.split(arr, self._n_model, axis=ax)
+                for (j, lidx), piece in zip(self._placement[idx], pieces):
+                    sub_items[j].append((lidx, piece))
+            else:
+                j, lidx = self._placement[idx][0]
+                sub_items[j].append((lidx, plane))
+        for j, its in enumerate(sub_items):
+            if its:
+                self.substores[j].ingest(its)
+        for idx, _ in pending:
+            self.received[idx] += 1
+            self._g_dirty.add(idx)
+            key = self.keys[idx]
+            self._g_leaf_cache.pop(key, None)
+            self._g_qleaf_cache.pop(key, None)
+            for tk in [t for t in self._g_qtrunc_cache if t[0] == key]:
+                self._g_qtrunc_cache.pop(tk)
+
+    # -- global leaf assembly ----------------------------------------------
+    def _assemble(self, pieces: list, global_shape: tuple, spec) -> jax.Array:
+        """Zero-copy global array from per-shard pieces: piece ``j`` is
+        normally already committed to device column ``j`` (a lazy view
+        of that sub-store's buffer or a shard-local dequant result), so
+        the row-0 ``device_put`` is a no-op view; host-built pieces
+        (per-slice metadata) get committed here, and extra data rows get
+        async replica transfers."""
+        from jax.sharding import NamedSharding
+
+        sharding = NamedSharding(self.mesh, spec)
+        arrs = []
+        for i in range(self._n_data):
+            for j, p in enumerate(pieces):
+                arrs.append(jax.device_put(p, self._devs[i, j]))
+        return jax.make_array_from_single_device_arrays(
+            tuple(global_shape), sharding, arrs)
+
+    def _replicated(self, x):
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        return jax.device_put(x, NamedSharding(self.mesh, PartitionSpec()))
+
+    def _spec_at(self, ndim: int, ax: int):
+        from jax.sharding import PartitionSpec
+
+        names = [None] * ndim
+        names[ax] = "model"
+        return PartitionSpec(*names)
+
+    def _refresh_fp(self, keys: list) -> None:
+        """Per-shard batched eq.-(5) refresh for the given keys: ONE
+        ``dequantize_buffers`` dispatch per sub-store (shard-local
+        affine constants via each sub-store's own consts cache), then
+        global assembly of each leaf."""
+        if not keys:
+            return
+        for j, sub in enumerate(self.substores):
+            stale = [(key, self._local_by_key[key][j]) for key in keys
+                     if j in self._local_by_key[key]]
+            if stale:
+                sub._refresh_fp_leaves(stale)
+                for _, lidxs in stale:
+                    sub._dirty.difference_update(lidxs)
+        for key in keys:
+            kind, ax = self._route[key]
+            if kind == "whole":
+                leaf = self._replicated(self.substores[ax]._leaf_cache[key])
+            else:
+                shards = sorted(self._local_by_key[key])
+                pieces = [self.substores[j]._leaf_cache[key] for j in shards]
+                shape = list(pieces[0].shape)
+                shape[ax] *= self._n_model
+                leaf = self._assemble(pieces, tuple(shape),
+                                      self._spec_at(len(shape), ax))
+            self._g_leaf_cache[key] = leaf
+
+    def _fp_leaf(self, key) -> jax.Array:
+        cached = self._g_leaf_cache.get(key)
+        if cached is not None and not any(
+                i in self._g_dirty for i in self._groups[key]):
+            return cached
+        self._refresh_fp([key])
+        return self._g_leaf_cache[key]
+
+    def materialize_leaves(self) -> dict[Any, jax.Array]:
+        """Global ``{key: array}`` view; stale keys are re-dequantized
+        in one batched dispatch per sub-store and re-assembled, clean
+        keys come back as the *same* global array objects."""
+        stale = [key for key, idxs in self._groups.items()
+                 if self._g_leaf_cache.get(key) is None
+                 or any(i in self._g_dirty for i in idxs)]
+        self._refresh_fp(stale)
+        out = {key: self._g_leaf_cache[key] for key in self._groups}
+        self._g_dirty.clear()
+        return out
+
+    # -- quantized-resident views ------------------------------------------
+    def _sub_qleaf(self, j: int, key) -> QuantizedTensor | None:
+        sub = self.substores[j]
+        got = sub._qleaf_cache.get(key)
+        if got is None:
+            got = sub._quantized_leaf(key, self._local_by_key[key][j])
+            if got is not None:
+                sub._qleaf_cache[key] = got
+        return got
+
+    def _quantized_leaf(self, key) -> QuantizedTensor | None:
+        kind, ax = self._route[key]
+        if kind == "whole":
+            local = self._sub_qleaf(ax, key)
+            return None if local is None else self._replicated(local)
+        shards = sorted(self._local_by_key[key])
+        locals_ = [self._sub_qleaf(j, key) for j in shards]
+        if any(l is None for l in locals_):
+            return None
+        l0 = locals_[0]
+        gshape = list(l0.q.shape)
+        gshape[ax] *= self._n_model
+        q = self._assemble([l.q for l in locals_], tuple(gshape),
+                           self._spec_at(len(gshape), ax))
+        fields = ("lo", "hi", "scale", "offset", "received_bits")
+        if ax < len(gshape) - 2:
+            # the sharded dim survives into the metadata shape
+            # (q.shape[:-2] + (1, 1)): shard the metadata exactly like
+            # q's dim — per-expert affines vary along it, per-tensor
+            # affines broadcast along it, either way the shapes align
+            mshape = list(l0.scale.shape)
+            mshape[ax] *= self._n_model
+            mspec = self._spec_at(len(mshape), ax)
+            meta = {f: self._assemble([getattr(l, f) for l in locals_],
+                                      tuple(mshape), mspec)
+                    for f in fields}
+        else:
+            # split on a contraction-adjacent dim (last two): the
+            # metadata collapses it to 1 and the per-tensor affine is
+            # identical on every shard — replicate shard 0's
+            meta = {f: self._replicated(getattr(l0, f)) for f in fields}
+        return QuantizedTensor(q=q, bits=l0.bits, orig_dtype=l0.orig_dtype,
+                               **meta)
+
+    def quantized_leaves(self, eligible=None, *, bits: int | None = None
+                         ) -> dict[Any, Any]:
+        """Globally-sharded mirror of
+        :meth:`PlaneStore.quantized_leaves`: eligible leaves are live
+        QuantizedTensor views whose ``q`` is a global sharded array over
+        the sub-stores' accumulators; truncated (``bits=b``) draft views
+        share those exact global buffers (zero extra weight bytes,
+        sharded or not)."""
+        out: dict[Any, Any] = {}
+        for key, idxs in self._groups.items():
+            if eligible is None or eligible(key):
+                got = self._g_qleaf_cache.get(key)
+                if got is None:
+                    got = self._quantized_leaf(key)
+                    if got is not None:
+                        self._g_qleaf_cache[key] = got
+                if got is not None:
+                    if bits is not None:
+                        b_eff = min(bits, got.bits)
+                        trunc = self._g_qtrunc_cache.get((key, b_eff))
+                        if trunc is None:
+                            trunc = got.truncate(b_eff)
+                            self._g_qtrunc_cache[(key, b_eff)] = trunc
+                        got = trunc
+                    out[key] = got
+                    continue
+            out[key] = self._fp_leaf(key)
+        self._g_dirty.clear()
+        return out

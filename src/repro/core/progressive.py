@@ -169,7 +169,18 @@ class ReceiverState:
     received_stages: int = 0
 
     @classmethod
-    def init(cls, model: ProgressiveModel) -> "ReceiverState":
+    def init(cls, model: ProgressiveModel, *, mesh=None) -> "ReceiverState":
+        """``mesh=None`` (default): single-device flat-buffer store.
+        With a serving mesh, the accumulators shard across its model
+        axis (:class:`~repro.core.plane_store.ShardedPlaneStore`) along
+        the same axes ``launch.sharding.serving_spec_for_param`` gives
+        the params they back — same eq. (4)/(5) semantics, shard-local
+        ingest."""
+        if mesh is not None:
+            from repro.core.plane_store import ShardedPlaneStore
+            return cls(model_meta=model,
+                       store=ShardedPlaneStore.from_model(model, mesh),
+                       received_stages=0)
         return cls(model_meta=model, store=PlaneStore.from_model(model),
                    received_stages=0)
 

@@ -20,6 +20,16 @@ Tiling: grid (M/bm, N/bn, K/bk) with K innermost; a fp32 accumulator
 tile lives in VMEM scratch across the K sweep. Block shapes default to
 MXU-aligned (128, 128) tiles (512 in K for bandwidth); the uint16 weight
 tile (bk x bn) is dequantized in-register (VPU) then fed to the MXU.
+
+Sharding: the kernel itself is single-device; multi-device serving
+shards ``q`` on N only (never K — the fp32 accumulation order across
+the K sweep is part of the bit-exactness contract, and a sharded K
+would turn it into partial sums + an all-reduce). Per-shard launches go
+through :func:`repro.kernels.ops.sharded_dequant_matmul` (shard_map,
+one launch per shard on its own (K, N/n) columns) or the engines'
+jit-with-shardings path; each shard's call is exactly this kernel on
+its local columns, so per-stage outputs match single-device bit for
+bit.
 """
 from __future__ import annotations
 

@@ -45,6 +45,39 @@ def dequant_matmul(x, q, scale, offset, **kw):
     return _dqm.dequant_matmul(x, q, scale, offset, **kw)
 
 
+@functools.lru_cache(maxsize=None)
+def _sharded_dqm(mesh, axis: str, interpret: bool):
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    # check_rep=False is required: pallas_call has no replication rule,
+    # and the kernel computes no cross-shard reductions anyway (K stays
+    # whole per shard).
+    return jax.jit(shard_map(
+        functools.partial(_dqm.dequant_matmul, interpret=interpret),
+        mesh=mesh,
+        in_specs=(P(), P(None, axis), P(), P()),
+        out_specs=P(None, axis),
+        check_rep=False))
+
+
+def sharded_dequant_matmul(x, q, scale, offset, *, mesh, axis: str = "model"):
+    """Explicit tensor-parallel dequant-matmul: ``q`` (K, N) sharded on
+    N over ``mesh``'s ``axis``; x/scale/offset replicated. One kernel
+    launch *per shard* under ``shard_map`` — each shard dequantizes and
+    multiplies its own (K, N/n) accumulator columns, and the output
+    comes back (M, N) sharded on N (XLA overlaps any consumer-driven
+    gather against the other shards' dequant work). Bit-identical to
+    the single-device kernel: the K contraction is never sharded, so no
+    partial-sum all-reduce ever reorders float adds. This is the
+    shard_map half of the sharded serving story; the engines' model
+    path uses jit-with-shardings (``models.common.serving_mesh``)
+    instead, which XLA partitions from the same specs."""
+    LAUNCH_COUNTS["sharded_dequant_matmul"] += 1
+    return _sharded_dqm(mesh, axis, _interpret_default())(
+        x, q, scale, offset)
+
+
 def plane_or(acc, plane, *, shift, **kw):
     LAUNCH_COUNTS["plane_or"] += 1
     kw.setdefault("interpret", _interpret_default())

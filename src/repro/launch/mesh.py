@@ -33,6 +33,16 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2, *, multi_pod: bool = Fals
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_serving_mesh(n_model: int, *, n_data: int = 1):
+    """Mesh for the sharded serving stack (PlaneStore shards + sharded
+    decode): tensor/expert parallelism over ``model``, optional replica
+    rows over ``data``. Same axes as the debug/production meshes so
+    :func:`repro.launch.sharding.serving_spec_for_param` applies
+    unchanged. Call only under an adequate device count (e.g.
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` in CI)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
 def data_axes(mesh) -> tuple[str, ...]:
     """Axes that shard the batch/FSDP dimension (pod joins data)."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -96,9 +96,29 @@ def main() -> None:
     ap.add_argument("--crowd-span-s", type=float, default=1.0,
                     help="window after cold start over which the crowd "
                          "arrives")
+    ap.add_argument("--mesh-shards", type=int, default=0,
+                    help="> 1: shard the serving stack over this many "
+                         "devices on the mesh's model axis — the plane "
+                         "accumulators shard with the params they back "
+                         "(shard-local ingest) and decode runs through "
+                         "sharded dispatch, token-identical to single-"
+                         "device at every precision stage (CI runs this "
+                         "under XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8)")
     ap.add_argument("--event-log", default=None,
                     help="write the session's audit log (JSONL) here")
     args = ap.parse_args()
+
+    mesh = None
+    if args.mesh_shards > 1:
+        from repro.launch.mesh import make_serving_mesh
+
+        if jax.device_count() < args.mesh_shards:
+            raise SystemExit(
+                f"--mesh-shards {args.mesh_shards} needs that many devices, "
+                f"have {jax.device_count()} (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count=N before launch)")
+        mesh = make_serving_mesh(args.mesh_shards)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -140,8 +160,9 @@ def main() -> None:
         result = session.run_serving_pool(
             model, prog, prompts=prompts, arrival_offsets_s=offs,
             max_new_tokens=args.decode_steps, n_slots=args.pool_slots,
-            resident=args.resident, speculative=pool_spec,
-            chunked_prefill=args.chunked_prefill)
+            resident=None if pool_spec else args.resident,
+            speculative=pool_spec,
+            chunked_prefill=args.chunked_prefill, mesh=mesh)
         pool = result.server
         print(f"flash crowd: {args.pool_clients} clients over "
               f"{args.crowd_span_s}s into {args.pool_slots} slots; "
@@ -175,7 +196,8 @@ def main() -> None:
         max_len += speculative.k_max + 1
     result = session.run_serving(
         model, prog, decode_steps=args.decode_steps, batch=batch,
-        max_len=max_len, resident=args.resident, speculative=speculative)
+        max_len=max_len, resident=None if speculative else args.resident,
+        speculative=speculative, mesh=mesh)
     server = result.server
     if args.speculative:
         s = result.speculation_summary()

@@ -127,6 +127,42 @@ def spec_for_param(path: str, shape: tuple, mesh: Mesh,
     return P(*spec)
 
 
+def serving_spec_for_param(path: str, shape: tuple, mesh: Mesh) -> P:
+    """Reduction-order-safe PartitionSpec for a *serving* weight.
+
+    The training rules above happily put the model axis on a contraction
+    dim (row-parallel wo); under GSPMD that turns the matmul into
+    per-shard partial sums + an all-reduce, which reorders float adds —
+    fine for training, fatal for the serving exit criterion that a
+    sharded server is *token-identical* to single-device at every
+    precision stage. Serving therefore shards only dims that are never
+    reduced over: the expert dim of MoE banks (indexed, not contracted)
+    and otherwise the output (last) dim of each matmul weight — every
+    resharding GSPMD inserts is then pure data movement (gathers), which
+    is bit-exact. The data/fsdp axes never touch serving params (weights
+    are replicated across data rows); 1-D and indivisible leaves
+    replicate entirely. The :class:`~repro.core.plane_store.
+    ShardedPlaneStore` routes plane ingest along the same axes, so the
+    accumulator shard and the param shard it backs are the same bytes."""
+    tp = model_axis(mesh)
+    tp_size = _axis_size(mesh, tp)
+    if tp_size <= 1 or len(shape) < 2:
+        return P()
+    # stacked cycle params carry a leading n_cycles dim -> never shard it
+    start = 1 if "cycles/" in path else 0
+    if len(shape) - start < 2:
+        return P()
+    spec: list[Any] = [None] * len(shape)
+    if re.search(r"we_(gate|up|down)", path) and _divides(shape[start],
+                                                          tp_size):
+        spec[start] = tp  # expert dim: indexed per expert, never reduced
+        return P(*spec)
+    if _divides(shape[-1], tp_size):
+        spec[-1] = tp     # output dim: concatenated, never reduced
+        return P(*spec)
+    return P()
+
+
 def param_shardings(params_shape_tree, mesh: Mesh, strategy: str = "greedy"):
     def one(path, leaf):
         return NamedSharding(

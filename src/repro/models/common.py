@@ -3,6 +3,7 @@ and the ONE dense-apply dispatch point of quantized-resident serving
 (:func:`dense` / :func:`expert_dense` / :func:`embed_lookup`)."""
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any
 
@@ -11,6 +12,39 @@ import jax.numpy as jnp
 
 from repro.core.quantize import QuantizedTensor
 from repro.kernels import ops
+
+# Trace-time serving-mesh stack (see :func:`serving_mesh`): non-empty
+# top means the dispatch helpers below pin their outputs replicated.
+_SERVING_MESH: list = [None]
+
+
+@contextlib.contextmanager
+def serving_mesh(mesh):
+    """While active (at *trace* time), every dispatch-helper output is
+    pinned replicated on ``mesh`` via ``with_sharding_constraint``.
+
+    This is the whole trick that makes sharded serving token-identical
+    to single-device: GSPMD only reorders float reductions when a
+    *contraction* dim is sharded, and with every activation pinned
+    replicated, each matmul sees a replicated input against a weight
+    sharded on a non-contraction dim (see ``serving_spec_for_param``) —
+    the only collectives are output all-gathers, pure data movement,
+    bit-exact. The engines wrap their jitted model entry points in this
+    context (``PrecisionManagedEngine._meshed``); with no mesh active
+    the helpers are byte-for-byte the single-device code path."""
+    _SERVING_MESH.append(mesh)
+    try:
+        yield
+    finally:
+        _SERVING_MESH.pop()
+
+
+def _pin_replicated(y: jax.Array) -> jax.Array:
+    mesh = _SERVING_MESH[-1]
+    if mesh is None:
+        return y
+    return jax.lax.with_sharding_constraint(
+        y, jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -262,8 +296,8 @@ def dense(x: jax.Array, w, *, dtype) -> jax.Array:
         lead = x.shape[:-1]
         y = ops.dequant_matmul(x.reshape(-1, x.shape[-1]), masked_q(w),
                                w.scale, w.offset)
-        return y.reshape(*lead, w.q.shape[-1]).astype(dtype)
-    return x @ w.astype(dtype)
+        return _pin_replicated(y.reshape(*lead, w.q.shape[-1])).astype(dtype)
+    return _pin_replicated(x @ w.astype(dtype))
 
 
 def expert_dense(x: jax.Array, w, *, dtype) -> jax.Array:
@@ -280,8 +314,8 @@ def expert_dense(x: jax.Array, w, *, dtype) -> jax.Array:
             ye = ops.dequant_matmul(x[:, e].reshape(B * C, d), qe,
                                     w.scale[e], w.offset[e])
             outs.append(ye.reshape(B, C, -1))
-        return jnp.stack(outs, axis=1).astype(dtype)
-    return jnp.einsum("becd,edf->becf", x, w.astype(dtype))
+        return _pin_replicated(jnp.stack(outs, axis=1)).astype(dtype)
+    return _pin_replicated(jnp.einsum("becd,edf->becf", x, w.astype(dtype)))
 
 
 def embed_lookup(w, tokens: jax.Array) -> jax.Array:
@@ -290,8 +324,9 @@ def embed_lookup(w, tokens: jax.Array) -> jax.Array:
     materializes. Returns float32 rows (callers cast)."""
     if isinstance(w, QuantizedTensor):
         rows = masked_q(w, w.q[tokens]).astype(jnp.float32)
-        return rows * w.scale.reshape(()) + w.offset.reshape(())
-    return w[tokens].astype(jnp.float32)
+        return _pin_replicated(rows * w.scale.reshape(())
+                               + w.offset.reshape(()))
+    return _pin_replicated(w[tokens].astype(jnp.float32))
 
 
 def softcap(x: jax.Array, cap: float) -> jax.Array:

@@ -47,6 +47,7 @@ step *sees* is governed by ``resident``:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Callable
 
@@ -184,7 +185,7 @@ class PrecisionManagedEngine:
 
     def __init__(self, model: Model, prog: ProgressiveModel, max_len: int,
                  receiver: WireStoreReceiver | None = None,
-                 resident: str = "fp"):
+                 resident: str = "fp", mesh=None):
         if resident not in RESIDENT_MODES:
             raise ValueError(
                 f"resident must be one of {RESIDENT_MODES}, got {resident!r}")
@@ -192,12 +193,34 @@ class PrecisionManagedEngine:
         self.prog = prog
         self.max_len = max_len
         self.resident = resident
+        self.mesh = mesh
         self._receiver = receiver
-        self.state = None if receiver is not None else ReceiverState.init(prog)
+        self.state = (None if receiver is not None
+                      else ReceiverState.init(prog, mesh=mesh))
         self._consumed = 0  # receiver mode: stages reflected in params
         self.params = None  # live param pytree at current precision
-        self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(self._meshed(model.prefill))
+        self._decode = jax.jit(self._meshed(model.decode_step))
+
+    def _meshed(self, fn):
+        """Wrap a model entry point so its *trace* runs under
+        ``models.common.serving_mesh(self.mesh)``: every dispatch-helper
+        output gets a replicated sharding constraint, which keeps all
+        GSPMD-inserted collectives pure gathers (bit-exact — no sharded
+        contractions, no partial-sum all-reduces; see
+        ``launch.sharding.serving_spec_for_param``). Identity when the
+        engine is single-device. The wrapper closes over the mesh value,
+        not ``self``, so jit caching is unaffected."""
+        if self.mesh is None:
+            return fn
+        mesh = self.mesh
+        from repro.models.common import serving_mesh
+
+        @functools.wraps(fn)
+        def wrapped(*args, **kwargs):
+            with serving_mesh(mesh):
+                return fn(*args, **kwargs)
+        return wrapped
 
     # -- precision management ------------------------------------------------
     @property
@@ -290,9 +313,9 @@ class ProgressiveServer(PrecisionManagedEngine):
 
     def __init__(self, model: Model, prog: ProgressiveModel, max_len: int,
                  receiver: WireStoreReceiver | None = None,
-                 resident: str = "fp"):
+                 resident: str = "fp", mesh=None):
         super().__init__(model, prog, max_len, receiver=receiver,
-                         resident=resident)
+                         resident=resident, mesh=mesh)
         self.caches = None
         self.pos = 0
 
@@ -477,9 +500,10 @@ class SlotPoolEngine(PrecisionManagedEngine):
                  chunked_prefill: bool | None = None,
                  prefill_chunk: int = 8,
                  prefill_buckets: bool = True,
-                 double_buffer: bool = True):
+                 double_buffer: bool = True,
+                 mesh=None):
         super().__init__(model, prog, max_len, receiver=receiver,
-                         resident=resident)
+                         resident=resident, mesh=mesh)
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
         if model.cfg.enc_layers:
@@ -549,7 +573,7 @@ class SlotPoolEngine(PrecisionManagedEngine):
         # chunked admission: slot -> staged prompt + consumption offset;
         # slots here hold a request (not free) but are NOT decoding yet
         self._prefill_state: dict[int, dict] = {}
-        self._chunk_step = jax.jit(_make_chunk_step(model))
+        self._chunk_step = jax.jit(self._meshed(_make_chunk_step(model)))
         # device-side companions updated by the chunk step when a slot's
         # prefill completes: the argmax of its last prompt row (the
         # request's first greedy token) lands in _last_tok (consumed by

@@ -156,10 +156,24 @@ class _SpeculativeMixin:
                 f"state snapshot per token — the opposite of the "
                 f"zero-copy KV story)")
         self.spec = spec or SpecConfig()
+        # The contiguous verify block writes T = k + 1 rows starting at
+        # the base position, and `write_kv_slot` clamps at the cache
+        # end: a cache without k_max + 1 rows of headroom past the last
+        # decodable position would silently overwrite live KV instead
+        # of failing. Enforce the floor at construction (mirroring
+        # SlotPoolEngine.submit's prompt+budget check); start()/
+        # submit() validate the per-prompt / per-request form.
+        min_len = self.spec.k_max + 2
+        if self.max_len < min_len:
+            raise ValueError(
+                f"max_len {self.max_len} < k_max + 2 = {min_len}: the "
+                f"T-wide verify write needs k_max + 1 rows of headroom "
+                f"past the base position, or it clamps onto live KV "
+                f"rows")
         self.controller = self.spec.make_controller()
         self.draft_params = None
-        self._verify = jax.jit(
-            lambda p, c, t, pos: _verify_and_accept(self.model, p, c, t, pos))
+        self._verify = jax.jit(self._meshed(
+            lambda p, c, t, pos: _verify_and_accept(self.model, p, c, t, pos)))
         self.accept_log: list[dict] = []
         if self.params is not None:
             self._refresh_params()
@@ -290,16 +304,22 @@ class SpeculativeEngine(_SpeculativeMixin, ProgressiveServer):
     while the rest finish."""
 
     def __init__(self, model, prog, max_len: int, receiver=None,
-                 spec: SpecConfig | None = None):
+                 spec: SpecConfig | None = None, mesh=None):
         super().__init__(model, prog, max_len, receiver=receiver,
-                         resident="quantized")
+                         resident="quantized", mesh=mesh)
         self._init_spec(spec)
 
     def start(self, batch: dict) -> None:
         if self.params is None:
             raise RuntimeError("no planes received yet — call receive_stage()")
-        last_logits, caches = self._prefill(self.params, batch)
         prompt_len = int(batch["tokens"].shape[1])
+        if prompt_len + self.spec.k_max + 1 > self.max_len:
+            raise ValueError(
+                f"prompt of {prompt_len} tokens leaves no verify "
+                f"headroom: needs prompt + k_max + 1 = "
+                f"{prompt_len + self.spec.k_max + 1} <= max_len "
+                f"{self.max_len}")
+        last_logits, caches = self._prefill(self.params, batch)
         # ring caches over-allocated by the max draft block so verify
         # writes never clobber live window entries
         self.caches = self.model.grow_caches(
@@ -332,6 +352,15 @@ class SpeculativeEngine(_SpeculativeMixin, ProgressiveServer):
                 "tokens of fast slots are discarded at the end of a "
                 "run, so continuing would skip them — call start() "
                 "again to begin a new generation")
+        # validate BEFORE consuming the one-shot: a rejected call must
+        # leave the started generation decodable with a legal step count
+        need = int(self._pos_np.max()) + steps + self.spec.k_max - 1
+        if need > self.max_len:
+            raise ValueError(
+                f"decoding {steps} steps needs max_len >= prompt + "
+                f"steps + k_max - 1 = {need}, got {self.max_len} (the "
+                f"final rounds' verify blocks would clamp at the cache "
+                f"end)")
         self._decoded = True
         B = int(self._first_tok.shape[0])
         emitted: list[list[int]] = [[] for _ in range(B)]
@@ -358,8 +387,12 @@ class SpeculativeEngine(_SpeculativeMixin, ProgressiveServer):
             self._sync_draft_view()
             active = np.array([len(e) < steps for e in emitted])
             pos_masked = np.where(active, self._pos_np, -1)
-            room = int(self.max_len - pos_masked[active].max() - 1)
-            k_eff = max(0, min(self.choose_k(), room))
+            # headroom was validated at start()/decode(): every active
+            # slot can take a full k_max-draft verify block, so k never
+            # shrinks at the end of generation and no extra verify
+            # shape ever compiles (the 2-executable invariant holds
+            # for the whole session)
+            k_eff = self.choose_k()
             pos_dev = jnp.asarray(pos_masked, jnp.int32)
             g, acc, nxt, self.caches = self._run_round(
                 self.caches, last_tok, pos_dev, k_eff)
@@ -417,7 +450,8 @@ class SpeculativeSlotPool(_SpeculativeMixin, SlotPoolEngine):
                  chunked_prefill: bool | None = None,
                  prefill_chunk: int = 8,
                  prefill_buckets: bool = True,
-                 double_buffer: bool = True):
+                 double_buffer: bool = True,
+                 mesh=None):
         spec = spec or SpecConfig()
         super().__init__(model, prog, n_slots=n_slots, max_len=max_len,
                          receiver=receiver, resident="quantized",
@@ -426,19 +460,33 @@ class SpeculativeSlotPool(_SpeculativeMixin, SlotPoolEngine):
                          chunked_prefill=chunked_prefill,
                          prefill_chunk=prefill_chunk,
                          prefill_buckets=prefill_buckets,
-                         double_buffer=double_buffer)
+                         double_buffer=double_buffer,
+                         mesh=mesh)
         self._init_spec(spec)
         # per-slot position ceiling (prompt + budget - 1): a slot whose
         # budget is met keeps riding rounds until flush evicts it, but
-        # its pos freezes here — otherwise it would keep advancing and
-        # collapse `room` (hence k_eff, hence the 2-executable
-        # invariant) for every co-resident slot
+        # its pos freezes here — otherwise it would keep advancing past
+        # the verify headroom `submit` validated for it
         self._pos_bound = jnp.full((n_slots,), max_len, jnp.int32)
         # chunked admissions whose first token awaits host emission:
         # (slot, rid, stage at prefill completion)
         self._deferred_first: list[tuple[int, int, int]] = []
 
     # -- admission ----------------------------------------------------------
+    def _validate_request(self, req) -> None:
+        super()._validate_request(req)
+        prompt = np.asarray(req.prompt)
+        if prompt.shape[0] + req.max_new_tokens + self.spec.k_max \
+                > self.max_len:
+            # the last round at pos = prompt + budget - 1 verify-writes
+            # k_max more rows; past max_len the write would clamp onto
+            # live KV (and a shrunken k would compile a second verify
+            # shape)
+            raise ValueError(
+                f"request needs {prompt.shape[0]} prompt + "
+                f"{req.max_new_tokens} new tokens + {self.spec.k_max} "
+                f"verify headroom > max_len {self.max_len}")
+
     def _post_admit(self, slot: int, req, prompt_len: int) -> None:
         self._pos_bound = self._pos_bound.at[slot].set(
             prompt_len + req.max_new_tokens - 1)
@@ -487,9 +535,11 @@ class SpeculativeSlotPool(_SpeculativeMixin, SlotPoolEngine):
         if not active.any():
             return snapshot
         self._sync_draft_view()
-        pos_np = np.asarray(self.pos)
-        room = int(self.max_len - pos_np[active].max() - 1)
-        k_eff = max(0, min(self.choose_k(), room))
+        # submit() validated prompt + budget + k_max <= max_len for
+        # every admitted request, so a full k-draft verify block always
+        # fits — k never shrinks at the end of a request's budget and
+        # the 2-executable invariant holds across the pool's lifetime
+        k_eff = self.choose_k()
         g, acc, nxt, self.caches = self._run_round(
             self.caches, self._last_tok, self.pos, k_eff)
         act_dev = jnp.asarray(active)

@@ -24,7 +24,13 @@ from repro.core.plane_store import PlaneStore
 class ProgressiveClient:
     """Incremental decoder of the progressive wire format."""
 
-    def __init__(self, on_stage_complete: Callable[[int], None] | None = None):
+    def __init__(self, on_stage_complete: Callable[[int], None] | None = None,
+                 *, mesh=None):
+        # mesh=None: single-device flat-buffer store. With a serving
+        # mesh, decoded planes route shard-local into a
+        # ShardedPlaneStore (each model shard ORs only its own segment
+        # of the plane — no host gather, no replicated OR).
+        self._mesh = mesh
         self._buf = bytearray()
         self._meta = None
         self._layout: wire.StageLayout | None = None
@@ -73,7 +79,12 @@ class ProgressiveClient:
             self._meta, hdr = wire.decode_header(bytes(self._buf))
             self._layout = wire.layout_from_header(self._meta, hdr)
             self._cursor = hdr
-            self.store = PlaneStore.from_wire_meta(self._meta)
+            if self._mesh is not None:
+                from repro.core.plane_store import ShardedPlaneStore
+                self.store = ShardedPlaneStore.from_wire_meta(
+                    self._meta, self._mesh)
+            else:
+                self.store = PlaneStore.from_wire_meta(self._meta)
         # Decode completed planes; the eq. (4) OR happens in batched
         # flushes, not per plane.
         assert self._layout is not None

@@ -270,8 +270,8 @@ class Session:
     def run_serving(self, model, prog, *, decode_steps: int, batch: dict,
                     step_time_s: float | None = None,
                     max_len: int | None = None,
-                    resident: str = "fp",
-                    speculative=None) -> SessionResult:
+                    resident: str | None = None,
+                    speculative=None, mesh=None) -> SessionResult:
         """Drive a real ProgressiveServer from the byte stream: the
         server sits on the client's PlaneStore (one ingest per stage,
         one batched Pallas launch per container dtype) and decodes real
@@ -280,11 +280,12 @@ class Session:
         delivered each stage. Tokens, upgrade steps and the event log
         are bit-deterministic for a fixed (blob, trace, seed).
 
-        ``resident`` selects the server's weight residency: ``"fp"``
-        re-materializes float weights per upgrade (the paper's client);
-        ``"quantized"`` decodes straight from the client's uint
-        accumulators (no fp weight copy, upgrades are metadata-only —
-        see :class:`~repro.serving.engine.ProgressiveServer`).
+        ``resident`` selects the server's weight residency (default
+        ``"fp"``): ``"fp"`` re-materializes float weights per upgrade
+        (the paper's client); ``"quantized"`` decodes straight from the
+        client's uint accumulators (no fp weight copy, upgrades are
+        metadata-only — see
+        :class:`~repro.serving.engine.ProgressiveServer`).
 
         ``speculative`` (a :class:`~repro.serving.speculative.SpecConfig`
         or truthy for defaults) swaps the server for the
@@ -292,29 +293,43 @@ class Session:
         store drafts, the full view verifies, and per-round accept-rate
         events join the audit log on the byte clock. Speculation
         implies quantized residency (the draft IS a second metadata
-        view over the resident accumulators), so ``resident`` is
-        ignored when set.
+        view over the resident accumulators), so passing ``resident``
+        together with ``speculative`` is a contradiction and raises
+        ``ValueError`` instead of being silently ignored.
         """
         from repro.serving.engine import ProgressiveServer, WireStoreReceiver
         from repro.serving.speculative import SpecConfig, SpeculativeEngine
 
-        client = ProgressiveClient()
+        # mesh=None: single device. With a serving mesh the client's
+        # store shards across its model axis (shard-local ingest) and
+        # the engine decodes through sharded dispatch — token-identical
+        # to the single-device session at every precision stage.
+        client = ProgressiveClient(mesh=mesh)
         receiver = WireStoreReceiver(client, prog)
         if speculative:
+            if resident is not None:
+                raise ValueError(
+                    f"resident={resident!r} conflicts with speculative "
+                    f"serving: the draft is a metadata view over the "
+                    f"quantized-resident accumulators, so residency is "
+                    f"fixed at 'quantized' — drop the resident argument")
             spec = (speculative if isinstance(speculative, SpecConfig)
                     else SpecConfig())
             if max_len is None:
                 # headroom so end-of-generation verify blocks keep full
-                # k (a clamped k compiles an extra verify shape)
+                # k (the engine validates it and would raise otherwise)
                 max_len = (batch["tokens"].shape[1] + decode_steps
                            + spec.k_max + 1)
             server = SpeculativeEngine(model, prog, max_len=max_len,
-                                       receiver=receiver, spec=spec)
+                                       receiver=receiver, spec=spec,
+                                       mesh=mesh)
         else:
             if max_len is None:
                 max_len = batch["tokens"].shape[1] + decode_steps
             server = ProgressiveServer(model, prog, max_len=max_len,
-                                       receiver=receiver, resident=resident)
+                                       receiver=receiver,
+                                       resident=resident or "fp",
+                                       mesh=mesh)
         events: list[SessionEvent] = []
         arrivals = self.stage_arrival_times()
         feed_until = self._make_feeder(client, events)
@@ -378,11 +393,11 @@ class Session:
                          max_new_tokens: int = 8,
                          n_slots: int = 4,
                          max_len: int | None = None,
-                         resident: str = "fp",
+                         resident: str | None = None,
                          step_time_s: float | None = None,
                          dispatch_window: int = 4,
                          chunked_prefill: bool | None = None,
-                         speculative=None) -> SessionResult:
+                         speculative=None, mesh=None) -> SessionResult:
         """Flash-crowd serving: N requests join mid-download over ONE
         shared byte stream, and a :class:`~repro.serving.engine.
         SlotPoolEngine` serves them all from the client's PlaneStore —
@@ -406,8 +421,9 @@ class Session:
         ``speculative`` (a SpecConfig or truthy) swaps the engine for
         :class:`~repro.serving.speculative.SpeculativeSlotPool`: every
         pool 'step' becomes a draft+verify round, acceptance records
-        join the audit log at flush boundaries, and ``resident`` is
-        ignored (speculation implies quantized residency).
+        join the audit log at flush boundaries, and passing
+        ``resident`` alongside raises ``ValueError`` (speculation
+        implies quantized residency).
 
         Note: this drives the engine step/flush primitives directly
         rather than ``SlotPoolEngine.run`` because admissions and byte
@@ -423,32 +439,40 @@ class Session:
         if len(arrival_offsets_s) != n_req:
             raise ValueError("one arrival offset per prompt")
 
-        client = ProgressiveClient()
+        client = ProgressiveClient(mesh=mesh)
         receiver = WireStoreReceiver(client, prog)
         if speculative:
             from repro.serving.speculative import (SpecConfig,
                                                    SpeculativeSlotPool)
 
+            if resident is not None:
+                raise ValueError(
+                    f"resident={resident!r} conflicts with speculative "
+                    f"serving: the draft is a metadata view over the "
+                    f"quantized-resident accumulators, so residency is "
+                    f"fixed at 'quantized' — drop the resident argument")
             spec = (speculative if isinstance(speculative, SpecConfig)
                     else SpecConfig())
             if max_len is None:
                 # headroom so end-of-budget verify blocks keep full k
-                # (a clamped k compiles an extra verify shape)
+                # (submit validates it per request and raises otherwise)
                 max_len = (max(len(p) for p in prompts) + max_new_tokens
                            + spec.k_max + 1)
             engine = SpeculativeSlotPool(model, prog, n_slots=n_slots,
                                          max_len=max_len, receiver=receiver,
                                          spec=spec,
                                          dispatch_window=dispatch_window,
-                                         chunked_prefill=chunked_prefill)
+                                         chunked_prefill=chunked_prefill,
+                                         mesh=mesh)
         else:
             if max_len is None:
                 max_len = max(len(p) for p in prompts) + max_new_tokens
             engine = SlotPoolEngine(model, prog, n_slots=n_slots,
                                     max_len=max_len, receiver=receiver,
-                                    resident=resident,
+                                    resident=resident or "fp",
                                     dispatch_window=dispatch_window,
-                                    chunked_prefill=chunked_prefill)
+                                    chunked_prefill=chunked_prefill,
+                                    mesh=mesh)
         events: list[SessionEvent] = []
         arrivals = self.stage_arrival_times()
         feed_until = self._make_feeder(client, events)

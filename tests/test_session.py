@@ -462,3 +462,26 @@ def test_serving_session_upgrades_do_not_double_ingest(served):
     # one container dtype in this model -> exactly n_stages launches
     assert ops.LAUNCH_COUNTS["plane_or_segments"] == prog.n_stages
     assert ops.LAUNCH_COUNTS["plane_or"] == 0
+
+
+def test_run_serving_resident_conflicts_with_speculative(served):
+    """``resident`` used to be silently ignored when ``speculative``
+    was set (the draft view fixes residency at 'quantized'); the
+    contradiction must be an explicit error, in both serving shapes,
+    before any engine is built."""
+    from repro.serving.speculative import SpecConfig
+
+    cfg, model, params, prog, blob, batch = served
+    session = Session(blob, BandwidthTrace.constant(1e6))
+    spec = SpecConfig(draft_bits=4, k=2)
+    with pytest.raises(ValueError, match="resident"):
+        session.run_serving(model, prog, decode_steps=2, batch=batch,
+                            resident="quantized", speculative=spec)
+    with pytest.raises(ValueError, match="resident"):
+        session.run_serving(model, prog, decode_steps=2, batch=batch,
+                            resident="fp", speculative=True)
+    prompts = [batch["tokens"][0]]
+    with pytest.raises(ValueError, match="resident"):
+        session.run_serving_pool(model, prog, prompts=prompts,
+                                 max_new_tokens=2, resident="quantized",
+                                 speculative=spec)

@@ -709,3 +709,125 @@ def test_pool_mixed_budgets_freeze_finished_slots():
         srv.start({"tokens": prompts[rid][None]})
         want = np.asarray(srv.decode(b).tokens)[0].tolist()
         assert out[rid] == want, f"rid {rid}"
+
+
+# ---------------------------------------------------------------------------
+# hardening: verify headroom is VALIDATED up front, never clamped
+# ---------------------------------------------------------------------------
+
+def test_construction_rejects_missing_verify_headroom():
+    """The T-wide verify block writes k_max + 1 rows past the base
+    position; a cache without that headroom used to clamp the write
+    onto live KV rows silently. Both serving shapes must refuse to
+    construct (mirroring SlotPoolEngine.submit's prompt+budget
+    check)."""
+    _, model, params = _tiny()
+    prog = divide(params)
+    spec = SpecConfig(draft_bits=4, k=4, k_max=4)
+    with pytest.raises(ValueError, match="k_max"):
+        SpeculativeEngine(model, prog, max_len=spec.k_max + 1, spec=spec)
+    with pytest.raises(ValueError, match="k_max"):
+        SpeculativeSlotPool(model, prog, n_slots=2,
+                            max_len=spec.k_max + 1, spec=spec)
+    # the floor itself constructs
+    SpeculativeEngine(model, prog, max_len=spec.k_max + 2, spec=spec)
+
+
+def test_start_and_decode_reject_insufficient_headroom():
+    """Per-prompt and per-decode forms of the same invariant: start()
+    needs prompt + k_max + 1 rows, decode() needs the final round's
+    verify block to fit — both raise BEFORE any device work instead of
+    letting write_kv_slot clamp."""
+    _, model, params = _tiny()
+    prog = divide(params)
+    spec = SpecConfig(draft_bits=4, k=3, k_max=3)
+    eng = SpeculativeEngine(model, prog, max_len=12, spec=spec)
+    eng.receive_stage()
+    long_prompt = jnp.zeros((1, 9), jnp.int32)  # 9 + 3 + 1 > 12
+    with pytest.raises(ValueError, match="headroom"):
+        eng.start({"tokens": long_prompt})
+    eng.start({"tokens": jnp.zeros((1, 8), jnp.int32)})
+    # pos 8: 8 + steps + k_max - 1 <= 12 allows steps <= 2
+    with pytest.raises(ValueError, match="max_len"):
+        eng.decode(3)
+    eng.decode(2)
+
+
+def test_pool_submit_rejects_request_without_headroom():
+    """A request whose prompt + budget + k_max exceeds max_len used to
+    be admitted and then clamp k near its budget end (extra verify
+    shapes); now submit raises up front, like the plain pool's
+    prompt+budget check."""
+    _, model, params = _tiny()
+    prog = divide(params)
+    spec = SpecConfig(draft_bits=4, k=3, k_max=3)
+    pool = SpeculativeSlotPool(model, prog, n_slots=2, max_len=16,
+                               spec=spec)
+    pool.receive_stage()
+    with pytest.raises(ValueError, match="verify headroom"):
+        pool.submit(PoolRequest(
+            rid=0, prompt=jnp.zeros((8,), jnp.int32), max_new_tokens=6))
+    pool.submit(PoolRequest(
+        rid=1, prompt=jnp.zeros((8,), jnp.int32), max_new_tokens=5))
+
+
+def test_tight_max_len_keeps_two_executables():
+    """Generation driven to the exact end of the tightest legal cache:
+    the 2-executable invariant must hold for the WHOLE session. Under
+    the old end-of-generation clamp, k_eff = min(k, room) shrank on the
+    final rounds and compiled one extra verify shape per distinct
+    clamped k; validated headroom makes the clamp dead and this pins
+    it."""
+    cfg, model, params = _tiny()
+    prog = divide(params)
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (2, 8), 0,
+                                cfg.vocab).astype(jnp.int32)
+    steps = 10
+    spec_cfg = SpecConfig(draft_bits=4, k=3, k_max=3)
+    # tightest max_len decode() accepts: prompt + steps + k_max - 1
+    max_len = 8 + steps + spec_cfg.k_max - 1
+    spec = SpeculativeEngine(model, prog, max_len=max_len, spec=spec_cfg)
+    plain = ProgressiveServer(model, prog, max_len=8 + steps,
+                              resident="quantized")
+    for _ in range(prog.n_stages):
+        spec.receive_stage()
+        plain.receive_stage()
+    spec.start({"tokens": tokens})
+    plain.start({"tokens": tokens})
+    got = np.asarray(spec.decode(steps).tokens)
+    want = np.asarray(plain.decode(steps).tokens)
+    np.testing.assert_array_equal(got, want)
+    assert spec.decode_cache_size() == 2, \
+        "end-of-generation rounds must not compile clamped verify shapes"
+
+
+def test_pool_tight_max_len_keeps_two_executables():
+    """Pool analogue: budgets met exactly against the tightest max_len
+    submit() accepts (prompt + budget + k_max), full token identity,
+    two executables across the whole run."""
+    cfg, model, params = _tiny()
+    prog = divide(params)
+    steps = 8
+    spec_cfg = SpecConfig(draft_bits=4, k=3, k_max=3)
+    prompts = [jax.random.randint(jax.random.PRNGKey(60 + i), (8,), 0,
+                                  cfg.vocab).astype(jnp.int32)
+               for i in range(3)]
+    max_len = 8 + steps + spec_cfg.k_max
+    pool = SpeculativeSlotPool(model, prog, n_slots=2, max_len=max_len,
+                               spec=spec_cfg, dispatch_window=2)
+    for _ in range(prog.n_stages):
+        pool.receive_stage()
+    for i, p in enumerate(prompts):
+        pool.submit(PoolRequest(rid=i, prompt=p, max_new_tokens=steps))
+    out = pool.run()
+    assert pool.decode_cache_size() == 2, \
+        "budget-end rounds must not clamp k into extra verify shapes"
+    for rid, p in enumerate(prompts):
+        srv = ProgressiveServer(model, prog, max_len=8 + steps,
+                                resident="quantized")
+        for _ in range(prog.n_stages):
+            srv.receive_stage()
+        srv.start({"tokens": p[None]})
+        want = np.asarray(srv.decode(steps).tokens)[0].tolist()
+        assert out[rid] == want, f"rid {rid}"
+        assert len(out[rid]) == steps
