@@ -1,0 +1,98 @@
+"""Calibration bench: what the accuracy-per-byte wire costs and buys.
+
+Times the context-aware greedy calibration pass on the trained reduced
+LM, then reports the v2 stream's byte economics against the v1 uniform
+ladder: total bytes (raw vs entropy-coded), per-mode unit counts, and
+the accuracy-per-byte curves from the Table-2 machinery. Writes
+``artifacts/bench/BENCH_calibration.json`` (mirrored to the repo root
+by ``benchmarks.run``).
+
+    PYTHONPATH=src python -m benchmarks.calibration [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.core import entropy, wire
+from repro.core.calibrate import uniform_schedule
+from repro.core.progressive import divide
+
+OUT_PATH = "artifacts/bench/BENCH_calibration.json"
+MODE_NAMES = {entropy.MODE_RAW: "raw", entropy.MODE_RLE: "rle",
+              entropy.MODE_RANS: "rans"}
+
+
+def _unit_mode_counts(blob: bytes) -> dict[str, int]:
+    """Count per-unit entropy modes by walking the framed stream."""
+    meta, hdr = wire.decode_header(blob)
+    layout = wire.layout_from_header(meta, hdr)
+    counts = {name: 0 for name in MODE_NAMES.values()}
+    off = hdr
+    for stage in layout.stages:
+        for (_, _, nbytes, _) in stage:
+            counts[MODE_NAMES[blob[off]]] += 1
+            off += nbytes
+    return counts
+
+
+def bench(quick: bool = False) -> dict:
+    from benchmarks.table2_accuracy import _lm_setup, accuracy_per_byte_lm
+
+    setup = _lm_setup(quick)
+    _, _, params, _, _ = setup
+    prog = divide(params)
+
+    t0 = time.time()
+    apb = accuracy_per_byte_lm(setup)  # calibrates + builds + evaluates
+    apb_s = time.time() - t0
+
+    blob_v1 = wire.encode(prog)
+    blob_v2_raw = wire.encode(prog, schedule=uniform_schedule(prog),
+                              entropy_coded=False)
+    blob_v2_coded = wire.encode(prog, schedule=uniform_schedule(prog),
+                                entropy_coded=True)
+    return {
+        "bench": "calibration",
+        "model": apb["model"],
+        "calibrate_and_eval_s": apb_s,
+        "n_units": apb["schedule_units"],
+        "bytes": {
+            "v1_raw_uniform": len(blob_v1),
+            "v2_raw_uniform": len(blob_v2_raw),
+            "v2_coded_uniform": len(blob_v2_coded),
+            "v2_coded_scheduled": apb["scheduled_coded_total_bytes"],
+        },
+        "unit_modes": _unit_mode_counts(blob_v2_coded),
+        "accuracy_per_byte": apb,
+    }
+
+
+def main(quick: bool = False, out: str = OUT_PATH) -> None:
+    result = bench(quick)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+
+    print("\n== calibration: accuracy-per-byte wire economics ==")
+    b = result["bytes"]
+    print(f"v1 raw uniform stream:     {b['v1_raw_uniform']:>10,} bytes")
+    print(f"v2 raw uniform stream:     {b['v2_raw_uniform']:>10,} bytes "
+          f"(framed header overhead)")
+    print(f"v2 coded uniform stream:   {b['v2_coded_uniform']:>10,} bytes")
+    print(f"v2 coded calibrated:       {b['v2_coded_scheduled']:>10,} bytes")
+    print(f"unit entropy modes: {result['unit_modes']} "
+          f"({result['n_units']} units)")
+    print(f"calibration + curve eval: {result['calibrate_and_eval_s']:.1f}s")
+    assert b["v2_coded_scheduled"] <= b["v1_raw_uniform"], \
+        "coded stream must not exceed the raw uniform stream"
+    print(f"-> {out}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    main(quick=args.quick)

@@ -35,12 +35,14 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: table1,table2,table3,"
                          "roofline,upgrade_latency,resident_serving,"
-                         "serving_throughput,speculative_decode")
+                         "serving_throughput,speculative_decode,"
+                         "calibration")
     args = ap.parse_args()
 
     from benchmarks import table1_execution_time, table2_accuracy, table3_ttfi
-    from benchmarks import resident_serving, roofline, serving_throughput
-    from benchmarks import speculative_decode, upgrade_latency
+    from benchmarks import calibration, resident_serving, roofline
+    from benchmarks import serving_throughput, speculative_decode
+    from benchmarks import upgrade_latency
 
     benches = {
         "table1": table1_execution_time,
@@ -51,6 +53,7 @@ def main() -> None:
         "resident_serving": resident_serving,
         "serving_throughput": serving_throughput,
         "speculative_decode": speculative_decode,
+        "calibration": calibration,
     }
     selected = (args.only.split(",") if args.only else list(benches))
 

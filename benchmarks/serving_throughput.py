@@ -232,6 +232,12 @@ def bench_multi_device(model, prog, cfg, *, n_slots: int, decode_steps: int,
             assert pool.stage == prog.n_stages
             assert pool.decode_cache_size() == 1, \
                 "sharded upgrades must not recompile the decode step"
+            # double_buffer=True semantics: every sharded upgrade is an
+            # enqueue — no block_until_ready fence anywhere in the log
+            assert pool.double_buffer
+            assert all(e["double_buffer"] and e["sharded"]
+                       for e in pool.upgrade_log), \
+                "sharded upgrades must run double-buffered (enqueue-only)"
             n_up = max(len(pool.upgrades), 1)
             row = {
                 "n_devices": n_dev,
@@ -242,6 +248,16 @@ def bench_multi_device(model, prog, cfg, *, n_slots: int, decode_steps: int,
                 "tokens_per_s": sum(len(v) for v in out.values()) / wall,
                 "n_upgrades": len(pool.upgrades),
                 "upgrade_stall_ms_mean": pool.upgrade_stall_s * 1e3 / n_up,
+                "upgrade_enqueue_ms_mean":
+                    pool.upgrade_enqueue_s * 1e3 / n_up,
+                "upgrade_fence_ms_mean":
+                    (pool.upgrade_stall_s - pool.upgrade_enqueue_s)
+                    * 1e3 / n_up,
+                "upgrade_ingest_ms_mean": sum(
+                    e["ingest_s"] for e in pool.upgrade_log) * 1e3 / n_up,
+                "upgrade_refresh_ms_mean": sum(
+                    e["refresh_s"] for e in pool.upgrade_log) * 1e3 / n_up,
+                "double_buffer": True,
                 "decode_cache_size": pool.decode_cache_size(),
             }
     row["token_identical_to_single_device"] = streams[True] == streams[False]

@@ -15,17 +15,24 @@ at each stage + top-1 agreement with the fp32 model.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.configs.progressivenet_cnn import cnn_apply, cnn_init
-from repro.core.progressive import divide, ReceiverState
+from repro.core import wire
+from repro.core.calibrate import calibrate_schedule
+from repro.core.progressive import divide, rebuild_params, ReceiverState
 from repro.models.model import build_model
 from repro.train import optimizer as opt
 from repro.train.data import DataConfig, MarkovMotifDataset
 from repro.train.loop import train
+from repro.transmission.client import ProgressiveClient
 
 STAGE_BITS = [2, 4, 6, 8, 10, 12, 14, 16]
 
@@ -93,7 +100,9 @@ def accuracy_curve_cnn(quick: bool = False) -> dict:
 
 # -- small LM ------------------------------------------------------------------
 
-def accuracy_curve_lm(quick: bool = False) -> dict:
+def _lm_setup(quick: bool = False):
+    """Train the reduced LM once; both the per-stage accuracy curve and
+    the accuracy-per-byte (scheduled + entropy-coded) row reuse it."""
     cfg = get_config("olmo-1b").reduced(n_layers=2, d_model=128, d_ff=256,
                                         vocab=64, n_heads=4, n_kv=4)
     model = build_model(cfg)
@@ -115,6 +124,11 @@ def accuracy_curve_lm(quick: bool = False) -> dict:
         pred = jnp.argmax(logits, -1)
         return pred, jnp.mean((pred == batch["labels"]).astype(jnp.float32))
 
+    return cfg, model, params, batch, eval_fn
+
+
+def accuracy_curve_lm(setup) -> dict:
+    _, _, params, _, eval_fn = setup
     full_pred, orig_acc = eval_fn(params)
     prog = divide(params)
     st = ReceiverState.init(prog)
@@ -128,16 +142,87 @@ def accuracy_curve_lm(quick: bool = False) -> dict:
             "bits": STAGE_BITS, "accuracy": curve, "top1_agreement": agree}
 
 
+# -- accuracy per byte: calibrated schedule + entropy coding -------------------
+
+def accuracy_per_byte_lm(setup) -> dict:
+    """The v2 wire's claim in one row: at every byte budget of the
+    uniform ladder, the calibrated schedule + entropy-coded stream must
+    be at least as accurate, and the full-fidelity stream must cost no
+    more bytes than the raw uniform one."""
+    cfg, model, params, _, eval_fn = setup
+    prog = divide(params)
+
+    # calibration batch: same stream family, DIFFERENT seed than eval
+    cal_ds = MarkovMotifDataset(DataConfig(vocab=cfg.vocab, seq_len=64,
+                                           global_batch=16, seed=1))
+    cal_batch = {k: jnp.asarray(v) for k, v in cal_ds.batch(50_000).items()}
+
+    @jax.jit
+    def cal_ce(p):
+        logits, _ = model.forward(p, cal_batch)
+        logp = jax.nn.log_softmax(logits, -1)
+        onehot = jax.nn.one_hot(cal_batch["labels"], cfg.vocab)
+        return -jnp.mean(jnp.sum(onehot * logp, -1))
+
+    def eval_loss(leaves):
+        return float(cal_ce(rebuild_params(prog, leaves)))
+
+    schedule = calibrate_schedule(prog, eval_loss)
+    blob_uni = wire.encode(prog)  # v1 raw stage-major stream
+    blob_sched = wire.encode(prog, schedule=schedule, entropy_coded=True)
+
+    # finer-than-stage byte grid: the uniform ladder saturates within a
+    # stage or two, so per-stage marks alone can't resolve the curve
+    n_marks = 20
+    meta, hdr = wire.decode_header(blob_uni)
+    budgets = [hdr + int(round((len(blob_uni) - hdr) * (k + 1) / n_marks))
+               for k in range(n_marks)]
+
+    shapes = {wire.path_str(p): l.shape
+              for p, l in jax.tree_util.tree_flatten_with_path(params)[0]}
+
+    def acc_at(blob: bytes, budget: int) -> float:
+        client = ProgressiveClient()
+        client.feed(blob[:budget])
+        leaves = {k: jnp.asarray(v).reshape(shapes[k])
+                  for k, v in client.materialize().items()}
+        _, acc = eval_fn(rebuild_params(prog, leaves,
+                                        key_fn=wire.path_str))
+        return float(acc)
+
+    uniform = [acc_at(blob_uni, b) for b in budgets]
+    scheduled = [acc_at(blob_sched, min(b, len(blob_sched)))
+                 for b in budgets]
+    return {"model": "olmo-1b (reduced, trained)",
+            "schedule_units": len(schedule.units),
+            "byte_checkpoints": budgets,
+            "uniform_raw_accuracy": uniform,
+            "scheduled_coded_accuracy": scheduled,
+            "uniform_raw_total_bytes": len(blob_uni),
+            "scheduled_coded_total_bytes": len(blob_sched)}
+
+
 def run(quick: bool = False) -> list[dict]:
-    return [accuracy_curve_cnn(quick), accuracy_curve_lm(quick)]
+    lm = _lm_setup(quick)
+    return [accuracy_curve_cnn(quick), accuracy_curve_lm(lm),
+            accuracy_per_byte_lm(lm)]
 
 
-def main(quick: bool = False) -> None:
+OUT_PATH = "artifacts/bench/BENCH_table2_accuracy.json"
+
+
+def main(quick: bool = False, out: str = OUT_PATH) -> None:
     rows = run(quick)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump({"bench": "table2_accuracy", "quick": quick,
+                   "rows": rows}, f, indent=2, sort_keys=True)
     print("\n== Table 2: accuracy vs received bit-width ==")
     hdr = "model".ljust(28) + "".join(f"{b:>7d}" for b in STAGE_BITS) + "   orig"
     print(hdr)
     for r in rows:
+        if "accuracy" not in r:
+            continue
         print(r["model"].ljust(28)
               + "".join(f"{a:7.3f}" for a in r["accuracy"])
               + f"  {r['orig']:.3f}")
@@ -146,6 +231,41 @@ def main(quick: bool = False) -> None:
         assert abs(r["accuracy"][-1] - r["orig"]) < 0.02, \
             "16-bit stage must match the original model"
 
+    apb = next(r for r in rows if "scheduled_coded_accuracy" in r)
+    print("\n== accuracy per byte: calibrated schedule + entropy coding ==")
+    print("KB".ljust(22) + "".join(
+        f"{b / 1024:6.0f}" for b in apb["byte_checkpoints"]))
+    print("uniform raw (v1)".ljust(22) + "".join(
+        f"{a:6.3f}" for a in apb["uniform_raw_accuracy"]))
+    print("scheduled+coded (v2)".ljust(22) + "".join(
+        f"{a:6.3f}" for a in apb["scheduled_coded_accuracy"]))
+    print(f"total bytes at full fidelity: scheduled+coded "
+          f"{apb['scheduled_coded_total_bytes']:,} vs uniform raw "
+          f"{apb['uniform_raw_total_bytes']:,}")
+    uni = apb["uniform_raw_accuracy"]
+    sch = apb["scheduled_coded_accuracy"]
+    # equal-or-better everywhere, up to held-out argmax noise: at the
+    # saturated plateau both curves wobble by a token or two of the
+    # 4k-token eval batch (~5e-4); NOISE_EPS must swallow that and
+    # nothing more. Strict wins must clear a real margin instead.
+    NOISE_EPS, STRICT_MARGIN = 2e-3, 1e-2
+    assert all(s >= u - NOISE_EPS for s, u in zip(sch, uni)), \
+        f"scheduled+coded curve must dominate the uniform ladder: {sch} vs {uni}"
+    strictly = sum(s > u + STRICT_MARGIN for s, u in zip(sch, uni))
+    assert strictly >= 3, (
+        f"scheduled+coded must be strictly better at >=3 byte "
+        f"checkpoints (got {strictly}): {sch} vs {uni}")
+    assert apb["scheduled_coded_total_bytes"] <= \
+        apb["uniform_raw_total_bytes"], \
+        "entropy-coded stream must not exceed the raw uniform stream"
+    print(f"-> {out}")
+
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="fewer training steps (CI tier-2); the models "
+                         "are already the reduced configs")
+    args = ap.parse_args()
+    main(quick=args.quick or args.reduced)

@@ -79,6 +79,11 @@ def main():
                     help="> 0: serve N staggered clients through the "
                          "continuous-batching slot pool instead of one "
                          "lock-stepped stream")
+    ap.add_argument("--scheduled", action="store_true",
+                    help="stream the v2 wire: weight-SSE calibrated plane "
+                         "order + entropy-coded payloads (decoded "
+                         "transparently by the same client/PlaneStore; "
+                         "final weights bit-identical to the v1 stream)")
     ap.add_argument("--event-log", default=None,
                     help="write the session audit log (JSONL) here")
     args = ap.parse_args()
@@ -87,7 +92,13 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     prog = divide(params)
-    blob = wire.encode(prog)
+    if args.scheduled:
+        from repro.core.calibrate import weight_sse_schedule
+
+        blob = wire.encode(prog, schedule=weight_sse_schedule(prog),
+                           entropy_coded=True)
+    else:
+        blob = wire.encode(prog)
 
     if args.bandwidth_mbps is not None:
         session = Session(blob, BandwidthTrace.constant(args.bandwidth_mbps * 1e6))
@@ -97,7 +108,9 @@ def main():
         session = Session.from_scenario(blob, scenario, seed=args.seed)
         where = f"{scenario.name} (seed {args.seed}): {scenario.description}"
     arrivals = session.stage_arrival_times()
-    print(f"{args.arch} (reduced): {len(blob) / 1e6:.2f} MB over {where}")
+    wire_desc = " (scheduled+coded v2 wire)" if args.scheduled else ""
+    print(f"{args.arch} (reduced): {len(blob) / 1e6:.2f} MB{wire_desc} "
+          f"over {where}")
     print(f"stage arrivals at {[round(a, 2) for a in arrivals]} s")
 
     B, S = 2, 16

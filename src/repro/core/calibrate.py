@@ -1,0 +1,429 @@
+"""Importance calibration: measured accuracy-per-byte plane ordering.
+
+The v1 wire ships planes in fixed stage-major order: stage s carries
+plane s of EVERY tensor, so every byte of a stage buys the same
+"importance" regardless of which tensor it refines. ProgDTD-style
+measurement says the refinement order should be *calibrated*: truncate
+one tensor's planes at a time against a calibration batch, measure the
+loss delta each plane is worth, and ship planes globally in measured
+gain-per-byte order.
+
+:func:`calibrate_schedule` does exactly that, reusing the existing
+truncation machinery (:func:`repro.core.quantize.truncate` over live
+accumulator views — no extra quantization code):
+
+1. build a fully-received :class:`~repro.core.plane_store.PlaneStore`
+   and its float leaves;
+2. for every leaf and every plane boundary ``c_m`` of its schedule,
+   evaluate the calibration loss with THAT leaf truncated to ``c_m``
+   bits and everything else at full precision — the marginal gain of
+   plane ``m`` is the loss drop from ``c_{m-1}`` to ``c_m``;
+3. convexify each tensor's per-plane gain/byte rates (merge consecutive
+   planes until rates are non-increasing — planes of one tensor can
+   only ship MSB-first, so a cheap valuable plane hiding behind an
+   expensive dull one must be bought as a bundle);
+4. merge the per-tensor bundles globally by gain/byte.
+
+The result is a :class:`TransmissionSchedule`: a global (tensor, plane)
+ship order that is MSB-first *within* each tensor (the eq.-(5) affine's
+contiguous-prefix invariant — ``PlaneStore.ingest`` enforces planes
+arrive in schedule order per tensor) while planes interleave freely
+*across* tensors. Checkpoints partition the unit list into the same
+number of "stages" as the uniform ladder, placed at (approximately) the
+uniform ladder's cumulative byte marks, so timeline algebra and serving
+stage semantics carry over unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plane_store import PlaneStore
+from repro.core.quantize import dequantize, truncate
+
+FRAME_BYTES = 2  # per-unit wire frame (entropy mode flag); see core.wire
+
+
+def plane_payload_bytes(shape: Sequence[int], width: int) -> int:
+    """Raw packed bytes of one plane (ceil(n_elements * width / 8))."""
+    n_el = int(np.prod(shape)) if len(shape) else 1
+    return -(-n_el * width // 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransmissionSchedule:
+    """A global ordering of (tensor, plane) shipment units.
+
+    ``units[k] = (tensor_idx, plane_idx)`` with ``plane_idx`` 0-based
+    into the tensor's :class:`~repro.core.bitplanes.PlaneSchedule`;
+    ``checkpoints`` is an ascending list of prefix unit counts — the
+    v2 analogue of stage boundaries (clients flush + report
+    "stage complete" when a checkpoint's last unit lands). The last
+    checkpoint always covers every unit."""
+
+    units: tuple[tuple[int, int], ...]
+    checkpoints: tuple[int, ...]
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.checkpoints)
+
+    def validate(self, plane_counts: Sequence[int]) -> None:
+        """Raise unless this is a complete, MSB-first-per-tensor
+        ordering of every plane of every tensor (``plane_counts[i]`` =
+        tensor i's plane count) with well-formed checkpoints."""
+        want = sum(plane_counts)
+        if len(self.units) != want:
+            raise ValueError(
+                f"{len(self.units)} units for {want} planes")
+        next_plane = [0] * len(plane_counts)
+        for t, p in self.units:
+            if not (0 <= t < len(plane_counts)):
+                raise ValueError(f"unit references tensor {t} of "
+                                 f"{len(plane_counts)}")
+            if p != next_plane[t]:
+                raise ValueError(
+                    f"tensor {t}: plane {p} shipped out of order "
+                    f"(expected {next_plane[t]} — schedules must be "
+                    f"MSB-first within each tensor)")
+            next_plane[t] += 1
+        for t, got in enumerate(next_plane):
+            if got != plane_counts[t]:
+                raise ValueError(
+                    f"tensor {t}: {got} of {plane_counts[t]} planes "
+                    f"scheduled")
+        if not self.checkpoints or list(self.checkpoints) != \
+                sorted(set(self.checkpoints)):
+            raise ValueError("checkpoints must be strictly ascending")
+        if self.checkpoints[0] < 1 or self.checkpoints[-1] != len(self.units):
+            raise ValueError(
+                f"checkpoints must end at {len(self.units)} "
+                f"(got {self.checkpoints})")
+
+    # -- wire serialization (see core.wire v2 header) ----------------------
+    def to_meta(self) -> dict:
+        return {"units": [[t, p] for t, p in self.units],
+                "checkpoints": list(self.checkpoints)}
+
+    @classmethod
+    def from_meta(cls, meta: Mapping) -> "TransmissionSchedule":
+        return cls(units=tuple((int(t), int(p)) for t, p in meta["units"]),
+                   checkpoints=tuple(int(c) for c in meta["checkpoints"]))
+
+
+def uniform_schedule(model) -> TransmissionSchedule:
+    """The v1 stage-major order as a TransmissionSchedule: stage s
+    ships plane s of every tensor in priority order; checkpoints at
+    stage ends. Encoding with this schedule reproduces the uniform
+    ladder's semantics (useful as the entropy-only baseline)."""
+    units: list[tuple[int, int]] = []
+    checkpoints: list[int] = []
+    for s in range(1, model.n_stages + 1):
+        units.extend((i, s - 1) for i, _ in model.stage(s))
+        checkpoints.append(len(units))
+    sched = TransmissionSchedule(units=tuple(units),
+                                 checkpoints=tuple(checkpoints))
+    sched.validate([t.plan.schedule.n_planes for t in model.tensors])
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# sensitivity measurement
+# ---------------------------------------------------------------------------
+
+def _truncated_leaf(store: PlaneStore, idxs: list[int], bits: int):
+    """One float leaf with every slot truncated to ``bits`` received
+    bits (slices restacked along their slice axis). Offline path —
+    eager per-slot dequant is fine here."""
+    parts = []
+    for i in idxs:
+        t = store.slots[i]
+        qt = truncate(store.quantized(i), bits)
+        parts.append((t.slice_idx, t.slice_axis, dequantize(qt)))
+    if len(parts) == 1 and parts[0][1] is None:
+        return parts[0][2]
+    axis = parts[0][1]
+    parts.sort(key=lambda x: x[0])
+    return jnp.stack([v for _, _, v in parts], axis=axis)
+
+
+def measure_plane_gains(model, eval_loss: Callable[[dict], float],
+                        ) -> dict[int, list[float]]:
+    """Per-tensor marginal loss gain of each plane, measured one leaf
+    at a time against everything-else-full-precision.
+
+    ``eval_loss(leaves)`` maps a ``{path: array}`` leaf dict (same keys
+    as ``PlaneStore.materialize_leaves`` on a model-built store) to a
+    scalar calibration loss (lower = better). Returns
+    ``{tensor_idx: [gain_plane_1, ..., gain_plane_P]}`` — slices of one
+    leaf share their key's measurement (their planes ship adjacently
+    anyway, and per-slice evals would multiply calibration cost by the
+    slice count)."""
+    store = PlaneStore.from_model(model)
+    for s in range(1, model.n_stages + 1):
+        store.ingest(model.stage(s))
+    full = dict(store.materialize_leaves())
+
+    by_key: dict = {}
+    for i, slot in enumerate(store.slots):
+        by_key.setdefault(slot.key, []).append(i)
+
+    base = float(eval_loss(full))
+    gains: dict[int, list[float]] = {}
+    for key, idxs in by_key.items():
+        sched = store.slots[idxs[0]].schedule
+        levels = [0] + list(sched.cumulative_bits)  # c_0=0 .. c_P=bits
+        losses = []
+        for m in levels[:-1]:
+            leaves = dict(full)
+            leaves[key] = _truncated_leaf(store, idxs, m)
+            losses.append(float(eval_loss(leaves)))
+        losses.append(base)  # full precision == baseline
+        per_plane = [max(losses[p] - losses[p + 1], 0.0)
+                     for p in range(sched.n_planes)]
+        for i in idxs:
+            gains[i] = list(per_plane)
+    return gains
+
+
+# ---------------------------------------------------------------------------
+# schedule construction
+# ---------------------------------------------------------------------------
+
+def _convexify(gains: Sequence[float], costs: Sequence[int]
+               ) -> list[tuple[int, int, float, int]]:
+    """Merge consecutive planes of ONE tensor into bundles with
+    non-increasing gain/byte: a later plane scoring higher than its
+    predecessor can only be bought together with it (MSB-first), so
+    they fuse into one unit-sequence with the averaged rate. Returns
+    ``[(p_start, p_end_exclusive, gain_sum, byte_sum), ...]``."""
+    out: list[list] = []
+    for p, (g, c) in enumerate(zip(gains, costs)):
+        cur = [p, p + 1, float(g), int(c)]
+        while out and cur[2] * out[-1][3] > out[-1][2] * cur[3]:
+            prev = out.pop()
+            cur = [prev[0], cur[1], prev[2] + cur[2], prev[3] + cur[3]]
+        out.append(cur)
+    return [tuple(b) for b in out]
+
+
+def _checkpoints_at(unit_bytes: Sequence[int],
+                    targets: Sequence[int]) -> tuple[int, ...]:
+    """Prefix unit counts whose cumulative bytes first reach each
+    target (the uniform ladder's stage byte marks), strictly
+    increasing, last covering everything."""
+    cum = np.cumsum(unit_bytes)
+    cps: list[int] = []
+    for t in targets[:-1]:
+        k = int(np.searchsorted(cum, t)) + 1
+        k = min(k, len(unit_bytes))
+        if cps and k <= cps[-1]:
+            k = cps[-1] + 1
+        if k >= len(unit_bytes):
+            break
+        cps.append(k)
+    cps.append(len(unit_bytes))
+    return tuple(cps)
+
+
+def _finalize(model, units: Sequence[tuple[int, int]],
+              n_checkpoints: int | None) -> TransmissionSchedule:
+    """Attach uniform-ladder byte-mark checkpoints to a unit order and
+    validate it."""
+    n_cp = n_checkpoints or model.n_stages
+    uni_targets = np.cumsum(
+        [model.stage_payload_bytes(s)
+         + FRAME_BYTES * len(model.stage(s))
+         for s in range(1, model.n_stages + 1)])
+    if n_cp != model.n_stages:
+        total = float(uni_targets[-1])
+        uni_targets = np.asarray(
+            [total * (k + 1) / n_cp for k in range(n_cp)])
+    unit_bytes = [plane_payload_bytes(model.tensors[t].shape,
+                                      model.tensors[t].plan.schedule.widths[p])
+                  + FRAME_BYTES
+                  for t, p in units]
+    sched = TransmissionSchedule(
+        units=tuple(units),
+        checkpoints=_checkpoints_at(unit_bytes, list(uni_targets)))
+    sched.validate([t.plan.schedule.n_planes for t in model.tensors])
+    return sched
+
+
+def build_schedule(model, gains: Mapping[int, Sequence[float]],
+                   *, n_checkpoints: int | None = None
+                   ) -> TransmissionSchedule:
+    """Greedy gain-per-byte global ordering under the MSB-first-per-
+    tensor constraint. Each tensor's planes are convexified into
+    bundles (non-increasing rate), bundles merge across tensors by
+    rate; checkpoints land at the uniform ladder's cumulative byte
+    marks so stage-indexed consumers keep their semantics."""
+    bundles: list[tuple[float, int, int, list[tuple[int, int]]]] = []
+    for i, t in enumerate(model.tensors):
+        sched = t.plan.schedule
+        costs = [plane_payload_bytes(t.shape, w) + FRAME_BYTES
+                 for w in sched.widths]
+        g = list(gains.get(i, [0.0] * sched.n_planes))
+        if len(g) != sched.n_planes:
+            raise ValueError(
+                f"tensor {i}: {len(g)} gains for {sched.n_planes} planes")
+        for (p0, p1, gsum, csum) in _convexify(g, costs):
+            rate = gsum / max(csum, 1)
+            bundles.append((rate, i, p0,
+                            [(i, p) for p in range(p0, p1)]))
+    # stable descending-rate merge; (tensor, plane) tie-break keeps the
+    # order deterministic and per-tensor bundles in MSB-first order
+    # (convexified rates are non-increasing within a tensor; strictly
+    # equal rates fall back to plane order)
+    bundles.sort(key=lambda b: (-b[0], b[1], b[2]))
+    units: list[tuple[int, int]] = []
+    for _, _, _, us in bundles:
+        units.extend(us)
+    return _finalize(model, units, n_checkpoints)
+
+
+def greedy_schedule(model, eval_loss: Callable[[dict], float],
+                    *, n_checkpoints: int | None = None
+                    ) -> TransmissionSchedule:
+    """Context-aware greedy forward selection: walk the refinement
+    ladder from all-tensors-at-zero-bits, and at every step evaluate
+    each leaf's NEXT plane against the CURRENT partial model, shipping
+    the one with the best measured loss drop per byte.
+
+    One-leaf-at-a-time marginal gains (:func:`measure_plane_gains`)
+    price every plane against a full-precision context, which overvalues
+    deep planes of important tensors: the greedy merge then spends an
+    early budget finishing one tensor while others sit at zero received
+    bits — and a leaf at m=0 dequantizes to its range centre, which is
+    catastrophic. Evaluating candidates in the *current* context prices
+    exactly the decision the scheduler makes, so broad MSB coverage
+    emerges naturally (while a plane the model provably doesn't care
+    about still sinks to the tail). Slices of one leaf advance together,
+    like everywhere else in calibration.
+
+    Greedy-per-byte alone has one failure mode left: *complementary*
+    tensors. Refining only one of two jointly-required tensors measures
+    ~zero gain, so pure greedy can postpone BOTH behind cheap trivia —
+    and the effect recurs at every refinement level, not just the first
+    plane. Selection is therefore wave-banded: a leaf may run at most
+    one level ahead of the slowest unfinished leaf, and measured
+    gain-per-byte only decides the order *within* the current wave.
+    Each wave then completes in measured-best-first order, so at any
+    byte budget the stream carries the uniform ladder's coverage plus
+    the most valuable planes of the next level — never a deep dive into
+    one tensor while another sits broken."""
+    store = PlaneStore.from_model(model)
+    for s in range(1, model.n_stages + 1):
+        store.ingest(model.stage(s))
+
+    by_key: dict = {}
+    for i, slot in enumerate(store.slots):
+        by_key.setdefault(slot.key, []).append(i)
+    keys = list(by_key)
+
+    leaf_cache: dict = {}
+
+    def leaf_at(key, level: int):
+        if (key, level) not in leaf_cache:
+            sched = store.slots[by_key[key][0]].schedule
+            bits = ([0] + list(sched.cumulative_bits))[level]
+            leaf_cache[(key, level)] = _truncated_leaf(
+                store, by_key[key], bits)
+        return leaf_cache[(key, level)]
+
+    def level_bytes(key, level: int) -> int:
+        # on-wire cost of shipping plane `level` of every slice of key
+        total = 0
+        for i in by_key[key]:
+            t = model.tensors[i]
+            total += plane_payload_bytes(
+                t.shape, t.plan.schedule.widths[level]) + FRAME_BYTES
+        return total
+
+    levels = {key: 0 for key in keys}
+    current = {key: leaf_at(key, 0) for key in keys}
+    cur_loss = float(eval_loss(current))
+    units: list[tuple[int, int]] = []
+    while True:
+        active = [k for k in keys
+                  if levels[k] < store.slots[by_key[k][0]].schedule.n_planes]
+        if not active:
+            break
+        wave = min(levels[k] for k in active)
+        active = [k for k in active if levels[k] == wave]
+        best = None
+        for key in active:
+            cand = dict(current)
+            cand[key] = leaf_at(key, levels[key] + 1)
+            loss = float(eval_loss(cand))
+            rate = (cur_loss - loss) / level_bytes(key, levels[key])
+            if best is None or rate > best[0]:
+                best = (rate, key, loss)
+        _, key, loss = best
+        units.extend((i, levels[key]) for i in by_key[key])
+        levels[key] += 1
+        current[key] = leaf_at(key, levels[key])
+        cur_loss = loss
+    return _finalize(model, units, n_checkpoints)
+
+
+def weight_sse_schedule(model, *, n_checkpoints: int | None = None
+                        ) -> TransmissionSchedule:
+    """Task-data-free proxy calibration: score each truncation by its
+    summed squared weight error against the fully-received model.
+
+    This is the serving-side default when no calibration batch exists
+    (e.g. an un-finetuned bench model): SSE prices a plane by how much
+    signal it restores, which already separates wide-range / large
+    tensors from trivia. Under an additive per-leaf loss a leaf's
+    marginal doesn't depend on the context it's measured in, so the
+    greedy ladder would buy nothing — and SSE against the full model
+    has a closed form: truncating at plane boundary p drops exactly the
+    value carried by planes p..P-1 while the affine intercept cancels
+    in the difference, so ``SSE(p) = Σ (scale · Σ_{j>=p} plane_j <<
+    shift_j)²``. Computed straight off the server-side
+    ``TensorPlanes.planes`` in one reverse numpy sweep — no PlaneStore
+    build, no ingest launches, no jit (on the paper-regime bench models
+    the eval-loss route costs minutes; this is seconds). Each slice of
+    a sliced bank scores with its own range, matching the per-unit
+    granularity the v2 wire ships at."""
+    from repro.core.quantize import affine_span
+
+    gains: dict[int, list[float]] = {}
+    for i, t in enumerate(model.tensors):
+        sched = t.plan.schedule
+        bits = sched.bits
+        cum = list(sched.cumulative_bits)  # c_1 .. c_P (c_P == bits)
+        scale = np.asarray(affine_span(t.lo, t.hi),
+                           np.float64) * 0.5 ** bits
+        # float64 holds bits <= 16 plane arithmetic exactly
+        resid = np.zeros(t.shape if t.shape else (), np.float64)
+        sse = [0.0] * (sched.n_planes + 1)
+        for p in range(sched.n_planes - 1, -1, -1):
+            resid = resid + (np.asarray(t.planes[p]).astype(np.float64)
+                             * 2.0 ** (bits - cum[p]))
+            sse[p] = float(np.sum((scale * resid) ** 2))
+        gains[i] = [max(sse[p] - sse[p + 1], 0.0)
+                    for p in range(sched.n_planes)]
+    return build_schedule(model, gains, n_checkpoints=n_checkpoints)
+
+
+def calibrate_schedule(model, eval_loss: Callable[[dict], float],
+                       *, n_checkpoints: int | None = None,
+                       method: str = "greedy") -> TransmissionSchedule:
+    """Measure + build in one call (see module docstring).
+
+    ``method="greedy"`` (default) runs :func:`greedy_schedule`'s
+    context-aware forward selection; ``method="marginal"`` runs the
+    cheaper one-leaf-at-a-time :func:`measure_plane_gains` +
+    :func:`build_schedule` pipeline."""
+    if method == "greedy":
+        return greedy_schedule(model, eval_loss,
+                               n_checkpoints=n_checkpoints)
+    if method == "marginal":
+        gains = measure_plane_gains(model, eval_loss)
+        return build_schedule(model, gains, n_checkpoints=n_checkpoints)
+    raise ValueError(f"unknown calibration method {method!r}")

@@ -42,9 +42,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bitplanes import PlaneSchedule
-from repro.core.quantize import (QuantizedTensor, container_dtype,
-                                 dequant_affine, dequant_constants,
-                                 dequantize_buffers)
+from repro.core.quantize import (QuantizedTensor, affine_span,
+                                 container_dtype, dequant_affine,
+                                 dequant_constants, dequantize_buffers)
 from repro.kernels import ops
 
 # One grid step of plane_or_segments: 8 sublanes x 128 lanes.
@@ -166,6 +166,10 @@ class PlaneStore:
         # stacked eq.-(5) constants per batch of slot indices; lo/hi/
         # bits never change after the header, so never invalidated
         self._consts_cache: dict[tuple, tuple] = {}
+        # per-key quantized-view affine constants (placed lo/hi/scale +
+        # host lo/span mirrors); m-independent, so — unlike
+        # _qleaf_cache — survives every ingest
+        self._qmeta_cache: dict[Any, dict] = {}
 
     # -- construction ------------------------------------------------------
     @staticmethod
@@ -233,6 +237,7 @@ class PlaneStore:
         new._qtrunc_cache = dict(self._qtrunc_cache)
         new._acc_cache = dict(self._acc_cache)
         new._consts_cache = dict(self._consts_cache)
+        new._qmeta_cache = dict(self._qmeta_cache)
         return new
 
     # -- views -------------------------------------------------------------
@@ -503,18 +508,58 @@ class PlaneStore:
                 a = a.reshape(tuple(shp))
             return jnp.broadcast_to(a, meta_shape)
 
-        ms = [received_bits(s.schedule, self.received[i]) for i, s in order]
-        affines = [dequant_affine(s.lo, s.hi, s.bits, m)
-                   for (_, s), m in zip(order, ms)]
+        # Only `offset` and `received_bits` depend on the planes
+        # received so far; lo/hi/scale are fixed at the header. They are
+        # built (and their host mirrors captured) exactly once per key,
+        # so a precision upgrade's metadata refresh is a handful of
+        # dispatches, not a per-slice eager affine recomputation — the
+        # host cost that made sharded upgrades look like stalls.
+        const = self._qmeta_cache.get(key)
+        if const is None:
+            scales = [dequant_affine(s.lo, s.hi, s.bits)[0]
+                      for _, s in order]
+            spans = [affine_span(s.lo, s.hi) for _, s in order]
+            const = {
+                "lo": place([s.lo for _, s in order], jnp.float32),
+                "hi": place([s.hi for _, s in order], jnp.float32),
+                "scale": place(scales, jnp.float32),
+                # exact f32 bits of the jnp computation, pulled once
+                "lo_np": np.asarray(jnp.stack(
+                    [jnp.asarray(s.lo, jnp.float32) for _, s in order])),
+                "span_np": np.asarray(jnp.stack(spans)),
+            }
+            self._qmeta_cache[key] = const
+        ms = np.asarray([received_bits(s.schedule, self.received[i])
+                         for i, s in order], np.int32)
+        # offset = lo + span * 0.5**(m+1): same two f32 ops on the same
+        # f32 values as dequant_affine (its m == 0 branch equals the
+        # closed form at m = 0), so the recompute is bit-identical
+        half_lsb = np.ldexp(np.float32(1.0), -(ms + 1)).astype(np.float32)
+        off = const["lo_np"] + const["span_np"] * half_lsb
+
+        def shape_np(a: np.ndarray) -> np.ndarray:
+            """Host-side reshape/broadcast — free views, no dispatch."""
+            if ax is not None:
+                shp = [1] * q.ndim
+                shp[ax] = len(order)
+                a = a.reshape(tuple(shp))
+            return np.ascontiguousarray(np.broadcast_to(a, meta_shape))
+
+        # both per-upgrade metadata fields in ONE transfer
+        off_b, ms_b = shape_np(off.astype(np.float32)), shape_np(ms)
+        if self.device is None:
+            off_d, ms_d = jnp.asarray(off_b), jnp.asarray(ms_b)
+        else:
+            off_d, ms_d = jax.device_put((off_b, ms_b), self.device)
         return QuantizedTensor(
             q=q,
-            lo=place([s.lo for _, s in order], jnp.float32),
-            hi=place([s.hi for _, s in order], jnp.float32),
+            lo=const["lo"],
+            hi=const["hi"],
             bits=slots[0].bits,
             orig_dtype=slots[0].orig_dtype,
-            scale=place([a[0] for a in affines], jnp.float32),
-            offset=place([a[1] for a in affines], jnp.float32),
-            received_bits=place(ms, jnp.int32),
+            scale=const["scale"],
+            offset=off_d,
+            received_bits=ms_d,
         )
 
     def quantized_leaves(self, eligible=None, *, bits: int | None = None
@@ -693,6 +738,9 @@ class ShardedPlaneStore:
         self._g_leaf_cache: dict[Any, jax.Array] = {}
         self._g_qleaf_cache: dict[Any, QuantizedTensor] = {}
         self._g_qtrunc_cache: dict[tuple, QuantizedTensor] = {}
+        # globally-placed lo/hi/scale per key (m-independent — survives
+        # ingest; only offset/received_bits reassemble per upgrade)
+        self._g_qmeta_cache: dict[Any, dict] = {}
 
     def _split_axis(self, entry: dict) -> int | None:
         """Dim to split a dense tensor on, from the serving sharding
@@ -733,6 +781,7 @@ class ShardedPlaneStore:
         new._g_leaf_cache = dict(self._g_leaf_cache)
         new._g_qleaf_cache = dict(self._g_qleaf_cache)
         new._g_qtrunc_cache = dict(self._g_qtrunc_cache)
+        new._g_qmeta_cache = dict(self._g_qmeta_cache)
         return new
 
     # -- basic views -------------------------------------------------------
@@ -797,8 +846,16 @@ class ShardedPlaneStore:
             key = self.keys[idx]
             kind, ax = self._route[key]
             if kind == "split":
-                arr = np.asarray(plane).reshape(self.shapes[idx])
-                pieces = np.split(arr, self._n_model, axis=ax)
+                # Host planes (the wire path) split on host — zero-copy
+                # views, one direct H2D per shard. Device-resident
+                # planes (pull-mode serving) split ON DEVICE: np.asarray
+                # here would be a blocking D2H sync on the upgrade path.
+                if isinstance(plane, jax.Array):
+                    arr = jnp.reshape(plane, self.shapes[idx])
+                    pieces = jnp.split(arr, self._n_model, axis=ax)
+                else:
+                    arr = np.asarray(plane).reshape(self.shapes[idx])
+                    pieces = np.split(arr, self._n_model, axis=ax)
                 for (j, lidx), piece in zip(self._placement[idx], pieces):
                     sub_items[j].append((lidx, piece))
             else:
@@ -827,10 +884,13 @@ class ShardedPlaneStore:
         from jax.sharding import NamedSharding
 
         sharding = NamedSharding(self.mesh, spec)
-        arrs = []
-        for i in range(self._n_data):
-            for j, p in enumerate(pieces):
-                arrs.append(jax.device_put(p, self._devs[i, j]))
+        # one batched transfer for all (data row, shard) targets — the
+        # per-piece device_put loop was most of an upgrade's assembly
+        # dispatch cost
+        srcs = [p for _ in range(self._n_data) for p in pieces]
+        devs = [self._devs[i, j] for i in range(self._n_data)
+                for j in range(len(pieces))]
+        arrs = jax.device_put(srcs, devs)
         return jax.make_array_from_single_device_arrays(
             tuple(global_shape), sharding, arrs)
 
@@ -904,10 +964,27 @@ class ShardedPlaneStore:
         return got
 
     def _quantized_leaf(self, key) -> QuantizedTensor | None:
+        # lo/hi/scale are fixed at the header, so their global placement
+        # (_g_qmeta_cache) happens once per key; an upgrade's refresh
+        # only reassembles q + offset + received_bits — the per-upgrade
+        # host dispatch count is what makes sharded upgrades enqueues.
         kind, ax = self._route[key]
+        const_fields = ("lo", "hi", "scale")
+        live_fields = ("offset", "received_bits")
         if kind == "whole":
             local = self._sub_qleaf(ax, key)
-            return None if local is None else self._replicated(local)
+            if local is None:
+                return None
+            const = self._g_qmeta_cache.get(key)
+            if const is None:
+                const = {f: self._replicated(getattr(local, f))
+                         for f in const_fields}
+                self._g_qmeta_cache[key] = const
+            q_r, off_r, rb_r = self._replicated(
+                (local.q, local.offset, local.received_bits))
+            return QuantizedTensor(
+                q=q_r, bits=local.bits, orig_dtype=local.orig_dtype,
+                offset=off_r, received_bits=rb_r, **const)
         shards = sorted(self._local_by_key[key])
         locals_ = [self._sub_qleaf(j, key) for j in shards]
         if any(l is None for l in locals_):
@@ -917,7 +994,7 @@ class ShardedPlaneStore:
         gshape[ax] *= self._n_model
         q = self._assemble([l.q for l in locals_], tuple(gshape),
                            self._spec_at(len(gshape), ax))
-        fields = ("lo", "hi", "scale", "offset", "received_bits")
+        const = self._g_qmeta_cache.get(key)
         if ax < len(gshape) - 2:
             # the sharded dim survives into the metadata shape
             # (q.shape[:-2] + (1, 1)): shard the metadata exactly like
@@ -926,16 +1003,26 @@ class ShardedPlaneStore:
             mshape = list(l0.scale.shape)
             mshape[ax] *= self._n_model
             mspec = self._spec_at(len(mshape), ax)
-            meta = {f: self._assemble([getattr(l, f) for l in locals_],
+            if const is None:
+                const = {f: self._assemble([getattr(l, f) for l in locals_],
+                                           tuple(mshape), mspec)
+                         for f in const_fields}
+                self._g_qmeta_cache[key] = const
+            live = {f: self._assemble([getattr(l, f) for l in locals_],
                                       tuple(mshape), mspec)
-                    for f in fields}
+                    for f in live_fields}
         else:
             # split on a contraction-adjacent dim (last two): the
             # metadata collapses it to 1 and the per-tensor affine is
             # identical on every shard — replicate shard 0's
-            meta = {f: self._replicated(getattr(l0, f)) for f in fields}
+            if const is None:
+                const = {f: self._replicated(getattr(l0, f))
+                         for f in const_fields}
+                self._g_qmeta_cache[key] = const
+            live = {f: self._replicated(getattr(l0, f))
+                    for f in live_fields}
         return QuantizedTensor(q=q, bits=l0.bits, orig_dtype=l0.orig_dtype,
-                               **meta)
+                               **const, **live)
 
     def quantized_leaves(self, eligible=None, *, bits: int | None = None
                          ) -> dict[Any, Any]:

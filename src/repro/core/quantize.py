@@ -190,6 +190,17 @@ def quantize(x: jax.Array, bits: int) -> QuantizedTensor:
     )
 
 
+def affine_span(lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """The eq.-(5) ε-widened range ``hi - lo + ε`` — the quantity both
+    ``scale`` and ``offset`` are proportional to. Exposed so callers
+    that cache affine constants across precision upgrades (the
+    PlaneStore's quantized-resident metadata) derive them from the
+    same expression ``dequant_affine`` uses."""
+    lo = jnp.asarray(lo, jnp.float32)
+    hi = jnp.asarray(hi, jnp.float32)
+    return hi - lo + _range_eps(lo, hi)
+
+
 def dequant_affine(lo: jax.Array, hi: jax.Array, bits: int,
                    received_bits: int | None = None
                    ) -> tuple[jax.Array, jax.Array]:
@@ -216,8 +227,7 @@ def dequant_affine(lo: jax.Array, hi: jax.Array, bits: int,
     if not (0 <= m <= k):
         raise ValueError(f"received_bits={m} outside [0, {k}]")
     lo = jnp.asarray(lo, jnp.float32)
-    hi = jnp.asarray(hi, jnp.float32)
-    span = hi - lo + _range_eps(lo, hi)
+    span = affine_span(lo, hi)
     scale = span * (0.5 ** k)
     if m > 0:
         offset = lo + span * (0.5 ** (m + 1))

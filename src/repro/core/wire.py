@@ -1,6 +1,6 @@
 """Wire format for progressive model transmission.
 
-Layout (all little-endian):
+v1 layout (all little-endian):
 
     [HEADER]   json (length-prefixed): per-tensor path/shape/dtype/lo/hi,
                plane schedule, stage order. Shipped before stage 1.
@@ -13,6 +13,30 @@ Layout (all little-endian):
 paper's "no size increase" claim, verified by tests. Stages can be cut at
 arbitrary byte offsets by the transport; the client state machine in
 ``transmission/client.py`` resumes mid-plane.
+
+v2 layout (``encode(model, schedule=..., entropy_coded=...)``) keeps the
+12-byte prefix — the first byte after MAGIC is the explicit version —
+but replaces the fixed stage-major plane order with an explicit
+(tensor, plane) *unit* list carried in the header:
+
+    [HEADER]   v1 meta + "units" [[t,p],...] + "checkpoints" (prefix
+               unit counts standing in for stage ends) + "unit_bytes"
+               (on-wire size of each unit incl. frame) + "entropy" flag
+    [UNIT 0]   <mode u8><reserved u8> + payload
+    [UNIT 1]   ...
+
+Units are MSB-first *within* each tensor (the eq.-(5) contiguous-prefix
+invariant ``PlaneStore.ingest`` enforces) but interleave freely *across*
+tensors — see :mod:`repro.core.calibrate`. Each unit body is either the
+raw packed plane (``MODE_RAW``) or its entropy-coded form
+(:mod:`repro.core.entropy`), chosen per-plane so a coded unit is never
+larger than raw + the 2-byte frame. ``decode_plane`` undoes the framing
+before ``unpack_bits``, so everything downstream of the client —
+PlaneStore ingest, OR-reassembly, the eq.-(5) affine — is untouched and
+the fully-received model is bit-identical to the v1 stream's.
+
+``encode(model)`` with no schedule still emits byte-identical v1
+streams; ``decode_header`` accepts both versions.
 """
 from __future__ import annotations
 
@@ -23,11 +47,14 @@ import struct
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import bitplanes
+from repro.core import bitplanes, entropy
 from repro.core.progressive import ProgressiveModel
 
 MAGIC = b"PGNJ"
-VERSION = 1
+VERSION = 1            # legacy stage-major stream (the default)
+VERSION_SCHEDULED = 2  # scheduled/entropy-coded unit stream
+SUPPORTED_VERSIONS = (VERSION, VERSION_SCHEDULED)
+FRAME_BYTES = 2        # v2 per-unit frame: <mode u8><reserved u8>
 
 
 def _path_key(path: tuple) -> str:
@@ -49,26 +76,30 @@ def path_str(path: tuple) -> str:
     return "/".join(parts)
 
 
+def _tensor_meta(model: ProgressiveModel) -> list[dict]:
+    return [
+        {
+            "path": _path_key(t.path),
+            "shape": list(t.shape),
+            "dtype": np.dtype(t.orig_dtype).name,
+            "lo": float(t.lo),
+            "hi": float(t.hi),
+            "bits": t.plan.schedule.bits,
+            "widths": list(t.plan.schedule.widths),
+            "priority": t.plan.priority,
+            "slice_axis": t.slice_axis,
+            "slice_idx": t.slice_idx,
+            "n_slices": t.n_slices,
+        }
+        for t in model.tensors
+    ]
+
+
 def encode_header(model: ProgressiveModel) -> bytes:
     meta = {
         "version": VERSION,
         "n_stages": model.n_stages,
-        "tensors": [
-            {
-                "path": _path_key(t.path),
-                "shape": list(t.shape),
-                "dtype": np.dtype(t.orig_dtype).name,
-                "lo": float(t.lo),
-                "hi": float(t.hi),
-                "bits": t.plan.schedule.bits,
-                "widths": list(t.plan.schedule.widths),
-                "priority": t.plan.priority,
-                "slice_axis": t.slice_axis,
-                "slice_idx": t.slice_idx,
-                "n_slices": t.n_slices,
-            }
-            for t in model.tensors
-        ],
+        "tensors": _tensor_meta(model),
     }
     body = json.dumps(meta).encode()
     return MAGIC + struct.pack("<II", VERSION, len(body)) + body
@@ -78,7 +109,7 @@ def decode_header(buf: bytes):
     if buf[:4] != MAGIC:
         raise ValueError("bad magic")
     version, n = struct.unpack("<II", buf[4:12])
-    if version != VERSION:
+    if version not in SUPPORTED_VERSIONS:
         raise ValueError(f"unsupported version {version}")
     meta = json.loads(buf[12 : 12 + n].decode())
     return meta, 12 + n
@@ -96,20 +127,75 @@ def encode_stage(model: ProgressiveModel, s: int) -> bytes:
     return b"".join(chunks)
 
 
-def encode(model: ProgressiveModel) -> bytes:
-    return encode_header(model) + b"".join(
-        encode_stage(model, s) for s in range(1, model.n_stages + 1)
-    )
+def encode_unit(model: ProgressiveModel, t_idx: int, p: int,
+                *, entropy_coded: bool = False) -> bytes:
+    """One v2 shipment unit: 2-byte frame + (raw | entropy-coded) packed
+    plane ``p`` of tensor ``t_idx``. Coded only when it wins, so the
+    unit is never larger than the raw packed plane + FRAME_BYTES."""
+    t = model.tensors[t_idx]
+    w = t.plan.schedule.widths[p]
+    packed = np.asarray(
+        bitplanes.pack_bits(jnp.asarray(t.planes[p]), w)).tobytes()
+    if entropy_coded:
+        mode, body = entropy.encode(packed)
+    else:
+        mode, body = entropy.MODE_RAW, packed
+    return struct.pack("<BB", mode, 0) + body
+
+
+def encode_v2(model: ProgressiveModel, schedule=None,
+              *, entropy_coded: bool = True) -> bytes:
+    """Scheduled/entropy-coded stream. ``schedule`` is a
+    :class:`~repro.core.calibrate.TransmissionSchedule` (anything with
+    ``units``/``checkpoints``); ``None`` falls back to the v1
+    stage-major order (entropy coding alone still applies). Unit sizes
+    are data-dependent, so payloads are encoded first and their on-wire
+    sizes recorded in the header."""
+    if schedule is None:
+        from repro.core.calibrate import uniform_schedule
+        schedule = uniform_schedule(model)
+    payloads = [encode_unit(model, t, p, entropy_coded=entropy_coded)
+                for t, p in schedule.units]
+    meta = {
+        "version": VERSION_SCHEDULED,
+        "n_stages": len(schedule.checkpoints),
+        "tensors": _tensor_meta(model),
+        "units": [[int(t), int(p)] for t, p in schedule.units],
+        "checkpoints": [int(c) for c in schedule.checkpoints],
+        "unit_bytes": [len(u) for u in payloads],
+        "entropy": bool(entropy_coded),
+    }
+    body = json.dumps(meta).encode()
+    header = MAGIC + struct.pack("<II", VERSION_SCHEDULED, len(body)) + body
+    return header + b"".join(payloads)
+
+
+def encode(model: ProgressiveModel, *, schedule=None,
+           entropy_coded: bool = False) -> bytes:
+    """Default call emits byte-identical v1 streams; requesting a
+    schedule and/or entropy coding switches to v2."""
+    if schedule is None and not entropy_coded:
+        return encode_header(model) + b"".join(
+            encode_stage(model, s) for s in range(1, model.n_stages + 1)
+        )
+    return encode_v2(model, schedule, entropy_coded=entropy_coded)
 
 
 @dataclasses.dataclass
 class StageLayout:
     """Byte layout derived purely from the header — what a client needs
-    to slice an incoming byte stream into (tensor, plane) payloads."""
+    to slice an incoming byte stream into (tensor, plane) payloads.
+
+    v1: one stage per plane rank, entries dense-packed. v2
+    (``framed=True``): "stages" are checkpoint groups of schedule
+    units; each entry's ``payload_bytes`` INCLUDES the 2-byte frame,
+    and payloads must pass through :func:`decode_plane` with
+    ``framed=True`` to strip the frame / undo entropy coding."""
 
     header_bytes: int
     # per stage: list of (tensor_idx, width, payload_bytes, n_elements)
     stages: list[list[tuple[int, int, int, int]]]
+    framed: bool = False
 
     @property
     def stage_bytes(self) -> list[int]:
@@ -121,6 +207,9 @@ class StageLayout:
 
 
 def layout_from_header(meta: dict, header_bytes: int) -> StageLayout:
+    version = meta.get("version", VERSION)
+    if version == VERSION_SCHEDULED:
+        return _layout_v2(meta, header_bytes)
     n_stages = meta["n_stages"]
     order = sorted(
         range(len(meta["tensors"])),
@@ -140,6 +229,38 @@ def layout_from_header(meta: dict, header_bytes: int) -> StageLayout:
     return StageLayout(header_bytes=header_bytes, stages=stages)
 
 
-def decode_plane(payload: bytes, width: int, n_elements: int) -> np.ndarray:
+def _layout_v2(meta: dict, header_bytes: int) -> StageLayout:
+    units = meta["units"]
+    unit_bytes = meta["unit_bytes"]
+    if len(unit_bytes) != len(units):
+        raise ValueError("unit_bytes length mismatch")
+    entries = []
+    for (t_idx, p), nbytes in zip(units, unit_bytes):
+        t = meta["tensors"][t_idx]
+        w = t["widths"][p]
+        n_el = int(np.prod(t["shape"])) if t["shape"] else 1
+        entries.append((int(t_idx), int(w), int(nbytes), n_el))
+    stages, lo = [], 0
+    for cp in meta["checkpoints"]:
+        stages.append(entries[lo:cp])
+        lo = cp
+    if lo != len(entries):
+        raise ValueError("checkpoints do not cover all units")
+    return StageLayout(header_bytes=header_bytes, stages=stages,
+                       framed=True)
+
+
+def decode_plane(payload: bytes, width: int, n_elements: int,
+                 *, framed: bool = False) -> np.ndarray:
+    """Unpack one plane payload. ``framed=True`` (v2) strips the 2-byte
+    mode frame and undoes entropy coding first; the recovered packed
+    bytes are identical to the raw path, so reconstruction downstream
+    is bit-exact either way."""
+    if framed:
+        if len(payload) < FRAME_BYTES:
+            raise ValueError("framed payload shorter than frame")
+        mode = payload[0]
+        raw_len = -(-n_elements * width // 8)
+        payload = entropy.decode(mode, payload[FRAME_BYTES:], raw_len)
     packed = jnp.asarray(np.frombuffer(payload, dtype=np.uint8))
     return np.asarray(bitplanes.unpack_bits(packed, width, n_elements))

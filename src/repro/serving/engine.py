@@ -275,6 +275,7 @@ class PrecisionManagedEngine:
         re-dequantize); with ``resident="quantized"`` it is a metadata
         refresh — new accumulator views + new traced scale/offset
         values, no weight dequantization anywhere."""
+        t0 = time.perf_counter()
         if self._receiver is not None:
             avail = self._receiver.stages_complete
             if avail <= self._consumed:
@@ -282,11 +283,18 @@ class PrecisionManagedEngine:
                     f"receiver has no new stage (at {avail}, "
                     f"served {self._consumed})")
             self._consumed = avail
+            t1 = time.perf_counter()   # ingest happened externally
             self._refresh_params()
-            return
-        s = self.state.received_stages + 1
-        self.state = self.state.receive(self.prog.stage(s))
-        self._refresh_params()
+        else:
+            s = self.state.received_stages + 1
+            self.state = self.state.receive(self.prog.stage(s))
+            t1 = time.perf_counter()
+            self._refresh_params()
+        # enqueue-time split consumed by upgrade_if_available's log
+        self._last_upgrade_split = {
+            "ingest_s": t1 - t0,
+            "refresh_s": time.perf_counter() - t1,
+        }
 
 
 class ProgressiveServer(PrecisionManagedEngine):
@@ -927,9 +935,18 @@ class SlotPoolEngine(PrecisionManagedEngine):
         self.upgrade_stall_s += stall_s
         self._win_upgrades += 1
         self._win_upgrade_enqueue_s += enqueue_s
+        split = getattr(self, "_last_upgrade_split", None) or {}
         self.upgrade_log.append({
             "step": self._step_count, "stage": self.stage,
             "enqueue_s": enqueue_s, "stall_s": stall_s,
+            # enqueue split: host time ingesting planes (store OR
+            # dispatch; ~0 in receiver mode where the wire client
+            # ingested) vs refreshing the resident param views. The
+            # fence component (stall - enqueue) is 0 with double_buffer.
+            "ingest_s": split.get("ingest_s", 0.0),
+            "refresh_s": split.get("refresh_s", 0.0),
+            "fence_s": stall_s - enqueue_s,
+            "sharded": self.mesh is not None,
             "double_buffer": self.double_buffer})
         self.upgrades.append((self._step_count, self.stage))
         return True

@@ -95,7 +95,8 @@ class ProgressiveClient:
                 if len(self._buf) - self._cursor < nbytes:
                     return
                 payload = bytes(self._buf[self._cursor : self._cursor + nbytes])
-                self._pending.append((idx, wire.decode_plane(payload, w, n_el)))
+                self._pending.append((idx, wire.decode_plane(
+                    payload, w, n_el, framed=self._layout.framed)))
                 self._cursor += nbytes
                 self._entry += 1
             self._stage += 1

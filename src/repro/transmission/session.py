@@ -125,9 +125,14 @@ class Session:
 
     # -- constructors ------------------------------------------------------
     @classmethod
-    def from_model(cls, prog, trace: BandwidthTrace, **kw) -> "Session":
-        """Serialize a server-side ProgressiveModel and stream it."""
-        return cls(wire.encode(prog), trace, **kw)
+    def from_model(cls, prog, trace: BandwidthTrace, *, schedule=None,
+                   entropy_coded: bool = False, **kw) -> "Session":
+        """Serialize a server-side ProgressiveModel and stream it.
+        ``schedule``/``entropy_coded`` select the v2 accuracy-per-byte
+        wire (see :mod:`repro.core.calibrate`); stage semantics carry
+        over — v2 checkpoints play the role of stage ends."""
+        return cls(wire.encode(prog, schedule=schedule,
+                               entropy_coded=entropy_coded), trace, **kw)
 
     @classmethod
     def from_scenario(cls, blob: bytes, scenario, *, seed: int = 0,

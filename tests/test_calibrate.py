@@ -1,0 +1,149 @@
+"""TransmissionSchedule construction + constraint tests: whatever the
+measured gains are, the emitted schedule must ship every tensor's
+planes MSB-first while interleaving freely across tensors, and the
+serialized form must round-trip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import wire
+from repro.core.calibrate import (TransmissionSchedule, _convexify,
+                                  build_schedule, calibrate_schedule,
+                                  uniform_schedule)
+from repro.core.progressive import divide
+
+
+@pytest.fixture(scope="module")
+def model():
+    k = jax.random.PRNGKey(7)
+    params = {
+        "big": jax.random.normal(k, (16, 8)),
+        "small": jax.random.normal(jax.random.fold_in(k, 1), (5,)),
+        "scalar": jnp.float32(1.25),
+    }
+    return divide(params)
+
+
+def _plane_counts(model):
+    return [t.plan.schedule.n_planes for t in model.tensors]
+
+
+def test_uniform_schedule_is_stage_major(model):
+    sched = uniform_schedule(model)
+    sched.validate(_plane_counts(model))
+    assert sched.n_stages == model.n_stages
+    # stage s ships plane s-1 of every tensor, in stage order
+    k = 0
+    for s in range(1, model.n_stages + 1):
+        for i, _ in model.stage(s):
+            assert sched.units[k] == (i, s - 1)
+            k += 1
+    assert sched.checkpoints[-1] == len(sched.units)
+
+
+def test_validate_rejects_out_of_order_planes(model):
+    counts = _plane_counts(model)
+    base = uniform_schedule(model)
+    units = list(base.units)
+    # swap two planes of the same tensor -> LSB before MSB
+    a = next(k for k, (t, p) in enumerate(units) if t == 0 and p == 0)
+    b = next(k for k, (t, p) in enumerate(units) if t == 0 and p == 1)
+    units[a], units[b] = units[b], units[a]
+    bad = TransmissionSchedule(tuple(units), base.checkpoints)
+    with pytest.raises(ValueError, match="MSB-first"):
+        bad.validate(counts)
+
+
+def test_validate_rejects_incomplete_and_bad_checkpoints(model):
+    counts = _plane_counts(model)
+    base = uniform_schedule(model)
+    with pytest.raises(ValueError):
+        TransmissionSchedule(base.units[:-1],
+                             (len(base.units) - 1,)).validate(counts)
+    with pytest.raises(ValueError, match="checkpoints"):
+        TransmissionSchedule(base.units, ()).validate(counts)
+    with pytest.raises(ValueError, match="checkpoints"):
+        TransmissionSchedule(
+            base.units, (len(base.units) - 1,)).validate(counts)
+    with pytest.raises(ValueError, match="checkpoints"):
+        TransmissionSchedule(
+            base.units, (3, 3, len(base.units))).validate(counts)
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_build_schedule_msb_first_under_arbitrary_gains(model, seed):
+    """Whatever per-plane gains calibration measures — including
+    adversarial ones that reward LSB planes — the built schedule must
+    interleave across tensors but stay MSB-first within each tensor."""
+    rng = np.random.default_rng(seed)
+    counts = _plane_counts(model)
+    gains = {i: list(rng.exponential(1.0, n)) for i, n in enumerate(counts)}
+    if seed % 3 == 0:  # reward LSBs hard: forces bundle merging
+        gains = {i: g[::-1] for i, g in gains.items()}
+    sched = build_schedule(model, gains)
+    sched.validate(counts)  # raises on any MSB-first violation
+    # interleaving is allowed AND units cover every (tensor, plane)
+    assert sorted(sched.units) == sorted(
+        (i, p) for i, n in enumerate(counts) for p in range(n))
+
+
+def test_build_schedule_front_loads_high_gain_tensor(model):
+    counts = _plane_counts(model)
+    gains = {i: [0.0] * n for i, n in enumerate(counts)}
+    gains[0] = [100.0] + [50.0] * (counts[0] - 1)  # tensor 0 dominates
+    sched = build_schedule(model, gains)
+    sched.validate(counts)
+    assert [t for t, _ in sched.units[:counts[0]]] == [0] * counts[0]
+
+
+def test_convexify_rates_non_increasing():
+    rng = np.random.default_rng(3)
+    for _ in range(50):
+        n = int(rng.integers(1, 10))
+        gains = rng.exponential(1.0, n)
+        costs = rng.integers(1, 100, n)
+        bundles = _convexify(list(gains), list(costs))
+        # bundles tile [0, n) exactly
+        assert bundles[0][0] == 0 and bundles[-1][1] == n
+        assert all(b[1] == c[0] for b, c in zip(bundles, bundles[1:]))
+        rates = [g / c for (_, _, g, c) in bundles]
+        assert all(a >= b - 1e-12 for a, b in zip(rates, rates[1:]))
+
+
+def test_meta_roundtrip(model):
+    sched = uniform_schedule(model)
+    again = TransmissionSchedule.from_meta(sched.to_meta())
+    assert again == sched
+    # and via the v2 wire header
+    blob = wire.encode(model, schedule=sched, entropy_coded=True)
+    meta, _ = wire.decode_header(blob)
+    assert TransmissionSchedule.from_meta(meta) == sched
+
+
+def test_calibrate_schedule_end_to_end(model):
+    """Weighted-MSE calibration loss: the heavily weighted tensor's
+    planes must ship before the zero-weight tensors'."""
+    from repro.core.plane_store import PlaneStore
+
+    store = PlaneStore.from_model(model)
+    for s in range(1, model.n_stages + 1):
+        store.ingest(model.stage(s))
+    refs = {k: np.asarray(v) for k, v in store.materialize_leaves().items()}
+
+    def eval_loss(leaves):
+        loss = 0.0
+        for key, v in leaves.items():
+            w = 50.0 if "big" in str(key) else 1e-6
+            loss += w * float(np.mean((np.asarray(v) - refs[key]) ** 2))
+        return loss
+
+    sched = calibrate_schedule(model, eval_loss)
+    sched.validate(_plane_counts(model))
+    big_idxs = {i for i, t in enumerate(model.tensors)
+                if "big" in str(t.path)}
+    first_big = min(k for k, (t, _) in enumerate(sched.units)
+                    if t in big_idxs)
+    first_rest = min(k for k, (t, _) in enumerate(sched.units)
+                     if t not in big_idxs)
+    assert first_big < first_rest

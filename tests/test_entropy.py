@@ -1,0 +1,144 @@
+"""Entropy codec property tests: decode(encode(x)) must be
+byte-identical for ANY input, and the coded body must never exceed the
+raw payload (the wire adds only the 2-byte frame on top).
+
+The deterministic seeded sweeps below always run; hypothesis variants
+ride along when the package is installed.
+"""
+import numpy as np
+import pytest
+
+from repro.core import entropy
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic sweeps below still run
+    class _StrategyStub:
+        def __getattr__(self, _name):
+            return lambda *a, **k: self
+
+        def __call__(self, *a, **k):
+            return self
+
+    st = _StrategyStub()
+
+    def settings(**_kw):
+        return lambda f: f
+
+    def given(*_a, **_kw):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed")(f)
+
+
+def roundtrip(data: bytes) -> tuple[int, bytes]:
+    mode, body = entropy.encode(data)
+    assert mode in entropy.MODES
+    # never-worse guarantee: coded body <= raw payload, so a framed
+    # unit costs at most raw + FRAME_BYTES on the wire
+    assert len(body) <= len(data)
+    assert entropy.decode(mode, body, len(data)) == data
+    return mode, body
+
+
+SIZES = [1, 2, 3, 7, 8, 9, 63, 64, 255, 256, 1000, 4096]
+
+
+def test_empty_payload():
+    mode, body = entropy.encode(b"")
+    assert body == b""
+    assert entropy.decode(mode, body, 0) == b""
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_all_zero_planes(n):
+    mode, body = roundtrip(b"\x00" * n)
+    if n >= 8:  # constant planes must compress hard
+        assert len(body) < n
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_all_one_planes(n):
+    mode, body = roundtrip(b"\xff" * n)
+    if n >= 8:
+        assert len(body) < n
+
+
+def test_every_single_byte_payload():
+    """1-byte payloads: all 256 values round-trip and never expand."""
+    for v in range(256):
+        mode, body = roundtrip(bytes([v]))
+        assert len(body) <= 1
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("p", [0.005, 0.05, 0.2, 0.5])
+def test_random_bit_skew(seed, p):
+    """Packed bitplanes with biased bit distributions — the shape real
+    low-significance planes take. Byte-identity at every skew."""
+    rng = np.random.default_rng(1000 * seed + int(p * 1000))
+    for n in (1, 17, 256, 3001):
+        bits = rng.random(n * 8) < p
+        data = np.packbits(bits).tobytes()[:n]
+        roundtrip(data)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_incompressible_random_falls_back_raw(seed):
+    """Uniform random bytes are incompressible: the codec must fall
+    back to MODE_RAW (identity body) rather than expand."""
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 256, 4096, dtype=np.uint8).tobytes()
+    mode, body = roundtrip(data)
+    assert mode == entropy.MODE_RAW
+    assert body == data
+
+
+def test_run_structured_payloads():
+    """Long runs broken by literals — RLE's best and worst cases,
+    including the 1-byte literal tail."""
+    cases = [
+        b"\x00" * 500 + b"\xab",
+        b"\xab" + b"\x00" * 500,
+        b"\x01\x02\x03" * 100 + b"\xff" * 300,
+        bytes(range(256)) * 3 + b"\x00" * 64,
+        b"\x00\x01" * 200,
+    ]
+    for data in cases:
+        roundtrip(data)
+
+
+def test_megabyte_payload_lane_count_fits_header():
+    """Payloads >= 1 MiB used to clip the rANS lane count to 256, which
+    overflows the single-byte header field (struct.error at encode time
+    on real full-size model planes). Lanes must cap at 255."""
+    rng = np.random.default_rng(7)
+    n = 4096 * 256 + 13  # past the old 256-lane threshold, ragged tail
+    data = np.packbits(rng.random(n * 8) < 0.05).tobytes()[:n]
+    mode, body = roundtrip(data)
+    assert mode == entropy.MODE_RANS  # skewed MB-scale plane compresses
+    assert len(body) < n
+
+
+def test_decode_raw_is_identity():
+    data = bytes(range(256))
+    assert entropy.decode(entropy.MODE_RAW, data, len(data)) == data
+
+
+def test_decode_rejects_bad_mode():
+    with pytest.raises(ValueError):
+        entropy.decode(99, b"\x00", 1)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.binary(max_size=2048))
+def test_hypothesis_arbitrary_bytes_roundtrip(data):
+    roundtrip(data)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.floats(0.0, 1.0),
+       st.integers(1, 4096))
+def test_hypothesis_skewed_planes_roundtrip(seed, p, n):
+    rng = np.random.default_rng(seed)
+    bits = rng.random(n * 8) < p
+    roundtrip(np.packbits(bits).tobytes()[:n])

@@ -4,12 +4,30 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip; deterministic ones still run
+    class _StrategyStub:
+        def __getattr__(self, _name):
+            return lambda *a, **k: self
+
+        def __call__(self, *a, **k):
+            return self
+
+    st = _StrategyStub()
+
+    def settings(**_kw):
+        return lambda f: f
+
+    def given(*_a, **_kw):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed")(f)
 
 from repro.core.quantize import (
     QuantizedTensor,
+    affine_span,
     container_dtype,
+    dequant_affine,
     dequantize,
     quantize,
     quantization_error_bound,
@@ -108,3 +126,26 @@ def test_bits_validation():
     qt = quantize(jnp.ones(3), 8)
     with pytest.raises(ValueError):
         dequantize(qt, received_bits=9)
+
+
+def test_numpy_offset_recompute_bit_identical():
+    """The PlaneStore caches m-independent affine constants and
+    recomputes only the offset on the host as
+    ``lo + span * 2^-(m+1)`` (``2^-1`` at m=0). That numpy f32
+    expression must be BIT-identical to dequant_affine's jnp one for
+    every (lo, hi, bits, m) — otherwise quantized-resident serving
+    would drift from the materialized path after an upgrade."""
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        lo = np.float32(rng.uniform(-1e4, 1e4))
+        hi = np.float32(lo + abs(rng.uniform(0, 1e4)))
+        bits = int(rng.integers(1, 17))
+        span = np.asarray(affine_span(lo, hi), np.float32)
+        for m in range(bits + 1):
+            _, off_ref = dequant_affine(lo, hi, bits, received_bits=m)
+            half_lsb = np.ldexp(np.float32(1.0),
+                                -(np.int32(m) + 1) if m > 0 else -1
+                                ).astype(np.float32)
+            off_np = np.float32(lo + span * half_lsb)
+            assert np.asarray(off_ref, np.float32).tobytes() == \
+                off_np.tobytes(), (lo, hi, bits, m)
