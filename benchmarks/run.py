@@ -36,12 +36,12 @@ def main() -> None:
                     help="comma-separated subset: table1,table2,table3,"
                          "roofline,upgrade_latency,resident_serving,"
                          "serving_throughput,speculative_decode,"
-                         "calibration")
+                         "calibration,fault_tolerance")
     args = ap.parse_args()
 
     from benchmarks import table1_execution_time, table2_accuracy, table3_ttfi
-    from benchmarks import calibration, resident_serving, roofline
-    from benchmarks import serving_throughput, speculative_decode
+    from benchmarks import calibration, fault_tolerance, resident_serving
+    from benchmarks import roofline, serving_throughput, speculative_decode
     from benchmarks import upgrade_latency
 
     benches = {
@@ -54,6 +54,7 @@ def main() -> None:
         "serving_throughput": serving_throughput,
         "speculative_decode": speculative_decode,
         "calibration": calibration,
+        "fault_tolerance": fault_tolerance,
     }
     selected = (args.only.split(",") if args.only else list(benches))
 

@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import zlib
 from typing import Any, Mapping, Sequence
 
 import jax
@@ -273,6 +274,18 @@ class PlaneStore:
 
     def resident_bytes(self) -> int:
         return sum(b.size * b.dtype.itemsize for b in self.buffers.values())
+
+    def fingerprint(self) -> dict[str, int]:
+        """CRC32 of each flat accumulator buffer's bytes, keyed by
+        container dtype. Two stores with the same layout have equal
+        fingerprints iff their accumulator state is bit-identical —
+        the cheap audit the fault-tolerance tests use to prove that a
+        quarantined-and-repaired stream matches the clean stream at
+        every checkpoint (and that a force-ingested corrupt plane
+        diverges forever). Pulls buffers to host; debugging/audit use,
+        not a hot path."""
+        return {dt: int(zlib.crc32(np.asarray(buf).tobytes()))
+                for dt, buf in sorted(self.buffers.items())}
 
     # -- eq. (4): batched upgrade -----------------------------------------
     def ingest(self, items: Sequence[tuple[int, jax.Array]]) -> None:
@@ -794,6 +807,15 @@ class ShardedPlaneStore:
 
     def resident_bytes(self) -> int:
         return sum(s.resident_bytes() for s in self.substores)
+
+    def fingerprint(self) -> dict[str, int]:
+        """Per-shard accumulator CRCs (``shard<j>/<dtype>`` keys) — the
+        sharded counterpart of :meth:`PlaneStore.fingerprint`."""
+        out: dict[str, int] = {}
+        for j, s in enumerate(self.substores):
+            for dt, crc in s.fingerprint().items():
+                out[f"shard{j}/{dt}"] = crc
+        return out
 
     def dirty_keys(self) -> set:
         return {self.keys[i] for i in self._g_dirty}

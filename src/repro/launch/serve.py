@@ -38,6 +38,53 @@ def _write_event_log(result, event_log: str | None) -> None:
     print(f"event log -> {path}")
 
 
+def _verify_fault_recovery(result, blob, model, prog, batch,
+                           *, decode_steps: int = 8) -> None:
+    """The lossy run's acceptance check: after the transport converged,
+    the client's store must be BIT-identical to a clean stream's, and a
+    fresh final-stage decode must emit the same tokens. Raises
+    SystemExit on divergence — CI treats this as the smoke's assert."""
+    import numpy as np
+
+    from repro.serving.engine import ProgressiveServer, WireStoreReceiver
+    from repro.transmission import ProgressiveClient
+
+    t = result.transport
+    print(f"transport: injected={t['injected']} "
+          f"quarantined={t['quarantined']} repaired={t['repaired_units']} "
+          f"reconnects={t['reconnects']} duplicates={t['duplicate_units']}")
+    if result.client.nacks or not result.client.complete:
+        raise SystemExit(
+            f"FAIL: transport did not converge (stages "
+            f"{result.client.stages_complete}, nacks {result.client.nacks})")
+    clean = ProgressiveClient()
+    clean.feed(blob)
+    clean.materialize()
+    result.client.materialize()
+    fp_clean = clean.store.fingerprint()
+    fp_lossy = result.client.store.fingerprint()
+    if fp_clean != fp_lossy:
+        raise SystemExit(
+            f"FAIL: store diverged from the clean stream: "
+            f"{fp_lossy} != {fp_clean}")
+
+    def final_tokens(client):
+        srv = ProgressiveServer(
+            model, prog,
+            max_len=int(batch["tokens"].shape[1]) + decode_steps,
+            receiver=WireStoreReceiver(client, prog))
+        while srv.stage < client.stages_complete:
+            srv.receive_stage()
+        srv.start(batch)
+        return np.asarray(srv.decode(decode_steps).tokens)
+
+    a, b = final_tokens(clean), final_tokens(result.client)
+    if not np.array_equal(a, b):
+        raise SystemExit(f"FAIL: final-stage tokens diverged:\n{a}\n{b}")
+    print(f"fault recovery verified: store bit-identical to clean stream, "
+          f"final-stage tokens identical over {decode_steps} steps")
+
+
 def build_batch(cfg, batch: int, prompt_len: int, seed: int) -> dict:
     out = {"tokens": jax.random.randint(
         jax.random.PRNGKey(seed), (batch, prompt_len), 0, cfg.vocab
@@ -107,6 +154,20 @@ def main() -> None:
                          "--xla_force_host_platform_device_count=8)")
     ap.add_argument("--event-log", default=None,
                     help="write the session's audit log (JSONL) here")
+    ap.add_argument("--faults", action="store_true",
+                    help="lossy-channel mode: encode the stream on the v3 "
+                         "integrity wire and inject seeded channel faults "
+                         "(corruption/truncation/duplication/reorder/"
+                         "disconnect). Lossy scenarios (browser-3g-lossy, "
+                         "edge-flaky) supply their own fault profile; other "
+                         "links get a default ~1%% corruption profile. After "
+                         "the run the launcher PROVES recovery: the final "
+                         "store must be bit-identical to a clean stream's "
+                         "and the final-stage tokens identical to a clean "
+                         "run's")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="seed for the fault profile and retry jitter "
+                         "(default: --seed)")
     args = ap.parse_args()
 
     mesh = None
@@ -126,10 +187,11 @@ def main() -> None:
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     prog = divide(params)
-    blob = wire.encode(prog)
+    # lossy mode needs the v3 integrity wire so damage is detectable
+    blob = wire.encode(prog, integrity=args.faults)
 
-    if args.scenario:
-        scenario = get_scenario(args.scenario)
+    scenario = get_scenario(args.scenario) if args.scenario else None
+    if scenario is not None:
         session = Session.from_scenario(blob, scenario, seed=args.seed)
         link_desc = f"scenario {args.scenario} (seed {args.seed})"
     elif args.trace_csv:
@@ -139,6 +201,22 @@ def main() -> None:
         session = Session(
             blob, BandwidthTrace.constant(args.bandwidth_mbps * 1e6))
         link_desc = f"{args.bandwidth_mbps} MB/s"
+
+    faults = fault_policy = None
+    if args.faults:
+        from repro.transmission import FaultPolicy, FaultTrace
+
+        fseed = args.seed if args.fault_seed is None else args.fault_seed
+        if scenario is not None and scenario.lossy:
+            faults = scenario.make_faults(fseed)
+        else:
+            faults = FaultTrace(seed=fseed, p_corrupt=0.01,
+                                p_disconnect=0.002)
+        fault_policy = FaultPolicy(seed=fseed)
+        print(f"lossy channel: {faults}  "
+              f"(v3 framing overhead "
+              f"{wire.framing_overhead(session.meta)['overhead_frac']:.2%})")
+
     arrivals = session.stage_arrival_times()
     print(f"model bytes={len(blob)}  stages={prog.n_stages}  "
           f"arrivals={[round(a, 2) for a in arrivals]}s over {link_desc}")
@@ -162,7 +240,8 @@ def main() -> None:
             max_new_tokens=args.decode_steps, n_slots=args.pool_slots,
             resident=None if pool_spec else args.resident,
             speculative=pool_spec,
-            chunked_prefill=args.chunked_prefill, mesh=mesh)
+            chunked_prefill=args.chunked_prefill, mesh=mesh,
+            faults=faults, fault_policy=fault_policy)
         pool = result.server
         print(f"flash crowd: {args.pool_clients} clients over "
               f"{args.crowd_span_s}s into {args.pool_slots} slots; "
@@ -181,6 +260,20 @@ def main() -> None:
               f"across {pool.stage} precision stages with "
               f"{pool.decode_cache_size()} decode executable(s); "
               f"{len(result.events)} audited session events")
+        if args.faults:
+            from repro.transmission import ProgressiveClient
+
+            clean = ProgressiveClient()
+            clean.feed(blob)
+            clean.materialize()
+            result.client.materialize()
+            if clean.store.fingerprint() != result.client.store.fingerprint():
+                raise SystemExit(
+                    "FAIL: pool store diverged from the clean stream")
+            t = result.transport
+            print(f"fault recovery verified (pool): store bit-identical; "
+                  f"injected={t['injected']} "
+                  f"quarantined={t['quarantined']}")
         _write_event_log(result, args.event_log)
         return
 
@@ -197,8 +290,11 @@ def main() -> None:
     result = session.run_serving(
         model, prog, decode_steps=args.decode_steps, batch=batch,
         max_len=max_len, resident=None if speculative else args.resident,
-        speculative=speculative, mesh=mesh)
+        speculative=speculative, mesh=mesh,
+        faults=faults, fault_policy=fault_policy)
     server = result.server
+    if args.faults:
+        _verify_fault_recovery(result, blob, model, prog, batch)
     if args.speculative:
         s = result.speculation_summary()
         rep = server.resident_report()

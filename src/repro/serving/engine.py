@@ -157,6 +157,23 @@ class WireStoreReceiver:
     def store(self):
         return self.client.store
 
+    def transport_health(self) -> dict:
+        """Fault-tolerance counters of the underlying client (inert
+        zeros on a trusted v1/v2 stream). ``stages_complete`` counts
+        only *verified* checkpoints, so while a damaged unit is being
+        re-fetched the engine keeps serving at the last verified stage
+        — this surface is how operators see that happening."""
+        c = self.client
+        return {
+            "integrity": bool(getattr(c, "integrity", False)),
+            "stages_complete": c.stages_complete,
+            "verified_units": getattr(c, "verified_units", 0),
+            "pending_nacks": len(getattr(c, "nacks", {})),
+            "quarantined": len(getattr(c, "quarantine_log", [])),
+            "duplicate_units": getattr(c, "duplicate_units", 0),
+            "resume_cursor": list(getattr(c, "resume_cursor", (0, 0))),
+        }
+
     def materialize(self):
         if self.client.store is None:
             raise RuntimeError("wire header not received yet")

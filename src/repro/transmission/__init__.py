@@ -3,6 +3,9 @@ concurrent transmission/inference scheduler, the progressive client,
 named network scenarios, and the deterministic co-simulation Session."""
 from repro.transmission.simulator import (
     BandwidthTrace,
+    ChunkDelivery,
+    FaultInjector,
+    FaultTrace,
     Link,
     TransferEvent,
     as_trace,
@@ -19,11 +22,17 @@ from repro.transmission.client import ProgressiveClient
 from repro.transmission.scenarios import (SCENARIOS, Scenario,
                                           flash_crowd_arrivals, get_scenario,
                                           list_scenarios)
-from repro.transmission.session import Session, SessionEvent, SessionResult
+from repro.transmission.session import (FaultPolicy, Session, SessionEvent,
+                                        SessionResult, TransportError)
 
 __all__ = [
     "BandwidthTrace",
+    "ChunkDelivery",
+    "FaultInjector",
+    "FaultPolicy",
+    "FaultTrace",
     "Link",
+    "TransportError",
     "TransferEvent",
     "as_trace",
     "simulate_transfer",

@@ -24,6 +24,19 @@ The four canonical entries map to the paper's deployment stories:
                       engine admits them staggered (see
                       :func:`flash_crowd_arrivals`)
 ==================== ====================================================
+
+Two *lossy* entries additionally carry a seeded
+:class:`~repro.transmission.simulator.FaultTrace` factory
+(``make_faults``) — they require the v3 integrity wire and exercise the
+quarantine/repair/resume machinery:
+
+==================== ====================================================
+``browser-3g-lossy``  the 3G link plus last-mile damage: ~1% bit-flip
+                      corruption and occasional mid-chunk disconnects
+``edge-flaky``        the edge-stall link on a flaky path: corruption,
+                      truncation, duplication, reordering and
+                      disconnects all at low rates
+==================== ====================================================
 """
 from __future__ import annotations
 
@@ -32,7 +45,7 @@ from typing import Callable
 
 import numpy as np
 
-from repro.transmission.simulator import BandwidthTrace
+from repro.transmission.simulator import BandwidthTrace, FaultTrace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +55,13 @@ class Scenario:
     make_trace: Callable[[int], BandwidthTrace]  # seed -> trace
     latency_s: float
     chunk_bytes: int
+    # lossy scenarios: seed -> channel fault profile (None = trusted
+    # channel, the default for the original catalog entries)
+    make_faults: Callable[[int], FaultTrace] | None = None
+
+    @property
+    def lossy(self) -> bool:
+        return self.make_faults is not None
 
 
 def _browser_3g(seed: int) -> BandwidthTrace:
@@ -87,6 +107,21 @@ def _flash_crowd(seed: int) -> BandwidthTrace:
     return BandwidthTrace.jittered(
         1.5e6, 0.1, seed=seed, interval_s=0.5, n_intervals=128,
         name=f"flash-crowd@{seed}")
+
+
+def _browser_3g_faults(seed: int) -> FaultTrace:
+    """Last-mile cellular damage: ~1% of chunks take a bit flip, an
+    occasional chunk loses its connection mid-flight."""
+    return FaultTrace(seed=seed, p_corrupt=0.01, p_disconnect=0.002,
+                      flips_per_corruption=1)
+
+
+def _edge_flaky_faults(seed: int) -> FaultTrace:
+    """Every fault kind at a low rate — the kitchen-sink reliability
+    profile (desync recovery included via truncation/duplication)."""
+    return FaultTrace(seed=seed, p_corrupt=0.01, p_truncate=0.004,
+                      p_duplicate=0.004, p_reorder=0.004,
+                      p_disconnect=0.002)
 
 
 def flash_crowd_arrivals(seed: int, n_clients: int,
@@ -143,6 +178,25 @@ SCENARIOS: dict[str, Scenario] = {
             make_trace=_flash_crowd,
             latency_s=0.03,
             chunk_bytes=32 * 1024,
+        ),
+        Scenario(
+            name="browser-3g-lossy",
+            description="the browser-3g link with ~1% chunk corruption "
+                        "and rare mid-chunk disconnects (needs wire v3)",
+            make_trace=_browser_3g,
+            latency_s=0.08,
+            chunk_bytes=16 * 1024,
+            make_faults=_browser_3g_faults,
+        ),
+        Scenario(
+            name="edge-flaky",
+            description="the edge-stall link on a flaky path: "
+                        "corruption, truncation, duplication, "
+                        "reordering and disconnects (needs wire v3)",
+            make_trace=_edge_stall,
+            latency_s=0.02,
+            chunk_bytes=32 * 1024,
+            make_faults=_edge_flaky_faults,
         ),
     )
 }

@@ -35,12 +35,57 @@ import dataclasses
 import json
 from typing import Any, Callable, Sequence
 
+import numpy as np
+
 from repro.core import wire
 from repro.transmission.client import ProgressiveClient
 from repro.transmission.scheduler import StageCost, Timeline
-from repro.transmission.simulator import BandwidthTrace
+from repro.transmission.simulator import BandwidthTrace, FaultTrace
 
 DEFAULT_CHUNK_BYTES = 64 * 1024
+
+
+class TransportError(RuntimeError):
+    """The fault policy's retry budget is exhausted: a unit (or the
+    stream itself) could not be delivered intact within
+    ``max_retries`` attempts. Clean, typed failure — never a silent
+    partial model."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPolicy:
+    """Retry/timeout/backoff policy for a faulty transport.
+
+    * ``chunk_timeout_s`` — a delivery whose trace time exceeds this is
+      abandoned (connection presumed dead) and retried after backoff.
+    * ``max_retries`` — per-target attempt budget (each quarantined
+      unit, and each stream reconnect burst, counts its own attempts);
+      exceeding it raises :class:`TransportError`.
+    * backoff — capped exponential ``min(cap, base * 2**attempt)``
+      with seeded multiplicative jitter, so retry schedules are
+      deterministic for a fixed seed yet decorrelated across targets.
+    """
+
+    chunk_timeout_s: float = 30.0
+    max_retries: int = 8
+    backoff_base_s: float = 0.05
+    backoff_cap_s: float = 2.0
+    jitter_frac: float = 0.25
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.chunk_timeout_s <= 0:
+            raise ValueError("chunk_timeout_s must be > 0")
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if not (0.0 <= self.jitter_frac < 1.0):
+            raise ValueError("jitter_frac must be in [0, 1)")
+
+    def backoff_s(self, attempt: int, rng: np.random.Generator) -> float:
+        d = min(self.backoff_cap_s, self.backoff_base_s * (2.0 ** attempt))
+        if self.jitter_frac:
+            d *= 1.0 + self.jitter_frac * (2.0 * float(rng.random()) - 1.0)
+        return d
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +112,7 @@ class SessionResult:
     upgrades: list | None = None      # (decode step, new stage)
     stage_at_step: list | None = None
     admissions: list | None = None    # pool: (wall_s, rid) admission log
+    transport: dict | None = None     # fault runs: injected/repaired stats
 
     def to_jsonl(self) -> str:
         return "\n".join(
@@ -109,6 +155,7 @@ class Session:
         self.latency_s = latency_s
         self.name = name or getattr(trace, "name", "")
         meta, hdr = wire.decode_header(self.blob)
+        self.meta = meta
         self.layout = wire.layout_from_header(meta, hdr)
         if self.layout.total_bytes != len(self.blob):
             raise ValueError(
@@ -271,12 +318,32 @@ class Session:
 
         return feed_until
 
+    def _make_transport(self, client, events: list,
+                        faults: FaultTrace | None,
+                        fault_policy: FaultPolicy | None):
+        """Pick the byte-delivery engine for a serving run: the plain
+        precomputed feed plan when the channel is trusted, or a
+        :class:`_FaultRunner` when a fault trace / fault policy is in
+        play. Returns ``(feed_until, runner_or_None)``."""
+        if faults is None and fault_policy is None:
+            return self._make_feeder(client, events), None
+        if faults is not None and not self.layout.integrity:
+            raise ValueError(
+                "fault injection requires the v3 integrity wire — "
+                "encode the stream with wire.encode(model, integrity=True) "
+                "so corrupt units can be detected and quarantined")
+        runner = _FaultRunner(self, client, events,
+                              faults, fault_policy or FaultPolicy())
+        return runner.feed_until, runner
+
     # -- mode 2: the operational serve path --------------------------------
     def run_serving(self, model, prog, *, decode_steps: int, batch: dict,
                     step_time_s: float | None = None,
                     max_len: int | None = None,
                     resident: str | None = None,
-                    speculative=None, mesh=None) -> SessionResult:
+                    speculative=None, mesh=None,
+                    faults: FaultTrace | None = None,
+                    fault_policy: FaultPolicy | None = None) -> SessionResult:
         """Drive a real ProgressiveServer from the byte stream: the
         server sits on the client's PlaneStore (one ingest per stage,
         one batched Pallas launch per container dtype) and decodes real
@@ -337,11 +404,17 @@ class Session:
                                        mesh=mesh)
         events: list[SessionEvent] = []
         arrivals = self.stage_arrival_times()
-        feed_until = self._make_feeder(client, events)
+        feed_until, runner = self._make_transport(client, events,
+                                                  faults, fault_policy)
 
-        # cold start: serve as soon as stage 1 is in
-        t_cold = arrivals[0]
-        feed_until(t_cold)
+        # cold start: serve as soon as stage 1 is in. On a faulty
+        # channel stage 1 lands whenever its units verify, not at the
+        # clean-trace arrival time — ask the runner.
+        if runner is not None:
+            t_cold = runner.run_until_stage(1)
+        else:
+            t_cold = arrivals[0]
+            feed_until(t_cold)
         if client.stages_complete < 1:
             raise AssertionError("stage 1 not complete at its arrival time")
         server.receive_stage()
@@ -386,11 +459,20 @@ class Session:
         for step, stage in res.upgrades:
             events.append(SessionEvent(
                 step_wall(step), "upgrade", {"step": step, "stage": stage}))
+        transport = None
+        if runner is not None:
+            # converge the transport: every quarantined unit repaired,
+            # every stage verified — the acceptance bar is that the
+            # final store is bit-identical to a clean stream's
+            runner.pump_all()
+            transport = runner.summary()
+            events.append(SessionEvent(
+                runner.wall(), "transport_summary", transport))
         events.sort(key=lambda e: e.t_s)
         return SessionResult(
             events=events, client=client, server=server,
             tokens=res.tokens, upgrades=res.upgrades,
-            stage_at_step=res.stage_at_step)
+            stage_at_step=res.stage_at_step, transport=transport)
 
     # -- mode 3: continuous batching under a flash crowd -------------------
     def run_serving_pool(self, model, prog, *, prompts: Sequence,
@@ -402,7 +484,10 @@ class Session:
                          step_time_s: float | None = None,
                          dispatch_window: int = 4,
                          chunked_prefill: bool | None = None,
-                         speculative=None, mesh=None) -> SessionResult:
+                         speculative=None, mesh=None,
+                         faults: FaultTrace | None = None,
+                         fault_policy: FaultPolicy | None = None,
+                         ) -> SessionResult:
         """Flash-crowd serving: N requests join mid-download over ONE
         shared byte stream, and a :class:`~repro.serving.engine.
         SlotPoolEngine` serves them all from the client's PlaneStore —
@@ -480,10 +565,14 @@ class Session:
                                     mesh=mesh)
         events: list[SessionEvent] = []
         arrivals = self.stage_arrival_times()
-        feed_until = self._make_feeder(client, events)
+        feed_until, runner = self._make_transport(client, events,
+                                                  faults, fault_policy)
 
-        t_cold = arrivals[0]
-        feed_until(t_cold)
+        if runner is not None:
+            t_cold = runner.run_until_stage(1)
+        else:
+            t_cold = arrivals[0]
+            feed_until(t_cold)
         if client.stages_complete < 1:
             raise AssertionError("stage 1 not complete at its arrival time")
         engine.receive_stage()
@@ -615,9 +704,385 @@ class Session:
                  "active": 0, "stage": engine.stage}))
         log_accepts(t_end)
         log_evictions(t_end)
+        transport = None
+        if runner is not None:
+            runner.pump_all()
+            transport = runner.summary()
+            events.append(SessionEvent(
+                runner.wall(), "transport_summary", transport))
         events.sort(key=lambda e: e.t_s)
         return SessionResult(
             events=events, client=client, server=engine,
             tokens={rid: list(v) for rid, v in engine.outputs.items()},
             upgrades=list(engine.upgrades),
-            admissions=admissions)
+            admissions=admissions, transport=transport)
+
+
+class _FaultRunner:
+    """Stateful byte-delivery engine for a faulty channel.
+
+    Couples three clocks/queues deterministically:
+
+    * the stream queue — undelivered ``(a, b)`` wire ranges on the
+      chunk grid (rebuilt from the client's resume cursor after a
+      disconnect or desync);
+    * the repair queue — quarantined units awaiting re-request, each
+      with its own attempt counter and backoff-derived ready time;
+    * the trace clock ``clock`` (plus ``lat``, the accumulated
+      per-connection latency) — every delivery advances it via
+      ``time_to_deliver`` so all fault/retry/repair events land on the
+      byte clock and the whole run is replayable from
+      (blob, trace, faults, policy).
+
+    Recovery routing: isolated CRC failures -> per-unit NACK/repair;
+    two consecutive stream-unit failures, any disconnect, or a dead
+    header -> reconnect and replay from the client's cursor; a
+    delivery exceeding ``chunk_timeout_s`` -> abandon + backoff +
+    retry. Any target exceeding ``max_retries`` raises
+    :class:`TransportError`.
+    """
+
+    DESYNC_AFTER = 2  # consecutive stream-unit failures -> assume desync
+
+    def __init__(self, session: "Session", client: ProgressiveClient,
+                 events: list, faults: FaultTrace | None,
+                 policy: FaultPolicy):
+        self.session = session
+        self.client = client
+        self.events = events
+        self.policy = policy
+        self.injector = faults.start() if faults is not None else None
+        self.rng = np.random.default_rng(policy.seed)
+        self.queue: list[tuple[int, int]] = list(session._pieces())
+        self.clock = 0.0            # trace-clock time of last delivery
+        self.lat = session.latency_s
+        self.not_before = 0.0       # trace-clock floor (backoff idles)
+        self.repairs: list[dict] = []
+        self.known_nacks: set[int] = set()
+        self.stream_attempt = 0
+        self.reconnects = 0
+        self.repaired_units = 0
+        self.consec_stream_nacks = 0
+        self.done = False
+        self._last_verified = 0
+        # unit seq -> absolute (a, b) wire range, for re-requests
+        if session.layout.integrity:
+            offs = session.layout.unit_offsets()
+            sizes = [e[2] for st in session.layout.stages for e in st]
+            self._unit_ranges = [(o, o + n) for o, n in zip(offs, sizes)]
+        else:
+            self._unit_ranges = []
+
+    # -- clocks ------------------------------------------------------------
+    def wall(self) -> float:
+        return self.lat + self.clock
+
+    def _log(self, t: float, kind: str, data: dict) -> None:
+        self.events.append(SessionEvent(t, kind, data))
+
+    # -- candidate selection -------------------------------------------------
+    def _next_repair(self) -> dict | None:
+        if not self.repairs:
+            return None
+        return min(self.repairs, key=lambda r: (r["ready_wall"], r["seq"]))
+
+    def _peek(self):
+        """Earliest deliverable item: ('repair'|'stream', item,
+        start_trace, end_trace). Repairs win ties — the server is
+        stalled at the last verified stage until they land."""
+        trace = self.session.trace
+        cands = []
+        r = self._next_repair()
+        if r is not None:
+            a, b = self._unit_ranges[r["seq"]]
+            start = max(self.clock, self.not_before,
+                        r["ready_wall"] - self.lat)
+            end = trace.time_to_deliver(b - a, start_s=start)
+            cands.append((end, 0, "repair", r, start))
+        if self.queue:
+            a, b = self.queue[0]
+            start = max(self.clock, self.not_before)
+            end = trace.time_to_deliver(b - a, start_s=start)
+            cands.append((end, 1, "stream", (a, b), start))
+        if not cands:
+            return None
+        end, _, kind, item, start = min(cands)
+        return kind, item, start, end
+
+    def next_wall(self) -> float | None:
+        """Wall time of the next event (delivery or timeout), without
+        committing it."""
+        got = self._peek()
+        if got is None:
+            if self.done or self._reconcile_end_of_stream(dry=True):
+                return None
+            return self.wall()  # recovery bookkeeping is due now
+        _, _, start, end = got
+        if end - start > self.policy.chunk_timeout_s:
+            return self.lat + start + self.policy.chunk_timeout_s
+        return self.lat + end
+
+    # -- the drivers ---------------------------------------------------------
+    def feed_until(self, t_wall: float) -> None:
+        while True:
+            nxt = self.next_wall()
+            if nxt is None or nxt > t_wall:
+                return
+            self.step()
+
+    def pump_all(self) -> None:
+        """Drive the transport to completion (or TransportError)."""
+        cap = 20_000 + len(self._unit_ranges) * (self.policy.max_retries + 2) * 4
+        n = 0
+        while self.step():
+            n += 1
+            if n > cap:
+                raise AssertionError(
+                    "fault transport did not converge (internal bug: "
+                    f"{n} steps, cursor {self.client.resume_cursor})")
+
+    def run_until_stage(self, k: int) -> float:
+        while self.client.stages_complete < k:
+            if not self.step():
+                raise AssertionError(
+                    f"stream ended at stage {self.client.stages_complete} "
+                    f"before reaching stage {k}")
+        return self.wall()
+
+    def step(self) -> bool:
+        """Perform the next transport event. Returns False when the
+        stream is fully delivered and every quarantined unit repaired."""
+        if self.done:
+            return False
+        got = self._peek()
+        if got is None:
+            if self._reconcile_end_of_stream(dry=False):
+                self.done = True
+                return False
+            return True  # recovery scheduled new work
+        kind, item, start, end = got
+        if end - start > self.policy.chunk_timeout_s:
+            self._on_timeout(kind, item, start)
+            return True
+        if kind == "repair":
+            self._do_repair(item, end)
+        else:
+            self._do_stream(item, end)
+        return True
+
+    # -- timeout / reconnect --------------------------------------------------
+    def _on_timeout(self, kind: str, item, start: float) -> None:
+        p = self.policy
+        self.clock = start + p.chunk_timeout_s
+        if kind == "repair":
+            item["attempt"] += 1
+            attempt, target = item["attempt"], f"unit:{item['seq']}"
+            if attempt > p.max_retries:
+                raise TransportError(
+                    f"unit {item['seq']} timed out after {p.max_retries} "
+                    f"retries ({p.chunk_timeout_s}s each)")
+            back = p.backoff_s(attempt, self.rng)
+            item["ready_wall"] = self.wall() + back + self.session.latency_s
+        else:
+            self.stream_attempt += 1
+            attempt, target = self.stream_attempt, "stream"
+            if attempt > p.max_retries:
+                raise TransportError(
+                    f"stream chunk {item} timed out after {p.max_retries} "
+                    f"retries ({p.chunk_timeout_s}s each)")
+            back = p.backoff_s(attempt, self.rng)
+            self.not_before = self.clock + back
+            self.lat += self.session.latency_s  # new connection
+            self.reconnects += 1
+        self._log(self.wall(), "fault",
+                  {"kind": "timeout", "target": target,
+                   "waited_s": p.chunk_timeout_s})
+        self._log(self.wall(), "retry",
+                  {"target": target, "attempt": attempt,
+                   "backoff_s": round(back, 6)})
+
+    def _reconnect_from_cursor(self, reason: str, *, resync: bool) -> None:
+        """Drop the dead connection and replay the stream from the
+        client's durable cursor. ``resync=True`` additionally rewinds
+        the client to its first unverified unit (desync recovery) and
+        cancels scheduled repairs the replay will cover."""
+        if resync:
+            seq, off = self.client.rewind_to_gap()
+            self.repairs = [r for r in self.repairs if r["seq"] < seq]
+            self.known_nacks = {s for s in self.known_nacks if s < seq}
+        else:
+            self.client.drop_unconsumed()
+            seq, off = self.client.resume_cursor
+        self.stream_attempt += 1
+        if self.stream_attempt > self.policy.max_retries:
+            raise TransportError(
+                f"stream recovery ({reason}) exhausted "
+                f"{self.policy.max_retries} retries at cursor "
+                f"({seq}, {off})")
+        back = self.policy.backoff_s(self.stream_attempt, self.rng)
+        self.not_before = self.clock + back
+        self.lat += self.session.latency_s
+        self.reconnects += 1
+        total = len(self.session.blob)
+        self.queue = [(max(a, off), b)
+                      for a, b in self.session._pieces()
+                      if b > off] if off < total else []
+        self.consec_stream_nacks = 0
+        self._log(self.wall(), "reconnect",
+                  {"reason": reason, "cursor": [seq, off],
+                   "attempt": self.stream_attempt,
+                   "backoff_s": round(back, 6)})
+        self._log(self.wall(), "resume", {"offset": off, "unit_seq": seq})
+
+    # -- deliveries ------------------------------------------------------------
+    def _feed(self, data: bytes, through: int, t: float) -> None:
+        client = self.client
+        before = client.stages_complete
+        had_header = client.header_ready
+        client.feed(data)
+        self._log(t, "chunk", {"bytes": len(data), "through": through})
+        if not had_header and client.header_ready:
+            self._log(t, "header", {"bytes": self.session._header_end})
+        for s in range(before + 1, client.stages_complete + 1):
+            self._log(t, "stage_complete", {"stage": s, "through": through})
+
+    def _do_stream(self, piece: tuple[int, int], end: float) -> None:
+        a, b = piece
+        data = self.session.blob[a:b]
+        if self.injector is not None:
+            d = self.injector.deliver(data)
+        else:
+            from repro.transmission.simulator import ChunkDelivery
+            d = ChunkDelivery(data=data)
+        if d.reorder and len(self.queue) > 1:
+            self.queue[0], self.queue[1] = self.queue[1], self.queue[0]
+            self._log(self.wall(), "fault",
+                      {"kind": "reorder", "chunk": [a, b]})
+            return
+        self.clock = end
+        if d.kind is not None and not d.reorder:
+            detail = dict(d.detail or {})
+            detail.update({"kind": d.kind, "chunk": [a, b]})
+            self._log(self.wall(), "fault", detail)
+        self._feed(d.data, b, self.wall())
+        self.queue.pop(0)
+        if d.duplicate:
+            self.clock = self.session.trace.time_to_deliver(
+                len(d.data), start_s=self.clock)
+            self._feed(d.data, b, self.wall())
+        self._after_feed(disconnected=d.disconnect)
+
+    def _do_repair(self, r: dict, end: float) -> None:
+        seq = r["seq"]
+        a, b = self._unit_ranges[seq]
+        data = self.session.blob[a:b]
+        if self.injector is not None:
+            d = self.injector.deliver(data)
+            data = d.data
+            if d.kind is not None:
+                self._log(self.lat + end, "fault",
+                          {"kind": d.kind, "target": f"unit:{seq}"})
+        self.clock = end
+        before = self.client.stages_complete
+        ok = self.client.feed_repair(seq, data)
+        t = self.wall()
+        self._log(t, "repair", {"seq": seq, "attempt": r["attempt"],
+                                "ok": bool(ok)})
+        for s in range(before + 1, self.client.stages_complete + 1):
+            self._log(t, "stage_complete", {"stage": s, "repair": seq})
+        if ok:
+            self.repairs.remove(r)
+            self.repaired_units += 1
+        else:
+            r["attempt"] += 1
+            if r["attempt"] > self.policy.max_retries:
+                raise TransportError(
+                    f"unit {seq} still corrupt after "
+                    f"{self.policy.max_retries} repair attempts: "
+                    f"{self.client.nacks.get(seq, 'unknown reason')}")
+            back = self.policy.backoff_s(r["attempt"], self.rng)
+            r["ready_wall"] = t + back + self.session.latency_s
+            self._log(t, "retry", {"target": f"unit:{seq}",
+                                   "attempt": r["attempt"],
+                                   "backoff_s": round(back, 6)})
+
+    # -- post-delivery bookkeeping ----------------------------------------------
+    def _after_feed(self, *, disconnected: bool) -> None:
+        client, t = self.client, self.wall()
+        if client.header_failed:
+            self._log(t, "quarantine",
+                      {"target": "header",
+                       "reason": client.quarantine_log[-1]["reason"]})
+            self._reconnect_from_cursor("header_corrupt", resync=False)
+            return
+        new_nacks = [(s, r) for s, r in sorted(client.nacks.items())
+                     if s not in self.known_nacks]
+        for seq, reason in new_nacks:
+            self.known_nacks.add(seq)
+            self._log(t, "quarantine", {"seq": seq, "reason": reason})
+        if client.verified_units > self._last_verified:
+            self._last_verified = client.verified_units
+            self.consec_stream_nacks = 0
+            self.stream_attempt = 0
+        self.consec_stream_nacks += len(new_nacks)
+        if disconnected:
+            self._log(t, "fault", {"kind": "disconnect",
+                                   "cursor": list(client.resume_cursor)})
+            self._reconnect_from_cursor("disconnect", resync=False)
+            return
+        if (self.consec_stream_nacks >= self.DESYNC_AFTER
+                and not client.complete):
+            self._log(t, "fault",
+                      {"kind": "desync",
+                       "consecutive_failures": self.consec_stream_nacks})
+            self._reconnect_from_cursor("desync", resync=True)
+            return
+        for seq, _ in new_nacks:
+            back = self.policy.backoff_s(0, self.rng)
+            self.repairs.append({
+                "seq": seq, "attempt": 0,
+                "ready_wall": t + back + self.session.latency_s})
+            self._log(t, "nack", {"seq": seq,
+                                  "rerequest_backoff_s": round(back, 6)})
+
+    # -- end-of-stream reconciliation ---------------------------------------------
+    def _reconcile_end_of_stream(self, *, dry: bool) -> bool:
+        """Called when both queues are empty. True -> fully delivered;
+        False -> scheduled recovery work (never in ``dry`` mode)."""
+        client = self.client
+        if client.complete:
+            return True
+        if dry:
+            return False
+        if not client.header_ready:
+            # header truncated or its length field corrupted: the only
+            # cure is a fresh stream from byte 0
+            client._buf.clear()
+            client._cursor = 0
+            self._reconnect_from_cursor("header_incomplete", resync=False)
+            return False
+        if client.integrity:
+            seq, off = client.resume_cursor
+            if off < len(self.session.blob) or client.nacks:
+                self._reconnect_from_cursor("tail_missing", resync=True)
+                return False
+        raise AssertionError(
+            "stream exhausted but client incomplete at stage "
+            f"{client.stages_complete} (no recovery path — is the blob "
+            "truncated at the source?)")
+
+    def summary(self) -> dict:
+        inj = self.injector
+        return {
+            "injected": dict(inj.counts) if inj else {},
+            "deliveries": inj.deliveries if inj else 0,
+            "quarantined": len(self.client.quarantine_log),
+            "repaired_units": self.repaired_units,
+            "duplicate_units": self.client.duplicate_units,
+            "reconnects": self.reconnects,
+            "pending_nacks": len(self.client.nacks),
+            "verified_units": self.client.verified_units,
+            "framing_overhead": (
+                wire.framing_overhead(self.session.meta)
+                if self.session.layout.integrity else None),
+        }

@@ -202,10 +202,21 @@ class BandwidthTrace:
     def with_outage(self, start_s: float, duration_s: float) -> "BandwidthTrace":
         """Overlay a zero-rate window on [start_s, start_s+duration_s):
         the channel is dead during the window; the original profile
-        resumes (in absolute time) after it."""
+        resumes (in absolute time) after it.
+
+        Edge cases are pinned (tests/test_simulator.py): a window
+        boundary landing exactly on a segment (or delivery-chunk)
+        boundary produces no zero-length segments and delivery that
+        *ends* exactly at ``start_s`` is unaffected; overlapping
+        windows compose to their union (re-zeroing a dead region is a
+        no-op); ``duration_s <= 0`` returns self; a negative
+        ``start_s`` clamps to 0 (the window's tail still applies)."""
         if duration_s <= 0:
             return self
         end_s = start_s + duration_s
+        start_s = max(start_s, 0.0)
+        if end_s <= start_s:
+            return self
         # ensure explicit coverage past the window (tail rate is held)
         segs = list(zip(self._durations, self._rates))
         if self.duration_s < end_s + 1.0:
@@ -228,6 +239,142 @@ class BandwidthTrace:
         return BandwidthTrace(
             [(d, r * factor) for d, r in zip(self._durations, self._rates)],
             name=self.name)
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+
+FAULT_KINDS = ("corrupt", "truncate", "duplicate", "reorder", "disconnect")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultTrace:
+    """Seeded channel-fault profile, composable with a
+    :class:`BandwidthTrace`: the bandwidth trace says *when* bytes
+    land, the fault trace says *what happens to them* on the way. The
+    session transport applies it per delivered chunk.
+
+    At most one fault fires per delivery, drawn from one uniform
+    against the cumulative probabilities (so the kinds must sum to
+    <= 1):
+
+    * ``corrupt``     — ``flips_per_corruption`` seeded bit flips
+    * ``truncate``    — the chunk's tail is silently dropped
+    * ``duplicate``   — the chunk lands twice
+    * ``reorder``     — the chunk swaps places with its successor
+    * ``disconnect``  — the connection dies mid-chunk (a seeded prefix
+      lands, the rest is lost; the transport must reconnect and resume
+      from the client's cursor)
+
+    Deterministic: an injector (:meth:`start`) consumes one RNG stream
+    in delivery order, so a fixed (seed, probabilities, delivery
+    sequence) reproduces the same faults on any machine. Retransmitted
+    bytes pass through the injector again — repairs can themselves be
+    faulted.
+    """
+
+    seed: int = 0
+    p_corrupt: float = 0.0
+    p_truncate: float = 0.0
+    p_duplicate: float = 0.0
+    p_reorder: float = 0.0
+    p_disconnect: float = 0.0
+    flips_per_corruption: int = 1
+
+    def __post_init__(self):
+        ps = (self.p_corrupt, self.p_truncate, self.p_duplicate,
+              self.p_reorder, self.p_disconnect)
+        if any(p < 0 for p in ps) or sum(ps) > 1.0 + 1e-12:
+            raise ValueError(
+                f"fault probabilities must be >= 0 and sum to <= 1, "
+                f"got {ps}")
+        if self.flips_per_corruption < 1:
+            raise ValueError("flips_per_corruption must be >= 1")
+
+    @property
+    def total_p(self) -> float:
+        return (self.p_corrupt + self.p_truncate + self.p_duplicate
+                + self.p_reorder + self.p_disconnect)
+
+    def start(self) -> "FaultInjector":
+        """Fresh stateful injector (one per transport run)."""
+        return FaultInjector(self)
+
+    def __repr__(self) -> str:
+        on = {k: getattr(self, f"p_{k}") for k in FAULT_KINDS
+              if getattr(self, f"p_{k}") > 0}
+        return f"FaultTrace(seed={self.seed}, {on or 'clean'})"
+
+
+@dataclasses.dataclass
+class ChunkDelivery:
+    """What one chunk delivery looks like after the channel is done
+    with it."""
+
+    data: bytes                 # bytes that actually land
+    kind: str | None = None     # fault kind, None for a clean delivery
+    detail: dict | None = None  # audit payload (positions, kept bytes)
+    duplicate: bool = False     # deliver `data` a second time
+    reorder: bool = False       # hold this chunk; successor goes first
+    disconnect: bool = False    # connection died after `data` landed
+
+
+class FaultInjector:
+    """Stateful per-run consumer of a :class:`FaultTrace`'s RNG stream."""
+
+    def __init__(self, trace: FaultTrace):
+        self.trace = trace
+        self._rng = np.random.default_rng(trace.seed)
+        self.counts: dict[str, int] = {k: 0 for k in FAULT_KINDS}
+        self.deliveries = 0
+
+    @staticmethod
+    def flip_bits(data: bytes, bit_positions) -> bytes:
+        out = bytearray(data)
+        for b in bit_positions:
+            out[b // 8] ^= 1 << (b % 8)
+        return bytes(out)
+
+    def deliver(self, chunk: bytes) -> ChunkDelivery:
+        """Pass one chunk through the channel. Consumes exactly one
+        uniform draw per delivery plus parameter draws when a fault
+        fires."""
+        self.deliveries += 1
+        ft = self.trace
+        u = float(self._rng.random())
+        edges = [("corrupt", ft.p_corrupt), ("truncate", ft.p_truncate),
+                 ("duplicate", ft.p_duplicate), ("reorder", ft.p_reorder),
+                 ("disconnect", ft.p_disconnect)]
+        kind, acc = None, 0.0
+        for k, p in edges:
+            acc += p
+            if u < acc:
+                kind = k
+                break
+        if kind is None or len(chunk) == 0:
+            return ChunkDelivery(data=bytes(chunk))
+        self.counts[kind] += 1
+        if kind == "corrupt":
+            nbits = len(chunk) * 8
+            flips = sorted(int(b) for b in self._rng.integers(
+                0, nbits, size=min(ft.flips_per_corruption, nbits)))
+            return ChunkDelivery(data=self.flip_bits(chunk, flips),
+                                 kind=kind, detail={"bit_positions": flips})
+        if kind == "truncate":
+            keep = int(self._rng.integers(0, len(chunk)))
+            return ChunkDelivery(data=bytes(chunk[:keep]), kind=kind,
+                                 detail={"kept": keep, "lost": len(chunk) - keep})
+        if kind == "duplicate":
+            return ChunkDelivery(data=bytes(chunk), kind=kind,
+                                 detail={}, duplicate=True)
+        if kind == "reorder":
+            return ChunkDelivery(data=bytes(chunk), kind=kind,
+                                 detail={}, reorder=True)
+        keep = int(self._rng.integers(0, len(chunk)))
+        return ChunkDelivery(data=bytes(chunk[:keep]), kind="disconnect",
+                             detail={"kept": keep, "lost": len(chunk) - keep},
+                             disconnect=True)
 
 
 TraceLike = Union[Link, BandwidthTrace]

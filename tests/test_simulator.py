@@ -5,7 +5,9 @@ import numpy as np
 import pytest
 
 from repro.transmission.simulator import (
+    FAULT_KINDS,
     BandwidthTrace,
+    FaultTrace,
     Link,
     as_trace,
     bytes_available,
@@ -183,3 +185,115 @@ def test_simulate_transfer_over_trace_with_stall():
     tr = BandwidthTrace.constant(1e6).with_outage(0.5, 1.0)
     ev = simulate_transfer([("a", 1_000_000)], tr)
     assert ev[0].end_s == pytest.approx(2.0)  # 0.5s + 1s stall + 0.5s
+
+
+# ---------------------------------------------------------------------------
+# with_outage: boundary and composition edge cases pinned (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+def test_outage_boundary_exactly_on_segment_boundary():
+    """An outage starting exactly where a trace segment ends must not
+    create zero-length segments or shift the byte algebra."""
+    tr = BandwidthTrace([(1.0, 1e6), (1.0, 2e6)]).with_outage(1.0, 0.5)
+    assert all(d > 0 for d, _ in tr.segments)
+    assert tr.bytes_available(1.0) == pytest.approx(1e6)
+    assert tr.bytes_available(1.5) == pytest.approx(1e6)   # dead window
+    assert tr.bytes_available(2.0) == pytest.approx(2e6)   # resumed at 2e6
+    # exact inverse pair survives the splice
+    assert tr.time_to_deliver(1_000_000) == pytest.approx(1.0)
+    assert tr.time_to_deliver(2_000_000) == pytest.approx(2.0)
+
+
+def test_delivery_ending_exactly_at_outage_start_is_unaffected():
+    tr = BandwidthTrace.constant(1e6).with_outage(1.0, 5.0)
+    assert tr.time_to_deliver(1_000_000) == pytest.approx(1.0)
+    # one more byte pays the whole outage
+    assert tr.time_to_deliver(1_000_001) > 6.0
+
+
+def test_overlapping_outages_compose_to_their_union():
+    base = BandwidthTrace.constant(1e6)
+    a = base.with_outage(1.0, 2.0).with_outage(2.0, 2.0)   # [1,3)+[2,4)
+    b = base.with_outage(1.0, 3.0)                         # [1,4)
+    for t in (0.5, 1.0, 1.5, 2.5, 3.0, 4.0, 5.0):
+        assert a.bytes_available(t) == pytest.approx(b.bytes_available(t))
+    # re-zeroing an already-dead region is a no-op
+    c = base.with_outage(1.0, 3.0).with_outage(1.5, 1.0)
+    assert c.time_to_deliver(2_000_000) == pytest.approx(
+        b.time_to_deliver(2_000_000))
+
+
+def test_outage_degenerate_windows():
+    base = BandwidthTrace.constant(1e6)
+    assert base.with_outage(1.0, 0.0) is base     # zero duration: no-op
+    assert base.with_outage(1.0, -2.0) is base    # negative: no-op
+    assert base.with_outage(-5.0, 2.0) is base    # fully before t=0
+    tail = base.with_outage(-1.0, 2.0)            # clamps to [0, 1)
+    assert tail.bytes_available(1.0) == pytest.approx(0.0)
+    assert tail.time_to_deliver(1_000_000) == pytest.approx(2.0)
+
+
+# ---------------------------------------------------------------------------
+# FaultTrace: seeded channel damage
+# ---------------------------------------------------------------------------
+
+def test_fault_trace_validation():
+    with pytest.raises(ValueError):
+        FaultTrace(p_corrupt=-0.1)
+    with pytest.raises(ValueError):
+        FaultTrace(p_corrupt=0.6, p_truncate=0.5)  # sum > 1
+    with pytest.raises(ValueError):
+        FaultTrace(flips_per_corruption=0)
+    assert FaultTrace(p_corrupt=0.5, p_truncate=0.5).total_p == 1.0
+
+
+def test_fault_injector_deterministic_in_seed():
+    ft = FaultTrace(seed=7, p_corrupt=0.3, p_truncate=0.2,
+                    p_duplicate=0.1, p_reorder=0.1, p_disconnect=0.1)
+    chunks = [bytes([i % 256]) * (50 + i) for i in range(200)]
+
+    def run():
+        inj = ft.start()
+        return [(d.kind, d.data, d.duplicate, d.reorder, d.disconnect)
+                for d in (inj.deliver(c) for c in chunks)]
+
+    a, b = run(), run()
+    assert a == b
+    kinds = {k for k, *_ in a if k}
+    assert kinds == set(FAULT_KINDS)  # at these rates every kind fires
+    # a different seed gives a different realization
+    assert run() != [
+        (d.kind, d.data, d.duplicate, d.reorder, d.disconnect)
+        for d in (FaultTrace(seed=8, p_corrupt=0.3, p_truncate=0.2,
+                             p_duplicate=0.1, p_reorder=0.1,
+                             p_disconnect=0.1).start().deliver(c)
+                  for c in chunks)]
+
+
+def test_fault_kinds_mutate_as_documented():
+    chunk = bytes(range(256))
+    # corrupt: same length, exactly flips_per_corruption bits differ
+    inj = FaultTrace(seed=0, p_corrupt=1.0, flips_per_corruption=3).start()
+    d = inj.deliver(chunk)
+    assert d.kind == "corrupt" and len(d.data) == len(chunk)
+    diff = np.unpackbits(np.frombuffer(d.data, np.uint8)
+                         ^ np.frombuffer(chunk, np.uint8))
+    assert int(diff.sum()) == 3
+    # truncate: strict prefix
+    d = FaultTrace(seed=1, p_truncate=1.0).start().deliver(chunk)
+    assert d.kind == "truncate" and len(d.data) < len(chunk)
+    assert chunk.startswith(d.data)
+    # duplicate/reorder: data untouched, flags set
+    d = FaultTrace(seed=2, p_duplicate=1.0).start().deliver(chunk)
+    assert d.duplicate and d.data == chunk
+    d = FaultTrace(seed=3, p_reorder=1.0).start().deliver(chunk)
+    assert d.reorder and d.data == chunk
+    # disconnect: prefix lands, flag set
+    d = FaultTrace(seed=4, p_disconnect=1.0).start().deliver(chunk)
+    assert d.disconnect and chunk.startswith(d.data)
+    # clean trace never mutates
+    inj = FaultTrace(seed=5).start()
+    assert all(inj.deliver(chunk).kind is None for _ in range(32))
+    # empty chunks pass through untouched even at p=1
+    d = FaultTrace(seed=6, p_corrupt=1.0).start().deliver(b"")
+    assert d.kind is None and d.data == b""
