@@ -71,7 +71,7 @@ def _delivered_bytes(events, unit_sizes) -> int:
         if e.kind == "chunk":
             total += e.data["bytes"]
         elif e.kind == "repair":
-            total += unit_sizes[e.data["seq"]]
+            total += unit_sizes[e.data["unit"]]
     return total
 
 

@@ -42,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as _obs
 from repro.core.bitplanes import PlaneSchedule
 from repro.core.quantize import (QuantizedTensor, affine_span,
                                  container_dtype, dequant_affine,
@@ -336,6 +337,12 @@ class PlaneStore:
         work and transfers are O(touched bytes); the write-back is a
         single whole-buffer update (immutable arrays), not one per
         segment."""
+        if _obs.enabled():
+            reg = _obs.get_registry()
+            reg.counter("store_or_rounds_total",
+                        "batched plane-OR rounds").inc()
+            reg.histogram("store_or_round_planes",
+                          "planes per OR round").observe(len(items))
         by_dtype: dict[str, list[int]] = {}
         for idx in items:
             dt = np.dtype(self.slots[idx].container).name
@@ -431,6 +438,13 @@ class PlaneStore:
         if not stale:
             return
         jobs = [i for _, idxs in stale for i in idxs]
+        if _obs.enabled():
+            reg = _obs.get_registry()
+            reg.counter("store_refresh_dispatches_total",
+                        "batched eq.-(5) refresh dispatches").inc()
+            reg.histogram("store_refresh_slots",
+                          "tensor slots per refresh dispatch").observe(
+                              len(jobs))
         consts = self._consts_cache.get(tuple(jobs))
         if consts is None:
             consts = dequant_constants([self.slots[i].lo for i in jobs],

@@ -32,6 +32,18 @@ def reset_launch_counts() -> None:
     LAUNCH_COUNTS.clear()
 
 
+def _count(name: str) -> None:
+    """Tally one dispatch: the legacy ``LAUNCH_COUNTS`` view plus the
+    telemetry registry (``kernel_launches_total{kernel=...}``) when it
+    is enabled — one source of truth, two readers."""
+    LAUNCH_COUNTS[name] += 1
+    from repro import obs as _obs
+    if _obs.enabled():
+        _obs.get_registry().counter(
+            "kernel_launches_total",
+            "Pallas kernel dispatches by entry point").inc(kernel=name)
+
+
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
@@ -40,7 +52,7 @@ def dequant_matmul(x, q, scale, offset, **kw):
     """y = x @ (scale * q + offset); the eq.-(5) affine rides in as
     traced (1, 1) operands (see ``repro.core.quantize.dequant_affine``),
     so precision upgrades never recompile a jitted consumer."""
-    LAUNCH_COUNTS["dequant_matmul"] += 1
+    _count("dequant_matmul")
     kw.setdefault("interpret", _interpret_default())
     return _dqm.dequant_matmul(x, q, scale, offset, **kw)
 
@@ -73,25 +85,25 @@ def sharded_dequant_matmul(x, q, scale, offset, *, mesh, axis: str = "model"):
     shard_map half of the sharded serving story; the engines' model
     path uses jit-with-shardings (``models.common.serving_mesh``)
     instead, which XLA partitions from the same specs."""
-    LAUNCH_COUNTS["sharded_dequant_matmul"] += 1
+    _count("sharded_dequant_matmul")
     return _sharded_dqm(mesh, axis, _interpret_default())(
         x, q, scale, offset)
 
 
 def plane_or(acc, plane, *, shift, **kw):
-    LAUNCH_COUNTS["plane_or"] += 1
+    _count("plane_or")
     kw.setdefault("interpret", _interpret_default())
     return _bp.plane_or(acc, plane, shift=shift, **kw)
 
 
 def plane_or_segments(acc, plane, shifts, **kw):
-    LAUNCH_COUNTS["plane_or_segments"] += 1
+    _count("plane_or_segments")
     kw.setdefault("interpret", _interpret_default())
     return _bp.plane_or_segments(acc, plane, shifts, **kw)
 
 
 def plane_extract(q, *, bits, before, width, **kw):
-    LAUNCH_COUNTS["plane_extract"] += 1
+    _count("plane_extract")
     kw.setdefault("interpret", _interpret_default())
     return _bp.plane_extract(q, bits=bits, before=before, width=width, **kw)
 
@@ -99,7 +111,7 @@ def plane_extract(q, *, bits, before, width, **kw):
 def flash_decode(q, k, v, k_pos, q_pos, *, window=0, softcap=0.0, **kw):
     """Ragged batched decode attention: q (B, H, hd); k/v in the native
     (B, Kh, S, hd) cache layout; k_pos (B, S); q_pos (B,)."""
-    LAUNCH_COUNTS["flash_decode"] += 1
+    _count("flash_decode")
     kw.setdefault("interpret", _interpret_default())
     return _da.flash_decode(
         q, k, v, k_pos, q_pos, window=window, softcap=softcap, **kw
@@ -117,7 +129,7 @@ def decode_attention(q, k, v, k_pos, q_pos, *, window=0, softcap=0.0):
     pinned by tests/test_kernels.py. (No pass-through kwargs: kernel
     tuning knobs like ``bs`` belong to :func:`flash_decode` callers,
     and the two backends must accept identical calls.)"""
-    LAUNCH_COUNTS["decode_attention"] += 1
+    _count("decode_attention")
     if jax.default_backend() == "tpu":
         return _da.flash_decode(
             q, k, v, k_pos, q_pos, window=window, softcap=softcap,
@@ -134,7 +146,7 @@ def flash_verify(q, k, v, k_pos, q_pos, *, window=0, softcap=0.0, **kw):
     """Ragged draft-block verify attention: q (B, T, H, hd); k/v in the
     native (B, Kh, S, hd) cache layout; k_pos (B, S); q_pos (B, T)
     per-token positions (negative = masked row)."""
-    LAUNCH_COUNTS["flash_verify"] += 1
+    _count("flash_verify")
     kw.setdefault("interpret", _interpret_default())
     return _va.flash_verify(
         q, k, v, k_pos, q_pos, window=window, softcap=softcap, **kw
@@ -150,7 +162,7 @@ def verify_attention(q, k, v, k_pos, q_pos, *, window=0, softcap=0.0):
     lossless speculative decoding token-identical to plain greedy on
     this backend. Same no-pass-through-kwargs rule as
     :func:`decode_attention`."""
-    LAUNCH_COUNTS["verify_attention"] += 1
+    _count("verify_attention")
     if jax.default_backend() == "tpu":
         return _va.flash_verify(
             q, k, v, k_pos, q_pos, window=window, softcap=softcap,
@@ -177,7 +189,7 @@ def prefill_attention(q, k, v, k_pos, q_pos, *, window=0, softcap=0.0):
     same program either way); elsewhere the jnp oracle
     ``kernels/ref.flash_prefill_ref``. Same no-pass-through-kwargs rule
     as :func:`decode_attention`."""
-    LAUNCH_COUNTS["prefill_attention"] += 1
+    _count("prefill_attention")
     if jax.default_backend() == "tpu":
         return _va.flash_verify(
             q, k, v, k_pos, q_pos, window=window, softcap=softcap,

@@ -38,6 +38,26 @@ def _write_event_log(result, event_log: str | None) -> None:
     print(f"event log -> {path}")
 
 
+def _write_metrics(metrics: str | None) -> None:
+    """Dump the telemetry registry: Prometheus text at ``metrics``,
+    the structured summary (with spans) as JSON at ``metrics + '.json'``."""
+    if not metrics:
+        return
+    import json
+
+    from repro import obs
+    from repro.obs.exporters import to_prometheus, to_summary
+
+    path = Path(metrics)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(to_prometheus(obs.get_registry()))
+    summary_path = path.with_name(path.name + ".json")
+    summary_path.write_text(json.dumps(
+        to_summary(obs.get_registry(), obs.get_tracer()),
+        indent=2, sort_keys=True) + "\n")
+    print(f"metrics -> {path} (+ {summary_path.name})")
+
+
 def _verify_fault_recovery(result, blob, model, prog, batch,
                            *, decode_steps: int = 8) -> None:
     """The lossy run's acceptance check: after the transport converged,
@@ -154,6 +174,11 @@ def main() -> None:
                          "--xla_force_host_platform_device_count=8)")
     ap.add_argument("--event-log", default=None,
                     help="write the session's audit log (JSONL) here")
+    ap.add_argument("--metrics", default=None,
+                    help="enable the telemetry registry for this run and "
+                         "write its Prometheus text export here (plus the "
+                         "structured summary at <path>.json); analyze "
+                         "event logs with repro-telemetry")
     ap.add_argument("--faults", action="store_true",
                     help="lossy-channel mode: encode the stream on the v3 "
                          "integrity wire and inject seeded channel faults "
@@ -169,6 +194,11 @@ def main() -> None:
                     help="seed for the fault profile and retry jitter "
                          "(default: --seed)")
     args = ap.parse_args()
+
+    if args.metrics:
+        from repro import obs
+
+        obs.configure(True)
 
     mesh = None
     if args.mesh_shards > 1:
@@ -275,6 +305,7 @@ def main() -> None:
                   f"injected={t['injected']} "
                   f"quarantined={t['quarantined']}")
         _write_event_log(result, args.event_log)
+        _write_metrics(args.metrics)
         return
 
     batch = build_batch(cfg, args.batch, args.prompt_len, seed=1)
@@ -317,6 +348,7 @@ def main() -> None:
     print(f"served {args.decode_steps} steps across {server.stage} precision "
           f"stages; {len(result.events)} audited session events")
     _write_event_log(result, args.event_log)
+    _write_metrics(args.metrics)
 
 
 if __name__ == "__main__":

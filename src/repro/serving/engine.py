@@ -55,6 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as _obs
 from repro.core import wire
 from repro.core.progressive import ProgressiveModel, ReceiverState, rebuild_params
 from repro.core.quantize import QuantizedTensor
@@ -312,6 +313,14 @@ class PrecisionManagedEngine:
             "ingest_s": t1 - t0,
             "refresh_s": time.perf_counter() - t1,
         }
+        if _obs.enabled():
+            tr = _obs.get_tracer()
+            tr.record("upgrade_ingest",
+                      wall_s=self._last_upgrade_split["ingest_s"],
+                      stage=self.stage)
+            tr.record("upgrade_refresh",
+                      wall_s=self._last_upgrade_split["refresh_s"],
+                      stage=self.stage)
 
 
 class ProgressiveServer(PrecisionManagedEngine):
@@ -399,10 +408,21 @@ class ProgressiveServer(PrecisionManagedEngine):
                 dt = now - win_t0
                 window_s.append((win_steps, dt))
                 per_step.extend([dt / win_steps] * win_steps)
+                if _obs.enabled():
+                    _obs.get_tracer().record(
+                        "decode_window", wall_s=dt, engine="single")
                 win_t0 = now
                 win_steps = 0
         total = time.perf_counter() - t_start
         self.last_logits = logits
+        if _obs.enabled():
+            reg = _obs.get_registry()
+            reg.histogram("engine_ttft_s",
+                          "wall seconds to first token value").observe(
+                              ttft or 0.0, engine="single")
+            reg.counter("engine_tokens_total",
+                        "tokens emitted by serving engines").inc(
+                            steps, engine="single")
         return GenerationResult(
             tokens=jnp.stack(toks, axis=1),
             stage_at_step=stage_at,
@@ -834,6 +854,11 @@ class SlotPoolEngine(PrecisionManagedEngine):
         t = self._submit_t.get(rid)
         if t is not None and rid not in self.ttft_s:
             self.ttft_s[rid] = time.perf_counter() - t
+            if _obs.enabled():
+                _obs.get_registry().histogram(
+                    "engine_ttft_s",
+                    "wall seconds to first token value").observe(
+                        self.ttft_s[rid], engine=type(self).__name__)
 
     def _evict(self, slot: int) -> int:
         rid = self.slots[slot].rid
@@ -912,12 +937,32 @@ class SlotPoolEngine(PrecisionManagedEngine):
                               upgrades=self._win_upgrades,
                               upgrade_enqueue_s=self._win_upgrade_enqueue_s,
                               prefill_ticks=self._win_prefill_ticks)
+        return self._record_window(stats)
+
+    def _record_window(self, stats: PoolStepStats) -> PoolStepStats:
+        """Window chokepoint shared with the speculative pool: append
+        to the legacy ``window_stats`` view, reset the per-window
+        accumulators, mirror the stats into the telemetry registry."""
         self.window_stats.append(stats)
         self._pending.clear()
         self._win_t0 = None
         self._win_upgrades = 0
         self._win_upgrade_enqueue_s = 0.0
         self._win_prefill_ticks = 0
+        if _obs.enabled():
+            engine = type(self).__name__
+            reg = _obs.get_registry()
+            reg.counter("engine_tokens_total",
+                        "tokens emitted by serving engines").inc(
+                            stats.tokens_emitted, engine=engine)
+            reg.counter("engine_prefill_ticks_total",
+                        "chunked prefill ticks").inc(
+                            stats.prefill_ticks, engine=engine)
+            reg.histogram("engine_window_steps",
+                          "decode steps per flushed window").observe(
+                              stats.steps, engine=engine)
+            _obs.get_tracer().record("decode_window", wall_s=stats.wall_s,
+                                     engine=engine)
         return stats
 
     def upgrade_if_available(self) -> bool:
@@ -953,7 +998,7 @@ class SlotPoolEngine(PrecisionManagedEngine):
         self._win_upgrades += 1
         self._win_upgrade_enqueue_s += enqueue_s
         split = getattr(self, "_last_upgrade_split", None) or {}
-        self.upgrade_log.append({
+        self._record_upgrade({
             "step": self._step_count, "stage": self.stage,
             "enqueue_s": enqueue_s, "stall_s": stall_s,
             # enqueue split: host time ingesting planes (store OR
@@ -967,6 +1012,23 @@ class SlotPoolEngine(PrecisionManagedEngine):
             "double_buffer": self.double_buffer})
         self.upgrades.append((self._step_count, self.stage))
         return True
+
+    def _record_upgrade(self, rec: dict) -> None:
+        """Upgrade chokepoint: the legacy ``upgrade_log`` record plus
+        registry counters/histograms over the same values."""
+        self.upgrade_log.append(rec)
+        if _obs.enabled():
+            engine = type(self).__name__
+            reg = _obs.get_registry()
+            reg.counter("engine_upgrades_total",
+                        "precision upgrades applied").inc(
+                            engine=engine, stage=rec["stage"])
+            reg.histogram("engine_upgrade_enqueue_s",
+                          "host enqueue seconds per upgrade").observe(
+                              rec["enqueue_s"], engine=engine)
+            reg.histogram("engine_upgrade_stall_s",
+                          "host-blocked seconds per upgrade").observe(
+                              rec["stall_s"], engine=engine)
 
     def run(self, *, max_steps: int = 100_000,
             on_window: Callable[[int], None] | None = None) -> dict[int, list[int]]:

@@ -58,6 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as _obs
 from repro.core.policy import SpeculationController
 from repro.models.common import quantized_resident_eligible
 from repro.serving.engine import (PoolStepStats, ProgressiveServer,
@@ -221,6 +222,26 @@ class _SpeculativeMixin:
         their upgrades through here)."""
         super().receive_stage()
         self.controller.on_upgrade()
+
+    def _record_accept(self, rec: dict) -> dict:
+        """Accept-round chokepoint: the legacy ``accept_log`` record
+        plus registry views over the same values (round counter,
+        accepted-per-slot histogram, controller-rate gauge)."""
+        self.accept_log.append(rec)
+        if _obs.enabled():
+            engine = type(self).__name__
+            reg = _obs.get_registry()
+            reg.counter("spec_rounds_total",
+                        "speculative accept rounds").inc(engine=engine)
+            acc = rec["accepted"]
+            for a in (acc if isinstance(acc, list) else [acc]):
+                reg.histogram("spec_accepted_per_round",
+                              "accepted drafts per slot per round").observe(
+                                  a, engine=engine)
+            reg.gauge("spec_accept_rate",
+                      "controller acceptance EWMA").set(
+                          rec["rate"], engine=engine)
+        return rec
 
     def received_bits_now(self) -> int:
         """Min effective precision across the store's tensors — what the
@@ -411,16 +432,26 @@ class SpeculativeEngine(_SpeculativeMixin, ProgressiveServer):
             accepted_total += int(acc_np[active].sum())
             self.controller.update(int(acc_np[active].sum()),
                                    k_eff * n_active)
-            rec = {"round": rounds, "k": k_eff,
-                   "accepted": [int(a) for a in acc_np[active]],
-                   "rate": self.controller.rate, "stage": self.stage,
-                   "emitted": [len(e) for e in emitted]}
-            self.accept_log.append(rec)
+            rec = self._record_accept(
+                {"round": rounds, "k": k_eff,
+                 "accepted": [int(a) for a in acc_np[active]],
+                 "rate": self.controller.rate, "stage": self.stage,
+                 "emitted": [len(e) for e in emitted]})
             if on_round is not None:
                 on_round(rec)
             rounds += 1
         wall = time.perf_counter() - t_start
         self.last_logits = None  # the plain path's handle is stale now
+        if _obs.enabled():
+            reg = _obs.get_registry()
+            reg.histogram("engine_ttft_s",
+                          "wall seconds to first token value").observe(
+                              ttft, engine="SpeculativeEngine")
+            reg.counter("engine_tokens_total",
+                        "tokens emitted by serving engines").inc(
+                            steps * B, engine="SpeculativeEngine")
+            _obs.get_tracer().record("decode_window", wall_s=wall,
+                                     engine="SpeculativeEngine")
         return SpeculativeResult(
             tokens=jnp.asarray(np.array([e[:steps] for e in emitted],
                                         np.int32)),
@@ -594,7 +625,7 @@ class SpeculativeSlotPool(_SpeculativeMixin, SlotPoolEngine):
         for g, acc, snapshot, stage, k_eff in self._pending:
             g_np = np.asarray(g)
             acc_np = np.asarray(acc)
-            self.accept_log.append({
+            self._record_accept({
                 "k": k_eff, "accepted": [int(acc_np[s]) for s in snapshot],
                 "rate": self.controller.rate, "stage": stage})
             self.controller.update(
@@ -624,10 +655,4 @@ class SpeculativeSlotPool(_SpeculativeMixin, SlotPoolEngine):
                               upgrades=self._win_upgrades,
                               upgrade_enqueue_s=self._win_upgrade_enqueue_s,
                               prefill_ticks=self._win_prefill_ticks)
-        self.window_stats.append(stats)
-        self._pending.clear()
-        self._win_t0 = None
-        self._win_upgrades = 0
-        self._win_upgrade_enqueue_s = 0.0
-        self._win_prefill_ticks = 0
-        return stats
+        return self._record_window(stats)

@@ -42,6 +42,7 @@ from typing import Callable
 
 import numpy as np
 
+from repro import obs as _obs
 from repro.core import wire
 from repro.core.plane_store import PlaneStore
 
@@ -87,6 +88,16 @@ class ProgressiveClient:
             self.header_failed = False
         self._buf.extend(chunk)
         self._advance()
+        if _obs.enabled():
+            reg = _obs.get_registry()
+            reg.counter("client_bytes_fed_total",
+                        "bytes fed to the progressive client").inc(
+                            len(chunk))
+            seq, off = self.resume_cursor
+            reg.gauge("client_resume_cursor_unit",
+                      "first unit not fully arrived").set(seq)
+            reg.gauge("client_resume_cursor_byte",
+                      "wire offset of the resume cursor").set(off)
 
     @property
     def stages_complete(self) -> int:
@@ -188,11 +199,17 @@ class ProgressiveClient:
             raise ValueError(f"repair seq {seq} out of range")
         if seq in self._verified:
             self.duplicate_units += 1
+            _obs.get_registry().counter(
+                "client_duplicate_units_total",
+                "duplicate unit deliveries dropped").inc()
             return True
         ok = self._verify_and_stash(seq, bytes(payload), origin="repair")
         if ok:
             self._nacks.pop(seq, None)
             self._advance_contig()
+        _obs.get_registry().counter(
+            "client_repairs_total",
+            "out-of-band unit repairs").inc(ok=ok)
         return ok
 
     # -- internal machinery --------------------------------------------------
@@ -325,9 +342,15 @@ class ProgressiveClient:
             self._nacks[seq] = reason
             self.quarantine_log.append({"seq": seq, "origin": origin,
                                         "reason": reason})
+            _obs.get_registry().counter(
+                "client_quarantined_total",
+                "units quarantined before ingest").inc(origin=origin)
             return False
         self._ready[seq] = (idx, plane)
         self._verified.add(seq)
+        _obs.get_registry().counter(
+            "client_units_verified_total",
+            "integrity-verified units").inc(origin=origin)
         return True
 
     def _advance_contig(self) -> None:
@@ -358,8 +381,21 @@ class ProgressiveClient:
         """Push buffered planes into the store: one batched Pallas
         launch per container dtype (per plane round)."""
         if self._pending:
+            if _obs.enabled():
+                reg = _obs.get_registry()
+                reg.counter("client_planes_ored_total",
+                            "planes OR-ed into the store").inc(
+                                len(self._pending))
+                reg.histogram("client_flush_planes",
+                              "planes per batched flush").observe(
+                                  len(self._pending))
             self.store.ingest(self._pending)
             self._pending = []
+            if _obs.enabled():
+                _obs.get_registry().gauge(
+                    "store_resident_bytes",
+                    "accumulator bytes resident on device").set(
+                        self.store.resident_bytes())
 
     # -- inference-side view -------------------------------------------------
     def materialize(self):

@@ -37,6 +37,7 @@ from typing import Any, Callable, Sequence
 
 import numpy as np
 
+from repro import obs as _obs
 from repro.core import wire
 from repro.transmission.client import ProgressiveClient
 from repro.transmission.scheduler import StageCost, Timeline
@@ -90,12 +91,93 @@ class FaultPolicy:
 
 @dataclasses.dataclass(frozen=True)
 class SessionEvent:
-    """One entry of the audit log. ``data`` is JSON-able."""
+    """One entry of the audit log. ``data`` is JSON-able. ``seq`` is
+    the emission-order tiebreak: events are sorted by ``(t_s, seq)``,
+    so logs with equal timestamps are reproducibly ordered."""
 
     t_s: float
-    kind: str   # chunk | header | stage_complete | result_ready |
-                # cold_start | upgrade | decode_step
+    kind: str   # see repro.obs.schema.EVENT_SCHEMAS for the registry
     data: dict
+    seq: int = 0
+
+
+class _EventRecorder(list):
+    """Event sink for a session run: stamps each appended
+    :class:`SessionEvent` with a monotonic ``seq`` and, when the global
+    telemetry registry is enabled, mirrors the event into it (counters
+    for chunks/faults/retries, byte-clock spans for stage arrivals).
+    A plain ``list`` still works wherever events are collected
+    (``seq`` stays 0) — this class only adds bookkeeping."""
+
+    def __init__(self, iterable=()):
+        super().__init__()
+        self._seq = 0
+        for e in iterable:
+            self.append(e)
+
+    def append(self, event: SessionEvent) -> None:
+        event = dataclasses.replace(event, seq=self._seq)
+        self._seq += 1
+        super().append(event)
+        if _obs.enabled():
+            _observe_event(event)
+
+
+def _observe_event(event: SessionEvent) -> None:
+    """Mirror one session event into the metrics registry. Runs only
+    when telemetry is enabled; observes values the event already
+    carries — it never touches the byte clock or the client."""
+    reg, tracer = _obs.get_registry(), _obs.get_tracer()
+    kind, d, t = event.kind, event.data, event.t_s
+    if kind == "chunk":
+        reg.counter("session_chunks_total", "transport chunks fed").inc()
+        reg.counter("session_bytes_total",
+                    "wire bytes delivered").inc(d["bytes"])
+    elif kind == "stage_complete":
+        reg.counter("session_stage_completions_total",
+                    "stage arrivals").inc(stage=d["stage"])
+        tracer.record("stage_arrival", sim_t0=0.0, sim_t1=t,
+                      stage=d["stage"])
+    elif kind == "result_ready":
+        tracer.record("stage_process", sim_t0=d["process_start_s"],
+                      sim_t1=t, stage=d["stage"])
+    elif kind == "upgrade":
+        reg.counter("session_upgrades_total",
+                    "precision upgrades applied").inc(stage=d["stage"])
+    elif kind == "decode_step":
+        reg.counter("session_decode_steps_total", "decode steps").inc()
+    elif kind == "fault":
+        reg.counter("transport_faults_total",
+                    "injected faults observed").inc(fault=d["fault"])
+    elif kind == "retry":
+        reg.counter("transport_retries_total", "delivery retries").inc()
+        reg.histogram("transport_backoff_s",
+                      "byte-clock backoff waits").observe(
+                          d["backoff_s"], cause="retry")
+    elif kind == "nack":
+        reg.counter("transport_nacks_total", "unit NACKs sent").inc()
+        reg.histogram("transport_backoff_s",
+                      "byte-clock backoff waits").observe(
+                          d["rerequest_backoff_s"], cause="nack")
+    elif kind == "reconnect":
+        reg.counter("transport_reconnects_total",
+                    "stream reconnects").inc(reason=d["reason"])
+        reg.histogram("transport_backoff_s",
+                      "byte-clock backoff waits").observe(
+                          d["backoff_s"], cause="reconnect")
+    elif kind == "quarantine":
+        reg.counter("transport_quarantined_total",
+                    "units quarantined").inc()
+    elif kind == "repair":
+        reg.counter("transport_repairs_total",
+                    "repair deliveries").inc(ok=d["ok"])
+    elif kind == "accept_round":
+        reg.counter("speculation_rounds_total",
+                    "speculative accept rounds").inc()
+    elif kind == "pool_window":
+        reg.histogram("pool_window_tokens",
+                      "tokens emitted per pool window").observe(
+                          d["tokens"])
 
 
 @dataclasses.dataclass
@@ -116,8 +198,8 @@ class SessionResult:
 
     def to_jsonl(self) -> str:
         return "\n".join(
-            json.dumps({"t_s": e.t_s, "kind": e.kind, **e.data},
-                       sort_keys=True)
+            json.dumps({"t_s": e.t_s, "kind": e.kind, "seq": e.seq,
+                        **e.data}, sort_keys=True)
             for e in self.events) + "\n"
 
     def events_of(self, kind: str) -> list[SessionEvent]:
@@ -248,7 +330,7 @@ class Session:
             raise ValueError(
                 f"{len(stage_costs)} costs for {self.n_stages} stages")
         client = ProgressiveClient()
-        events: list[SessionEvent] = []
+        events: list[SessionEvent] = _EventRecorder()
         download_done: list[float] = []
         result_ready: list[float] = []
         tt = 0.0          # trace-clock time of last delivered byte
@@ -288,7 +370,7 @@ class Session:
             raise AssertionError(
                 f"stream exhausted at stage {client.stages_complete} "
                 f"of {self.n_stages}")
-        events.sort(key=lambda e: e.t_s)
+        events.sort(key=lambda e: (e.t_s, e.seq))
         return SessionResult(
             events=events, client=client,
             timeline=Timeline(download_done=download_done,
@@ -402,7 +484,7 @@ class Session:
                                        receiver=receiver,
                                        resident=resident or "fp",
                                        mesh=mesh)
-        events: list[SessionEvent] = []
+        events: list[SessionEvent] = _EventRecorder()
         arrivals = self.stage_arrival_times()
         feed_until, runner = self._make_transport(client, events,
                                                   faults, fault_policy)
@@ -468,7 +550,7 @@ class Session:
             transport = runner.summary()
             events.append(SessionEvent(
                 runner.wall(), "transport_summary", transport))
-        events.sort(key=lambda e: e.t_s)
+        events.sort(key=lambda e: (e.t_s, e.seq))
         return SessionResult(
             events=events, client=client, server=server,
             tokens=res.tokens, upgrades=res.upgrades,
@@ -563,7 +645,7 @@ class Session:
                                     dispatch_window=dispatch_window,
                                     chunked_prefill=chunked_prefill,
                                     mesh=mesh)
-        events: list[SessionEvent] = []
+        events: list[SessionEvent] = _EventRecorder()
         arrivals = self.stage_arrival_times()
         feed_until, runner = self._make_transport(client, events,
                                                   faults, fault_policy)
@@ -710,7 +792,7 @@ class Session:
             transport = runner.summary()
             events.append(SessionEvent(
                 runner.wall(), "transport_summary", transport))
-        events.sort(key=lambda e: e.t_s)
+        events.sort(key=lambda e: (e.t_s, e.seq))
         return SessionResult(
             events=events, client=client, server=engine,
             tokens={rid: list(v) for rid, v in engine.outputs.items()},
@@ -895,7 +977,7 @@ class _FaultRunner:
             self.lat += self.session.latency_s  # new connection
             self.reconnects += 1
         self._log(self.wall(), "fault",
-                  {"kind": "timeout", "target": target,
+                  {"fault": "timeout", "target": target,
                    "waited_s": p.chunk_timeout_s})
         self._log(self.wall(), "retry",
                   {"target": target, "attempt": attempt,
@@ -957,12 +1039,15 @@ class _FaultRunner:
         if d.reorder and len(self.queue) > 1:
             self.queue[0], self.queue[1] = self.queue[1], self.queue[0]
             self._log(self.wall(), "fault",
-                      {"kind": "reorder", "chunk": [a, b]})
+                      {"fault": "reorder", "chunk": [a, b]})
             return
         self.clock = end
         if d.kind is not None and not d.reorder:
             detail = dict(d.detail or {})
-            detail.update({"kind": d.kind, "chunk": [a, b]})
+            # NB "fault", not "kind": the payload is flattened next to
+            # the envelope in to_jsonl, so a payload "kind" would
+            # silently overwrite the event kind in the exported log
+            detail.update({"fault": d.kind, "chunk": [a, b]})
             self._log(self.wall(), "fault", detail)
         self._feed(d.data, b, self.wall())
         self.queue.pop(0)
@@ -981,12 +1066,12 @@ class _FaultRunner:
             data = d.data
             if d.kind is not None:
                 self._log(self.lat + end, "fault",
-                          {"kind": d.kind, "target": f"unit:{seq}"})
+                          {"fault": d.kind, "target": f"unit:{seq}"})
         self.clock = end
         before = self.client.stages_complete
         ok = self.client.feed_repair(seq, data)
         t = self.wall()
-        self._log(t, "repair", {"seq": seq, "attempt": r["attempt"],
+        self._log(t, "repair", {"unit": seq, "attempt": r["attempt"],
                                 "ok": bool(ok)})
         for s in range(before + 1, self.client.stages_complete + 1):
             self._log(t, "stage_complete", {"stage": s, "repair": seq})
@@ -1019,21 +1104,24 @@ class _FaultRunner:
                      if s not in self.known_nacks]
         for seq, reason in new_nacks:
             self.known_nacks.add(seq)
-            self._log(t, "quarantine", {"seq": seq, "reason": reason})
+            # payload field is "unit" (not "seq"): to_jsonl flattens the
+            # payload next to the envelope, where "seq" is the event
+            # sequence number
+            self._log(t, "quarantine", {"unit": seq, "reason": reason})
         if client.verified_units > self._last_verified:
             self._last_verified = client.verified_units
             self.consec_stream_nacks = 0
             self.stream_attempt = 0
         self.consec_stream_nacks += len(new_nacks)
         if disconnected:
-            self._log(t, "fault", {"kind": "disconnect",
+            self._log(t, "fault", {"fault": "disconnect",
                                    "cursor": list(client.resume_cursor)})
             self._reconnect_from_cursor("disconnect", resync=False)
             return
         if (self.consec_stream_nacks >= self.DESYNC_AFTER
                 and not client.complete):
             self._log(t, "fault",
-                      {"kind": "desync",
+                      {"fault": "desync",
                        "consecutive_failures": self.consec_stream_nacks})
             self._reconnect_from_cursor("desync", resync=True)
             return
@@ -1042,7 +1130,7 @@ class _FaultRunner:
             self.repairs.append({
                 "seq": seq, "attempt": 0,
                 "ready_wall": t + back + self.session.latency_s})
-            self._log(t, "nack", {"seq": seq,
+            self._log(t, "nack", {"unit": seq,
                                   "rerequest_backoff_s": round(back, 6)})
 
     # -- end-of-stream reconciliation ---------------------------------------------
